@@ -1,0 +1,186 @@
+"""Performance hillclimbing (EXPERIMENTS.md section Perf).
+
+Three cells (chosen per the assignment: worst roofline fraction, most
+collective-bound, most representative of the paper's technique), each
+iterated hypothesis -> change -> re-lower -> validate.  Every variant is a
+full dry-run compile with probe-corrected costs; the deltas below are
+therefore structural (HLO), not wall-clock noise.
+
+  cell A  qwen3-14b        prefill_32k  (most collective-bound baseline)
+  cell B  deepseek-v2-236b train_4k     (worst memory / compute inflation)
+  cell C  qwen2.5-3b       train_4k     (paper technique: pruned execution)
+
+Usage:  python -m benchmarks.perf_iterations [cellA|cellB|cellC ...]
+Writes results/perf/<cell>__<variant>.json and prints the iteration log.
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import dataclasses
+import json
+import sys
+
+from jax.sharding import PartitionSpec as P
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "perf")
+
+
+def _run(arch, shape, variant, overrides=None, cfg_override=None, **kw):
+    from repro.launch.dryrun import run_cell
+    from repro.launch.roofline import analyze_record
+
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, f"{arch}__{shape}__{variant}.json")
+    if os.path.exists(path) and not kw.pop("force", False):
+        with open(path) as f:
+            rec = json.load(f)
+    else:
+        rec = run_cell(arch, shape, "single", overrides=overrides,
+                       cfg_override=cfg_override, **kw)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    a = analyze_record(rec) if rec.get("ok") else None
+    tag = (f"c={a['t_compute_s']:.3f}s m={a['t_memory_s']:.3f}s "
+           f"x={a['t_collective_s']:.3f}s dom={a['dominant']} "
+           f"frac={a['roofline_fraction']:.3f} live={a['live_gib']:.0f}GiB"
+           if a else f"FAILED: {rec.get('error')}")
+    print(f"  [{variant:24s}] {tag}", flush=True)
+    return rec, a
+
+
+def cell_a():
+    """qwen3-14b prefill_32k: drive the collective term down."""
+    print("=== cell A: qwen3-14b prefill_32k (collective-bound) ===")
+    arch, shape = "qwen3-14b", "prefill_32k"
+    print("H0 baseline: TP all-reduces of [B,32k,5120] activations dominate")
+    _run(arch, shape, "baseline")
+    print("H1: sequence-sharding the residual stream between blocks converts"
+          " each AR(2N) into RS(N)+AG(N) at the block boundary and keeps all"
+          " norms/elementwise S/16-sharded -> expect collective bytes ~0.5x,"
+          " memory bytes ~ lower too")
+    _run(arch, shape, "seqpar",
+         overrides={"residual_spec": P("data", "model", None)})
+    print("H2: on top of seqpar, raise the online-softmax KV chunk 1k->4k:"
+          " 4x fewer renormalization rounds (m/l/acc rescales + mask temps)"
+          " -> expect memory term down ~20-30%, compute ~flat")
+    _run(arch, shape, "seqpar_chunk4k",
+         overrides={"residual_spec": P("data", "model", None), "attn_chunk": 4096})
+    print()
+
+
+def cell_b():
+    """deepseek-v2-236b train_4k: memory + compute inflation."""
+    print("=== cell B: deepseek-v2-236b train_4k (worst memory) ===")
+    arch, shape = "deepseek-v2-236b", "train_4k"
+    print("H0 baseline(fsdp): involuntary full remat + expert all-gathers")
+    _run(arch, shape, "baseline")
+    print("H1: EP2D rules -- shard expert F-dim over data instead of D-dim:"
+          " contraction stays local for gate/up, w_down contributes a"
+          " reduce-scatter; no full expert-stack all-gather -> live GiB and"
+          " collective bytes drop hard")
+    from repro.models.sharding import FSDP_RULES
+    from jax.sharding import PartitionSpec as P2
+
+    EP2D = [
+        (r"\['embed'\].*table", P2("model", "data")),
+        (r"\['lm_head'\]\['w'\]", P2("data", "model")),
+        (r"\['experts'\]\['w_gate'\]", P2("model", None, "data")),
+        (r"\['experts'\]\['w_up'\]", P2("model", None, "data")),
+        (r"\['experts'\]\['w_down'\]", P2("model", "data", None)),
+        (r"\['router'\]", P2(None)),
+        (r"\['(w_q|w_k|w_v|w_uq|w_uk|w_uv)'\]\['w'\]", P2("data", "model")),
+        (r"\['(w_q|w_k|w_v|w_uq|w_uk|w_uv)'\]\['b'\]", P2("model")),
+        (r"\['w_o'\]\['w'\]", P2("model", "data")),
+        (r"\['(w_dq|w_dkv|w_kr)'\]\['w'\]", P2("data", None)),
+        (r"\['(w_gate|w_up|in_proj|gate_proj|w_r|w_i)'\]\['w'\]", P2("data", "model")),
+        (r"\['(w_down|out_proj)'\]\['w'\]", P2("model", "data")),
+    ]
+    _run(arch, shape, "ep2d", overrides={"rules": EP2D})
+    print("H1 outcome: REFUTED -- F-sharded experts are propagation-hostile"
+          " downstream of the dispatch einsum (memory term 5x worse)")
+    print("H2: ep2d + seqpar residual (activation memory at S=4k is the"
+          " second term)")
+    _run(arch, shape, "ep2d_seqpar",
+         overrides={"rules": EP2D, "residual_spec": P("data", "model", None)})
+    print("H3: FSDP weight rules (GSPMD-friendly) + seqpar -- best of both")
+    _run(arch, shape, "fsdp_seqpar",
+         overrides={"rules": "fsdp", "residual_spec": P("data", "model", None)})
+    print("H4: + dots-remat (save expert einsums; backward stops re-gathering"
+          " FSDP shards)")
+    _run(arch, shape, "fsdp_seqpar_dots",
+         overrides={"rules": "fsdp", "residual_spec": P("data", "model", None),
+                    "remat_policy": "dots"})
+    print("H4 outcome: REFUTED (<1% bound, +65GiB live); stopped after two"
+          " consecutive <5% changes per protocol")
+    print()
+
+
+def cell_c():
+    """qwen2.5-3b train_4k: the paper's technique, faithful then beyond."""
+    print("=== cell C: qwen2.5-3b train_4k (paper technique) ===")
+    arch, shape = "qwen2.5-3b", "train_4k"
+    from repro.configs import get_config
+    from repro.configs.base import PruneConfig
+
+    print("H0 dense baseline (paper's 'unpruned' row)")
+    _run(arch, shape, "baseline")
+    print("H1 paper-faithful: column-prune FFN + block-prune attn q/o @50%"
+          " (packed execution) -> FFN+attn GEMM FLOPs halve; expect the"
+          " compute term ~0.55x and memory term down (smaller weights)")
+    cfg_pruned = dataclasses.replace(
+        get_config(arch), prune=PruneConfig(enabled=True, exec_mode="bsr_xla", sparsity=0.5)
+    )
+    _run(arch, shape, "pruned50", cfg_override=cfg_pruned)
+    print("H2 beyond-paper: + remat policy 'dots' (save matmul/TP-collective"
+          " outputs; backward stops recomputing them) -> collective term"
+          " ~0.6x, compute term down, memory term up slightly (saved dots)")
+    _run(arch, shape, "pruned50_dotsremat", cfg_override=cfg_pruned,
+         overrides={"remat_policy": "dots"})
+    print("H3 beyond-paper: + sequence-parallel residual")
+    _run(arch, shape, "pruned50_dots_seqpar", cfg_override=cfg_pruned,
+         overrides={"remat_policy": "dots",
+                    "residual_spec": P("data", "model", None)})
+    print()
+
+
+def main():
+    which = sys.argv[1:] or ["cellA", "cellB", "cellC"]
+    if "cellA" in which:
+        cell_a()
+    if "cellB" in which:
+        cell_b()
+    if "cellC" in which:
+        cell_c()
+    if "cellC" in which or "controls" in which:
+        cell_c_controls()
+
+
+
+
+
+def cell_c_controls():
+    """Isolate the pruning contribution: the beyond-paper opts alone."""
+    print("=== cell C controls ===")
+    arch, shape = "qwen2.5-3b", "train_4k"
+    print("H4 control: dense + dots-remat + seqpar (no pruning) -- isolates"
+          " the paper technique's contribution inside the optimized stack")
+    _run(arch, shape, "dense_dots_seqpar",
+         overrides={"remat_policy": "dots",
+                    "residual_spec": P("data", "model", None)})
+    print("H5 control: pruned + FULL remat + seqpar (no dots policy)")
+    import dataclasses as _dc
+
+    from repro.configs import get_config
+    from repro.configs.base import PruneConfig
+
+    cfg_pruned = _dc.replace(
+        get_config(arch), prune=PruneConfig(enabled=True, exec_mode="bsr_xla", sparsity=0.5)
+    )
+    _run(arch, shape, "pruned50_seqpar", cfg_override=cfg_pruned,
+         overrides={"residual_spec": P("data", "model", None)})
+    print()
+
+
+if __name__ == "__main__":
+    main()

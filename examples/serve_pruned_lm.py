@@ -1,0 +1,71 @@
+"""End-to-end serving driver: batched requests against a pruned LM.
+
+Pipeline: init a small qwen-family model -> one-shot structured prune
+(column on FFN) -> masked weights -> serve batched generations + a
+continuous-batching queue.
+
+    PYTHONPATH=src python examples/serve_pruned_lm.py
+"""
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.pruning import Column, PrunePlan, project
+from repro.launch.train import default_prune_plan
+from repro.models import get_model
+from repro.serving.engine import Engine, Request, RequestScheduler
+
+
+def small_lm():
+    base = get_config("qwen2.5-3b")
+    return dataclasses.replace(
+        base, name="qwen2.5-serve-demo", n_layers=4, d_model=256, n_heads=4,
+        n_kv_heads=2, d_ff=512, vocab=4096, dtype="float32",
+    )
+
+
+cfg = small_lm()
+model = get_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+# one-shot structured prune of the FFN (the serving-FLOP hotspot)
+plan = default_prune_plan(0.5)
+assigned = plan.assign(params)
+n_pruned = 0
+import jax.tree_util as jtu
+
+flat, treedef = jtu.tree_flatten_with_path(params)
+out = []
+for path, w in flat:
+    st = assigned.get(jtu.keystr(path))
+    if st is not None:
+        w = project(w, st)[0].astype(w.dtype)
+        n_pruned += 1
+    out.append(w)
+params = jtu.tree_unflatten(treedef, out)
+print(f"pruned {n_pruned} weight matrices (column/block @ 50%)")
+
+engine = Engine(model, params, batch_size=4, max_len=96)
+rng = np.random.default_rng(0)
+prompts = jnp.asarray(rng.integers(0, cfg.vocab, (4, 16)), jnp.int32)
+t0 = time.time()
+res = engine.generate(prompts, 24)
+dt = time.time() - t0
+print(f"batched generate: {res.tokens.shape} in {dt:.2f}s ({4 * 24 / dt:.1f} tok/s)")
+
+sched = RequestScheduler(engine)
+for rid in range(10):
+    sched.submit(Request(rid=rid,
+                         prompt=rng.integers(0, cfg.vocab, int(rng.integers(4, 16))).astype(np.int32),
+                         max_new=int(rng.integers(4, 12))))
+t0 = time.time()
+sched.run()
+served = [r for r in sched.slots if r is not None]
+print(f"continuous batching: {sum(r.done for r in served)} finished in slots, "
+      f"queue drained={not sched.queue}, {time.time()-t0:.2f}s")
+print("OK")

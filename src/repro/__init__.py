@@ -1,0 +1,3 @@
+"""repro: production-scale JAX framework for ADMM structured pruning +
+compiler-optimized sparse execution (IJCAI-20, Niu & Zhao et al.)."""
+__version__ = "0.1.0"

@@ -1,0 +1,2 @@
+from .base import ArchConfig, MoEConfig, PruneConfig, RecurrentConfig, SHAPES, SSMConfig, ShapeConfig
+from .registry import ARCH_IDS, get_config, shape_cells, smoke_config

@@ -1,0 +1,2 @@
+"""The paper's contribution: ADMM structured pruning + compiler optimizations."""
+from . import graph, pruning, sparse  # noqa: F401

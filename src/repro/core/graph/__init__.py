@@ -1,0 +1,3 @@
+from .ir import Graph, GraphBuilder, Node
+from .lowering import lower
+from .passes import dce, fold_gathers, fold_norm, fuse_activation, optimize, substitute_sparse

@@ -1,0 +1,359 @@
+"""Graph transformation passes (paper section 3, "DSL related optimization"
+plus the sparse-execution planning that consumes pruning masks).
+
+Pass pipeline for deployment (see :func:`optimize`):
+
+1. ``fold_norm``         Conv/Linear + BatchNorm -> folded Conv/Linear
+2. ``fuse_activation``   Conv/Linear + Activation -> fused epilogue attr
+3. ``substitute_sparse`` pruned weights -> compact formats + sparse ops
+                         (ColumnCompact / ChannelCompact / PBCSR+reorder)
+4. ``fold_gathers``      compaction gathers folded into adjacent weights
+5. ``dce``               drop dead nodes
+
+All passes are pure: Graph in, Graph out.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..pruning.structures import Block, Channel, Column, PatternKernel, Structure
+from ..sparse.formats import ChannelCompact, ColumnCompact, PBCSR
+from ..sparse.packing import block_mask
+from ..sparse.reorder import apply_column_perm, plan_reorder
+from .ir import Graph, Node
+
+__all__ = [
+    "fold_norm",
+    "fuse_activation",
+    "substitute_sparse",
+    "fold_gathers",
+    "dce",
+    "optimize",
+]
+
+_FUSABLE = ("linear", "conv2d", "sparse_linear")
+
+
+# --------------------------------------------------------------------------- #
+# 1. norm folding                                                              #
+# --------------------------------------------------------------------------- #
+
+
+def fold_norm(g: Graph) -> Graph:
+    """Fold BatchNorm (inference stats) into the preceding conv/linear.
+
+    y = scale * (conv(x) - mean) / sqrt(var + eps) + bias
+      = conv'(x) + b'   with w' = w * s, b' = (b - mean) * s + bias,
+      s = scale / sqrt(var + eps).
+
+    Instance/Layer norm have data-dependent statistics and are left alone
+    (the paper folds BN only).
+    """
+    g = dataclasses.replace(g, nodes=list(g.nodes), params=dict(g.params))
+    for node in list(g.nodes):
+        if node.op != "norm" or node.attrs.get("kind") != "batch":
+            continue
+        (src_name,) = node.inputs
+        try:
+            src = g.node(src_name)
+        except KeyError:
+            continue
+        if src.op not in ("linear", "conv2d"):
+            continue
+        if len(g.consumers(src_name)) != 1:
+            continue  # conv output used elsewhere: cannot fold
+        p = g.params[node.name]
+        eps = node.attrs.get("eps", 1e-5)
+        s = p["scale"] / jnp.sqrt(p["var"] + eps)
+        sp = dict(g.params[src_name])
+        w = sp["w"]
+        if src.op == "conv2d":  # w [Co, Ci, kh, kw]; stats per Co
+            sp["w"] = w * s[:, None, None, None]
+        else:  # linear w [K, N]; stats per N
+            sp["w"] = w * s[None, :]
+        b = sp.get("b")
+        b = jnp.zeros(s.shape, w.dtype) if b is None else b
+        sp["b"] = (b - p["mean"]) * s + p["bias"]
+        g.params[src_name] = sp
+        g = g.without({node.name}).rewire(node.name, src_name)
+    g.validate()
+    return g
+
+
+# --------------------------------------------------------------------------- #
+# 2. activation fusion                                                         #
+# --------------------------------------------------------------------------- #
+
+
+def fuse_activation(g: Graph) -> Graph:
+    """Attach a following activation node to its GEMM producer as a fused
+    epilogue attr (executed inside the Pallas kernel)."""
+    for node in list(g.nodes):
+        if node.op != "activation":
+            continue
+        (src_name,) = node.inputs
+        try:
+            src = g.node(src_name)
+        except KeyError:
+            continue
+        if src.op not in _FUSABLE or src.attrs.get("activation"):
+            continue
+        if len(g.consumers(src_name)) != 1:
+            continue
+        new_src = src.replace(attrs={**src.attrs, "activation": node.attrs["fn"]})
+        g = g.replace_node(src_name, new_src)
+        g = g.without({node.name}).rewire(node.name, src_name)
+    g.validate()
+    return g
+
+
+# --------------------------------------------------------------------------- #
+# 3. sparse substitution                                                       #
+# --------------------------------------------------------------------------- #
+
+
+def substitute_sparse(
+    g: Graph,
+    masks: Dict[str, Any],
+    structures: Dict[str, Structure],
+    *,
+    max_bands: int = 4,
+) -> Graph:
+    """Rewrite pruned linear/conv nodes to their compact execution form.
+
+    ``masks``/``structures`` are keyed by node name.  Rules:
+
+    * Column  -> ``sparse_linear(format=colcompact)``: gather + smaller GEMM.
+    * Channel -> ``sparse_linear(format=channelcompact)`` + ``gather_channels``
+      glue node (folded into the next layer by :func:`fold_gathers`).
+    * Block   -> ``sparse_linear(format=pbcsr)`` with reorder bands; the
+      output block-column permutation is recorded as a ``gather_channels``
+      glue node (foldable).
+    * PatternKernel (conv) -> masked dense conv (TPU keeps the MXU dense;
+      storage shrinks, compute does not -- DESIGN.md section 2); whole-kernel
+      connectivity pruning *is* exploited: fully-dead input channels are
+      compacted like Channel pruning of the previous layer.
+    """
+    for stale in list(g.nodes):
+        if stale.name not in masks or masks[stale.name] is None:
+            continue
+        # re-fetch: earlier iterations may have rewired this node's inputs
+        node = g.node(stale.name)
+        st = structures[node.name]
+        mask = masks[node.name]
+        p = g.params[node.name]
+        if node.op == "linear":
+            w = p["w"] * mask.astype(p["w"].dtype)
+            if isinstance(st, Column):
+                fmt = ColumnCompact.from_dense(w, mask)
+                g.params[node.name] = {
+                    "values": fmt.values,
+                    "kept": fmt.kept,
+                    **({"b": p["b"]} if "b" in p else {}),
+                }
+                g = g.replace_node(
+                    node.name,
+                    node.replace(
+                        op="sparse_linear",
+                        attrs={**node.attrs, "format": "colcompact", "k_full": w.shape[0]},
+                    ),
+                )
+            elif isinstance(st, Channel):
+                fmt = ChannelCompact.from_dense(w, mask)
+                bias = p.get("b")
+                g.params[node.name] = {
+                    "values": fmt.values,
+                    **(
+                        {"b": bias[np.asarray(fmt.kept)]} if bias is not None else {}
+                    ),
+                }
+                # glue: scatter back to full width unless folded away
+                glue = Node(
+                    op="gather_channels",
+                    name=node.name + "_scatter",
+                    inputs=(node.name,),
+                    attrs={"mode": "scatter", "idx": np.asarray(fmt.kept), "n": w.shape[1]},
+                )
+                g = g.replace_node(
+                    node.name,
+                    node.replace(
+                        op="sparse_linear",
+                        attrs={**node.attrs, "format": "channelcompact"},
+                    ),
+                )
+                g = _insert_after(g, node.name, glue)
+            elif isinstance(st, Block):
+                bmask = np.asarray(block_mask(mask, st.bm, st.bn))
+                plan = plan_reorder(bmask, max_bands=max_bands, bm=st.bm, bn=st.bn)
+                w_perm = apply_column_perm(w, plan.order, st.bn)
+                m_perm = apply_column_perm(mask, plan.order, st.bn)
+                fmt = PBCSR.from_dense(w_perm, m_perm, st.bm, st.bn)
+                bias = p.get("b")
+                elem_order = (
+                    np.asarray(plan.order)[:, None] * st.bn + np.arange(st.bn)[None, :]
+                ).reshape(-1)
+                g.params[node.name] = {
+                    "values": fmt.values,
+                    "block_rows": fmt.block_rows,
+                    **({"b": bias[elem_order]} if bias is not None else {}),
+                }
+                g = g.replace_node(
+                    node.name,
+                    node.replace(
+                        op="sparse_linear",
+                        attrs={
+                            **node.attrs,
+                            "format": "pbcsr",
+                            "bands": tuple((b.start, b.stop, b.count) for b in plan.bands),
+                            "bn": st.bn,
+                        },
+                    ),
+                )
+                if not plan.identity:
+                    # undo the column permutation for consumers (foldable)
+                    inv = np.empty_like(elem_order)
+                    inv[elem_order] = np.arange(len(elem_order))
+                    glue = Node(
+                        op="gather_channels",
+                        name=node.name + "_unperm",
+                        inputs=(node.name,),
+                        attrs={"mode": "gather", "idx": inv, "n": w.shape[1]},
+                    )
+                    g = _insert_after(g, node.name, glue)
+            else:  # masked dense fallback (NM, bank, unstructured)
+                g.params[node.name] = {**p, "w": w}
+        elif node.op == "conv2d":
+            # any conv structure (pattern / column-as-channel): apply the mask,
+            # then *compact away* input channels that died across all filters
+            # (pattern-connectivity or column pruning at channel granularity --
+            # the only conv sparsity the MXU can exploit, DESIGN.md section 2)
+            w = p["w"] * mask.astype(p["w"].dtype)
+            g.params[node.name] = {**p, "w": w}
+            dead_in = np.asarray(jnp.all(mask == 0, axis=(0, 2, 3)))
+            if dead_in.any() and not dead_in.all():
+                kept = np.nonzero(~dead_in)[0]
+                g.params[node.name] = {
+                    **g.params[node.name],
+                    "w": g.params[node.name]["w"][:, kept],
+                }
+                glue = Node(
+                    op="gather_channels",
+                    name=node.name + "_ingather",
+                    inputs=node.inputs,
+                    attrs={"mode": "gather", "idx": kept, "n": int(mask.shape[1]), "axis": 1},
+                )
+                g = _insert_before(g, node.name, glue)
+        else:
+            w = p["w"] * mask.astype(p["w"].dtype)
+            g.params[node.name] = {**p, "w": w}
+    g.validate()
+    return g
+
+
+def _insert_after(g: Graph, name: str, glue: Node) -> Graph:
+    """Insert ``glue`` (consuming ``name``) between node and its consumers."""
+    g = g.rewire(name, glue.name)
+    # rewire also rewrote glue's own input; restore it
+    nodes = []
+    for n in g.nodes:
+        if n.name == glue.name:
+            continue
+        nodes.append(n)
+        if n.name == name:
+            nodes.append(glue.replace(inputs=(name,)))
+    if glue.name not in [n.name for n in nodes]:  # name was a graph input
+        nodes.insert(0, glue.replace(inputs=(name,)))
+    return dataclasses.replace(g, nodes=nodes)
+
+
+def _insert_before(g: Graph, name: str, glue: Node) -> Graph:
+    nodes = []
+    for n in g.nodes:
+        if n.name == name:
+            nodes.append(glue)
+            n = n.replace(inputs=(glue.name,) + n.inputs[1:])
+        nodes.append(n)
+    return dataclasses.replace(g, nodes=nodes)
+
+
+# --------------------------------------------------------------------------- #
+# 4. gather folding                                                            #
+# --------------------------------------------------------------------------- #
+
+
+def fold_gathers(g: Graph) -> Graph:
+    """Fold ``gather_channels`` glue into the next linear's weight rows:
+    gather(y, idx) @ W == y @ W_expanded  (scatter mode: rows placed at idx;
+    gather mode: rows selected by idx).  Zero runtime cost -- the paper's
+    offline reorder trick."""
+    for node in list(g.nodes):
+        if node.op != "gather_channels" or node.attrs.get("axis", -1) == 1:
+            continue
+        consumers = g.consumers(node.name)
+        if len(consumers) != 1 or consumers[0].op != "linear":
+            continue
+        nxt = consumers[0]
+        idx = jnp.asarray(np.asarray(node.attrs["idx"]))
+        w = g.params[nxt.name]["w"]
+        if node.attrs["mode"] == "scatter":
+            # y_full = scatter(y_compact, idx); y_full @ W == y_compact @ W[idx]
+            w_new = w[idx]
+        else:
+            # y_perm = y[idx] (idx a permutation of 0..n-1, len == K of next W);
+            # y_perm @ W == y @ W_scat with W_scat[idx[j]] = W[j].
+            if int(idx.shape[0]) != int(w.shape[0]):
+                continue
+            w_new = jnp.zeros((node.attrs["n"], w.shape[1]), w.dtype).at[idx].set(w)
+        g.params[nxt.name] = {**g.params[nxt.name], "w": w_new}
+        g = g.without({node.name}).rewire(node.name, node.inputs[0])
+    g.validate()
+    return g
+
+
+# --------------------------------------------------------------------------- #
+# 5. dead code elimination                                                     #
+# --------------------------------------------------------------------------- #
+
+
+def dce(g: Graph) -> Graph:
+    live = set(g.outputs)
+    changed = True
+    by_name = {n.name: n for n in g.nodes}
+    while changed:
+        changed = False
+        for name in list(live):
+            n = by_name.get(name)
+            if n is None:
+                continue
+            for i in n.inputs:
+                if i not in live:
+                    live.add(i)
+                    changed = True
+    dead = {n.name for n in g.nodes if n.name not in live}
+    return g.without(dead)
+
+
+# --------------------------------------------------------------------------- #
+# pipeline                                                                     #
+# --------------------------------------------------------------------------- #
+
+
+def optimize(
+    g: Graph,
+    masks: Optional[Dict[str, Any]] = None,
+    structures: Optional[Dict[str, Structure]] = None,
+    *,
+    max_bands: int = 4,
+) -> Graph:
+    """The full deployment pipeline (paper's compiler, end to end)."""
+    g = fold_norm(g)
+    g = fuse_activation(g)
+    if masks:
+        g = substitute_sparse(g, masks, structures or {}, max_bands=max_bands)
+        g = fold_gathers(g)
+    return dce(g)

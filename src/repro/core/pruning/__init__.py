@@ -1,0 +1,38 @@
+from .structures import (
+    BankBalanced,
+    Block,
+    CANONICAL_PATTERNS,
+    Channel,
+    NM,
+    PatternKernel,
+    Row,
+    Structure,
+    Unstructured,
+    Column,
+    structure_from_spec,
+)
+from .projections import mask_for, project, topk_mask
+from .masks import (
+    apply_masks,
+    combine_masks,
+    count_params,
+    mask_gradients,
+    sparsity,
+    tree_sparsity_report,
+)
+from .admm import (
+    AdmmConfig,
+    AdmmState,
+    PrunePlan,
+    admm_init,
+    admm_penalty,
+    admm_update,
+    convergence_metrics,
+    hard_prune,
+)
+from .schedule import (
+    SensitivityResult,
+    assign_sparsities,
+    polynomial_schedule,
+    sensitivity_scan,
+)

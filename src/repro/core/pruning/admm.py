@@ -1,0 +1,258 @@
+"""ADMM structured pruning (the paper's uniform pruning framework, section 2).
+
+Solves  ``min_W f(W)  s.t.  W_i in S_i``  by ADMM (Boyd et al. 2011; Zhang et
+al. 2018 applied it to DNN pruning).  With ``g`` the indicator of ``S`` and the
+constraint ``W = Z``::
+
+    W-step:  W <- argmin_W f(W) + rho/2 * ||W - Z + U||^2     (SGD, T steps)
+    Z-step:  Z <- Pi_S(W + U)                                  (projection)
+    U-step:  U <- U + W - Z                                    (dual ascent)
+
+The W-step is folded into normal training: :func:`admm_penalty` returns the
+quadratic augment to add to the task loss; :func:`admm_update` performs the
+Z/U steps (run every ``update_every`` optimizer steps); :func:`hard_prune`
+projects the final weights and returns masks for masked fine-tuning.
+
+Everything is functional: the ADMM state is a pytree and shards exactly like
+the parameters (Z and U inherit each weight's sharding), so the procedure runs
+unchanged under pjit on a production mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import re
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .projections import project
+from .structures import Structure, structure_from_spec
+
+__all__ = [
+    "PrunePlan",
+    "AdmmConfig",
+    "AdmmState",
+    "admm_init",
+    "admm_penalty",
+    "admm_update",
+    "hard_prune",
+    "convergence_metrics",
+]
+
+Array = jax.Array
+PyTree = Any
+
+
+# --------------------------------------------------------------------------- #
+# plan: which leaves get which structure                                       #
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class PrunePlan:
+    """Maps parameter paths (glob patterns over ``jax.tree_util.keystr``) to
+    structures.  First matching rule wins; unmatched leaves stay dense.
+
+    Example::
+
+        plan = PrunePlan.from_rules([
+            ("*ffn*w_in*",  {"kind": "column", "sparsity": 0.6}),
+            ("*attn*",      {"kind": "block", "sparsity": 0.5, "bm": 128, "bn": 128}),
+        ])
+    """
+
+    rules: Tuple[Tuple[str, Structure], ...]
+    #: leaves with fewer elements than this are never pruned (norms, biases)
+    min_size: int = 4096
+
+    @classmethod
+    def from_rules(
+        cls, rules: List[Tuple[str, Any]], min_size: int = 4096
+    ) -> "PrunePlan":
+        out = []
+        for pat, spec in rules:
+            st = spec if isinstance(spec, Structure) else structure_from_spec(spec)
+            out.append((pat, st))
+        return cls(tuple(out), min_size)
+
+    @staticmethod
+    def _glob_match(path: str, pat: str) -> bool:
+        """Glob where ONLY ``*`` is special -- fnmatch would treat the
+        ``['w']`` brackets of pytree key paths as character classes."""
+        rx = ".*".join(re.escape(part) for part in pat.split("*"))
+        return re.search(f"^{rx}$", path) is not None
+
+    def structure_for(self, path: str, shape: Tuple[int, ...]) -> Optional[Structure]:
+        size = 1
+        for d in shape:
+            size *= d
+        if size < self.min_size:
+            return None
+        for pat, st in self.rules:
+            if self._glob_match(path, pat):
+                try:
+                    st.validate(shape)
+                except ValueError:
+                    return None  # structure does not fit this leaf; skip
+                return st
+        return None
+
+    def assign(self, params: PyTree) -> Dict[str, Structure]:
+        """Resolved {path: structure} over a params tree (diagnostics/tests)."""
+        flat = jax.tree_util.tree_flatten_with_path(params)[0]
+        out = {}
+        for path, w in flat:
+            name = jax.tree_util.keystr(path)
+            st = self.structure_for(name, tuple(w.shape))
+            if st is not None:
+                out[name] = st
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmmConfig:
+    rho: float = 1e-3
+    #: multiply rho by this factor at every Z/U update (classic rho ramp)
+    rho_ramp: float = 1.0
+    rho_max: float = 1e-1
+    #: run the Z/U update every this many optimizer steps
+    update_every: int = 100
+
+
+# --------------------------------------------------------------------------- #
+# state                                                                        #
+# --------------------------------------------------------------------------- #
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdmmState:
+    """Pytree ADMM state.  ``z``/``u`` mirror params with None on dense leaves.
+
+    ``structures`` is static metadata (not traced): {path: Structure}.
+    """
+
+    z: PyTree
+    u: PyTree
+    rho: Array  # scalar f32
+    n_updates: Array  # scalar i32
+    structures: Dict[str, Structure] = dataclasses.field(
+        metadata=dict(static=True), default_factory=dict
+    )
+
+
+def _is_none(x) -> bool:
+    return x is None
+
+
+def _map_pruned(fn: Callable, params: PyTree, *trees: PyTree) -> PyTree:
+    """tree.map over (path-aware) leaves; fn(path, w, *rest) on every leaf."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    rests = [jax.tree.leaves(t, is_leaf=_is_none) for t in trees]
+    out = []
+    for i, (path, w) in enumerate(flat):
+        name = jax.tree_util.keystr(path)
+        out.append(fn(name, w, *(r[i] for r in rests)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def admm_init(params: PyTree, plan: PrunePlan, config: AdmmConfig) -> AdmmState:
+    """Z starts at the projection of W, U at zero (standard initialization)."""
+    structures = plan.assign(params)
+
+    def init_z(name, w):
+        st = structures.get(name)
+        if st is None:
+            return None
+        return project(w.astype(jnp.float32), st)[0]
+
+    def init_u(name, w):
+        return None if structures.get(name) is None else jnp.zeros(w.shape, jnp.float32)
+
+    z = _map_pruned(init_z, params)
+    u = _map_pruned(init_u, params)
+    return AdmmState(
+        z=z,
+        u=u,
+        rho=jnp.asarray(config.rho, jnp.float32),
+        n_updates=jnp.asarray(0, jnp.int32),
+        structures=structures,
+    )
+
+
+def admm_penalty(params: PyTree, state: AdmmState) -> Array:
+    """``rho/2 * sum_i ||W_i - Z_i + U_i||_F^2`` -- add to the task loss."""
+
+    def term(name, w, z, u):
+        if z is None:
+            return jnp.zeros((), jnp.float32)
+        d = w.astype(jnp.float32) - z + u
+        return 0.5 * jnp.sum(d * d)
+
+    terms = _map_pruned(term, params, state.z, state.u)
+    return state.rho * sum(jax.tree.leaves(terms))
+
+
+def admm_update(params: PyTree, state: AdmmState, config: AdmmConfig) -> AdmmState:
+    """Z-step (projection) + U-step (dual ascent) + rho ramp."""
+
+    def new_z(name, w, u):
+        if u is None:
+            return None
+        return project(w.astype(jnp.float32) + u, state.structures[name])[0]
+
+    z = _map_pruned(new_z, params, state.u)
+
+    def new_u(name, w, zi, u):
+        if u is None:
+            return None
+        return u + w.astype(jnp.float32) - zi
+
+    u = _map_pruned(new_u, params, z, state.u)
+    rho = jnp.minimum(state.rho * config.rho_ramp, config.rho_max)
+    return AdmmState(
+        z=z, u=u, rho=rho, n_updates=state.n_updates + 1, structures=state.structures
+    )
+
+
+def hard_prune(params: PyTree, state: AdmmState) -> Tuple[PyTree, PyTree]:
+    """Final projection: returns (pruned_params, mask_tree) for masked retrain."""
+
+    def prune(name, w):
+        st = state.structures.get(name)
+        if st is None:
+            return w, None
+        wp, m = project(w, st)
+        return wp.astype(w.dtype), m.astype(jnp.float32)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    ws, ms = [], []
+    for path, w in flat:
+        wp, m = prune(jax.tree_util.keystr(path), w)
+        ws.append(wp)
+        ms.append(m)
+    return (
+        jax.tree_util.tree_unflatten(treedef, ws),
+        jax.tree_util.tree_unflatten(treedef, ms),
+    )
+
+
+def convergence_metrics(params: PyTree, state: AdmmState) -> Dict[str, Array]:
+    """Primal residual ``||W - Z|| / ||W||`` (global); drives stop criteria."""
+
+    def sq(name, w, z):
+        if z is None:
+            return jnp.zeros(()), jnp.zeros(())
+        wf = w.astype(jnp.float32)
+        return jnp.sum((wf - z) ** 2), jnp.sum(wf * wf)
+
+    pairs = jax.tree.leaves(
+        _map_pruned(sq, params, state.z), is_leaf=lambda x: isinstance(x, tuple)
+    )
+    num = sum(p[0] for p in pairs)
+    den = sum(p[1] for p in pairs)
+    res = jnp.sqrt(num) / jnp.maximum(jnp.sqrt(den), 1e-12)
+    return {"primal_residual": res, "rho": state.rho}

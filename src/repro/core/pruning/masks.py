@@ -1,0 +1,92 @@
+"""Mask algebra + sparsity accounting over pytrees of weights.
+
+A *mask tree* mirrors a params pytree, with a 0/1 array for every pruned leaf
+and ``None`` for untouched leaves.  All functions are pure; masked training is
+"multiply weights by mask inside the step" (gradients flow only to survivors
+because the mask is constant).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "apply_masks",
+    "mask_gradients",
+    "sparsity",
+    "tree_sparsity_report",
+    "combine_masks",
+    "count_params",
+]
+
+Array = jax.Array
+PyTree = Any
+
+
+def _is_leaf_none(x) -> bool:
+    return x is None
+
+
+def apply_masks(params: PyTree, masks: PyTree) -> PyTree:
+    """Elementwise ``w * m`` wherever the mask tree has a mask, identity else."""
+    return jax.tree.map(
+        lambda w, m: w if m is None else w * m.astype(w.dtype),
+        params,
+        masks,
+        is_leaf=_is_leaf_none,
+    )
+
+
+def mask_gradients(grads: PyTree, masks: PyTree) -> PyTree:
+    """Zero gradients of pruned weights (masked-retraining step rule)."""
+    return apply_masks(grads, masks)
+
+
+def sparsity(mask: Array) -> float:
+    """Fraction of zeros in a single mask."""
+    return float(1.0 - jnp.mean(mask.astype(jnp.float32)))
+
+
+def count_params(params: PyTree) -> int:
+    return int(sum(x.size for x in jax.tree.leaves(params)))
+
+
+def combine_masks(a: Optional[Array], b: Optional[Array]) -> Optional[Array]:
+    """Intersection of two masks (None = all-ones)."""
+    if a is None:
+        return b
+    if b is None:
+        return a
+    return a * b
+
+
+def tree_sparsity_report(params: PyTree, masks: PyTree) -> Dict[str, Any]:
+    """Per-leaf and global sparsity accounting.
+
+    Returns ``{"per_leaf": {path: (n_total, n_zero)}, "global": frac,
+    "pruned_global": frac_over_masked_leaves}``.
+    """
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_m = jax.tree.leaves(masks, is_leaf=_is_leaf_none)
+    per_leaf: Dict[str, Tuple[int, int]] = {}
+    tot = zero = masked_tot = masked_zero = 0
+    for (path, w), m in zip(flat_p, flat_m):
+        name = jax.tree_util.keystr(path)
+        n = int(w.size)
+        z = 0 if m is None else int(n - jnp.sum(m != 0))
+        per_leaf[name] = (n, z)
+        tot += n
+        zero += z
+        if m is not None:
+            masked_tot += n
+            masked_zero += z
+    return {
+        "per_leaf": per_leaf,
+        "global": zero / max(tot, 1),
+        "pruned_global": masked_zero / max(masked_tot, 1),
+        "n_params": tot,
+        "n_zero": zero,
+    }

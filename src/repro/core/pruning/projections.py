@@ -1,0 +1,186 @@
+"""Euclidean projections onto the structured-sparsity sets of structures.py.
+
+The ADMM Z-step is ``Z = Pi_S(W + U)`` -- the closest point (Frobenius norm) in
+the structure set.  For every magnitude-type structure this is "keep the
+largest-magnitude prune-units, zero the rest", with the unit's magnitude pooled
+as the group L2 norm.  All projections are pure jnp, jit- and grad-safe
+(straight-through where used inside training), and return ``(projected, mask)``
+with ``mask`` broadcastable to the weight shape.
+
+Shapes follow structures.py: 2-D ``W[K, N]`` for matrix structures, 4-D
+``W[C_out, C_in, kh, kw]`` for PatternKernel.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .structures import (
+    NM,
+    BankBalanced,
+    Block,
+    Channel,
+    Column,
+    PatternKernel,
+    Row,
+    Structure,
+    Unstructured,
+)
+
+__all__ = ["project", "mask_for", "topk_mask"]
+
+Array = jax.Array
+
+
+def topk_mask(scores: Array, k: int, axis: int = -1) -> Array:
+    """0/1 mask keeping the top-``k`` entries of ``scores`` along ``axis``.
+
+    Deterministic tie-break (by index) via jax.lax.top_k on a stable ordering.
+    """
+    if k <= 0:
+        return jnp.zeros_like(scores)
+    n = scores.shape[axis]
+    if k >= n:
+        return jnp.ones_like(scores)
+    moved = jnp.moveaxis(scores, axis, -1)
+    # threshold = k-th largest value along the axis
+    kth = jax.lax.top_k(moved, k)[0][..., -1:]
+    keep = moved >= kth
+    # Resolve ties so exactly k survive: rank by (value, -index).
+    # cumsum over a >=-threshold mask in descending index order keeps the
+    # first k hits in top_k's own ordering.
+    order = jnp.argsort(jnp.argsort(-moved, axis=-1, stable=True), axis=-1, stable=True)
+    keep = keep & (order < k)
+    return jnp.moveaxis(keep.astype(scores.dtype), -1, axis)
+
+
+# --------------------------------------------------------------------------- #
+# per-structure projections                                                    #
+# --------------------------------------------------------------------------- #
+
+
+def _project_unstructured(w: Array, s: Unstructured) -> Tuple[Array, Array]:
+    k = s.n_kept(w.size)
+    mask = topk_mask(jnp.abs(w).reshape(-1), k).reshape(w.shape)
+    return w * mask, mask
+
+
+def _project_row(w: Array, s: Row) -> Tuple[Array, Array]:
+    norms = jnp.linalg.norm(w, axis=1)  # [K]
+    mask = topk_mask(norms, s.n_kept(w.shape[0]))[:, None]
+    return w * mask, jnp.broadcast_to(mask, w.shape)
+
+
+def _project_column(w: Array, s: Column) -> Tuple[Array, Array]:
+    # paper's column pruning: prune along the input-feature axis (axis 0 of
+    # W[K, N]) -- the same position removed from every output filter.
+    norms = jnp.linalg.norm(w, axis=1)  # [K]
+    mask = topk_mask(norms, s.n_kept(w.shape[0]))[:, None]
+    return w * mask, jnp.broadcast_to(mask, w.shape)
+
+
+def _project_channel(w: Array, s: Channel) -> Tuple[Array, Array]:
+    norms = jnp.linalg.norm(w, axis=0)  # [N]
+    mask = topk_mask(norms, s.n_kept(w.shape[1]))[None, :]
+    return w * mask, jnp.broadcast_to(mask, w.shape)
+
+
+def _project_block(w: Array, s: Block) -> Tuple[Array, Array]:
+    kb, nb = s.grid(w.shape)
+    blocks = w.reshape(kb, s.bm, nb, s.bn)
+    norms = jnp.sqrt(jnp.sum(blocks.astype(jnp.float32) ** 2, axis=(1, 3)))  # [kb, nb]
+    if s.balanced:
+        # same number of kept blocks in every block-COLUMN (output feature
+        # group): with output-stationary execution every output tile of the
+        # BSR kernel then does identical work -- the load-balance contract the
+        # paper's matrix reorder establishes for its thread grid
+        # (DESIGN.md section 2).
+        keep_per_col = s.n_kept(kb)
+        bmask = topk_mask(norms, keep_per_col, axis=0)
+    else:
+        keep = s.n_kept(kb * nb)
+        bmask = topk_mask(norms.reshape(-1), keep).reshape(kb, nb)
+    mask = jnp.broadcast_to(bmask[:, None, :, None], blocks.shape).reshape(w.shape)
+    mask = mask.astype(w.dtype)
+    return w * mask, mask
+
+
+def _project_nm(w: Array, s: NM) -> Tuple[Array, Array]:
+    k, n = w.shape
+    groups = w.reshape(k // s.m, s.m, n)
+    mask = topk_mask(jnp.abs(groups), s.n_keep, axis=1)
+    mask = mask.reshape(w.shape)
+    return w * mask, mask
+
+
+def _project_bank(w: Array, s: BankBalanced) -> Tuple[Array, Array]:
+    k, n = w.shape
+    banks = w.reshape(k, n // s.bank, s.bank)
+    keep = s.n_kept(s.bank)
+    mask = topk_mask(jnp.abs(banks), keep, axis=2).reshape(w.shape)
+    return w * mask, mask
+
+
+def _pattern_library(s: PatternKernel) -> np.ndarray:
+    """[P, kh*kw] 0/1 library matrix (static, numpy)."""
+    ksz = s.kernel_size * s.kernel_size
+    lib = np.zeros((len(s.patterns), ksz), np.float32)
+    for i, pat in enumerate(s.patterns):
+        lib[i, list(pat)] = 1.0
+    return lib
+
+
+def _project_pattern(w: Array, s: PatternKernel) -> Tuple[Array, Array]:
+    """Pattern + connectivity projection for conv weights [C_out, C_in, kh, kw].
+
+    Per kernel: pick the library pattern retaining the most energy, zero the
+    rest of the kernel.  Then cut the ``connectivity`` fraction of kernels with
+    the smallest retained energy (whole-kernel removal).
+    """
+    co, ci, kh, kw = w.shape
+    lib = jnp.asarray(_pattern_library(s))  # [P, ksz]
+    flat = w.reshape(co, ci, kh * kw)
+    energy = flat.astype(jnp.float32) ** 2  # [co, ci, ksz]
+    # retained energy under each pattern: [co, ci, P]
+    retained = jnp.einsum("oik,pk->oip", energy, lib)
+    best = jnp.argmax(retained, axis=-1)  # [co, ci]
+    kmask = lib[best]  # [co, ci, ksz]
+    if s.connectivity > 0.0:
+        kept_energy = jnp.max(retained, axis=-1)  # [co, ci]
+        n_keep = max(1, int(round(ci * co * (1.0 - s.connectivity))))
+        conn = topk_mask(kept_energy.reshape(-1), n_keep).reshape(co, ci)
+        kmask = kmask * conn[..., None]
+    mask = kmask.reshape(w.shape).astype(w.dtype)
+    return w * mask, mask
+
+
+_DISPATCH = {
+    Unstructured: _project_unstructured,
+    Row: _project_row,
+    Column: _project_column,
+    Channel: _project_channel,
+    Block: _project_block,
+    NM: _project_nm,
+    BankBalanced: _project_bank,
+    PatternKernel: _project_pattern,
+}
+
+
+def project(w: Array, structure: Structure) -> Tuple[Array, Array]:
+    """Euclidean projection of ``w`` onto ``structure``; returns (w_proj, mask)."""
+    structure.validate(tuple(w.shape))
+    try:
+        fn = _DISPATCH[type(structure)]
+    except KeyError:
+        raise NotImplementedError(f"no projection for {type(structure).__name__}")
+    return fn(w, structure)
+
+
+def mask_for(w: Array, structure: Structure) -> Array:
+    """Just the 0/1 mask of the projection (same dtype as ``w``)."""
+    return project(w, structure)[1]

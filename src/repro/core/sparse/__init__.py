@@ -1,0 +1,17 @@
+from .formats import CSR, ChannelCompact, ColumnCompact, PBCSR, dense_nbytes
+from .packing import (
+    block_mask,
+    extract_blocks,
+    pack_balanced,
+    pad_to_multiple,
+    unpack_balanced,
+)
+from .reorder import (
+    Band,
+    ReorderPlan,
+    apply_column_perm,
+    balance_stats,
+    fold_perm_into_next,
+    invert_column_perm,
+    plan_reorder,
+)

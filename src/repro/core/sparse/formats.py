@@ -1,0 +1,251 @@
+"""Compact sparse weight storage (paper section 3, "Sparse model storage").
+
+The paper's point: structured pruning leaves *regularity* that generic CSR
+throws away -- storing one index per surviving weight is redundant when whole
+columns/kernels/blocks survive together.  The formats here keep exactly one
+index per surviving *structure*:
+
+``PBCSR``
+    Packed Block Compressed Sparse (column-major) storage for block pruning.
+    One int32 per surviving 128x128 block (~0.00006 index/weight vs CSR's 1).
+    Stored output-column-major so the Pallas BSR kernel streams it with an
+    output-stationary grid; the per-column counts are equalized by the
+    balanced projection or by the reorder pass (bands).
+
+``ColumnCompact``
+    For column pruning along K: the kept rows of ``W[K, N]`` are physically
+    compacted to a dense ``[K_kept, N]`` plus one int32 per kept row.  Runtime
+    = static input gather + strictly smaller dense GEMM.
+
+``ChannelCompact``
+    For channel pruning along N: dense ``[K, N_kept]`` + kept-column indices;
+    the graph pass folds the index map into the *next* layer, so runtime cost
+    is zero.
+
+``CSR``
+    The textbook baseline the paper compares against (storage only).
+
+All formats support exact ``to_dense`` round-trip, and report ``nbytes`` for
+the storage-ratio benchmark (EXPERIMENTS.md section Table1/Kernels).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PBCSR", "ColumnCompact", "ChannelCompact", "CSR", "dense_nbytes"]
+
+Array = jax.Array
+
+
+def dense_nbytes(shape: Tuple[int, ...], dtype=jnp.bfloat16) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n * jnp.dtype(dtype).itemsize
+
+
+def _block_mask(mask: Array, bm: int, bn: int) -> Array:
+    """[K, N] elementwise mask -> [Kb, Nb] bool block-kept map."""
+    k, n = mask.shape
+    blocks = mask.reshape(k // bm, bm, n // bn, bn)
+    return jnp.any(blocks != 0, axis=(1, 3))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PBCSR:
+    """Packed block storage, output-column-major, padded to uniform count.
+
+    ``values[j, s]`` is the s-th surviving (bm, bn) block of output
+    block-column j; ``block_rows[j, s]`` its block-row index in the dense
+    weight (-1 marks padding; padded values are zero so accumulating them is
+    exact, merely wasted work -- the reorder pass exists to minimize it).
+    """
+
+    values: Array  # [Nb, S, bm, bn]
+    block_rows: Array  # [Nb, S] int32, -1 = pad
+    shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+    bm: int = dataclasses.field(metadata=dict(static=True), default=128)
+    bn: int = dataclasses.field(metadata=dict(static=True), default=128)
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def from_dense(
+        cls, w: Array, mask: Array, bm: int = 128, bn: int = 128
+    ) -> "PBCSR":
+        k, n = w.shape
+        if k % bm or n % bn:
+            raise ValueError(f"blocks ({bm},{bn}) do not tile {w.shape}")
+        w = jnp.asarray(w) * jnp.asarray(mask, w.dtype)
+        kb, nb = k // bm, n // bn
+        bmask = np.asarray(_block_mask(jnp.asarray(mask), bm, bn))  # [Kb, Nb]
+        counts = bmask.sum(axis=0)  # per output block-column
+        s_max = max(int(counts.max(initial=0)), 1)
+        blocks = np.asarray(w).reshape(kb, bm, nb, bn).transpose(2, 0, 1, 3)
+        # blocks: [Nb, Kb, bm, bn]
+        values = np.zeros((nb, s_max, bm, bn), dtype=np.asarray(w).dtype)
+        rows = np.full((nb, s_max), -1, dtype=np.int32)
+        for j in range(nb):
+            kept = np.nonzero(bmask[:, j])[0]
+            values[j, : len(kept)] = blocks[j, kept]
+            rows[j, : len(kept)] = kept
+        return cls(
+            values=jnp.asarray(values),
+            block_rows=jnp.asarray(rows),
+            shape=(k, n),
+            bm=bm,
+            bn=bn,
+        )
+
+    def to_dense(self) -> Array:
+        k, n = self.shape
+        kb, nb = k // self.bm, n // self.bn
+        vals = np.asarray(self.values)
+        rows = np.asarray(self.block_rows)
+        out = np.zeros((kb, self.bm, nb, self.bn), dtype=vals.dtype)
+        for j in range(nb):
+            for s in range(rows.shape[1]):
+                r = rows[j, s]
+                if r >= 0:
+                    out[r, :, j, :] = vals[j, s]
+        return jnp.asarray(out.reshape(k, n))
+
+    @property
+    def n_blocks(self) -> int:
+        return int(jnp.sum(self.block_rows >= 0))
+
+    @property
+    def padded_blocks(self) -> int:
+        return int(self.block_rows.size) - self.n_blocks
+
+    @property
+    def nbytes(self) -> int:
+        """True storage cost: surviving blocks + one int32 each (padding is an
+        execution artefact, not a storage one -- serialized form stores ragged)."""
+        item = jnp.dtype(self.values.dtype).itemsize
+        return self.n_blocks * (self.bm * self.bn * item + 4)
+
+    @property
+    def nbytes_padded(self) -> int:
+        item = jnp.dtype(self.values.dtype).itemsize
+        return int(self.values.size) * item + int(self.block_rows.size) * 4
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ColumnCompact:
+    """Column pruning along K: dense [K_kept, N] + kept-row indices."""
+
+    values: Array  # [K_kept, N]
+    kept: Array  # [K_kept] int32 (sorted)
+    shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+
+    @classmethod
+    def from_dense(cls, w: Array, mask: Array) -> "ColumnCompact":
+        keep_rows = np.nonzero(np.asarray(jnp.any(mask != 0, axis=1)))[0]
+        if len(keep_rows) == 0:
+            keep_rows = np.array([0])
+        return cls(
+            values=jnp.asarray(w)[jnp.asarray(keep_rows)],
+            kept=jnp.asarray(keep_rows, jnp.int32),
+            shape=tuple(w.shape),
+        )
+
+    def to_dense(self) -> Array:
+        out = jnp.zeros(self.shape, self.values.dtype)
+        return out.at[self.kept].set(self.values)
+
+    def apply(self, x: Array) -> Array:
+        """y = x @ W via static gather + small dense GEMM."""
+        return jnp.take(x, self.kept, axis=-1) @ self.values
+
+    @property
+    def nbytes(self) -> int:
+        item = jnp.dtype(self.values.dtype).itemsize
+        return int(self.values.size) * item + int(self.kept.size) * 4
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ChannelCompact:
+    """Channel pruning along N: dense [K, N_kept] + kept-column indices."""
+
+    values: Array  # [K, N_kept]
+    kept: Array  # [N_kept] int32 (sorted)
+    shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+
+    @classmethod
+    def from_dense(cls, w: Array, mask: Array) -> "ChannelCompact":
+        keep_cols = np.nonzero(np.asarray(jnp.any(mask != 0, axis=0)))[0]
+        if len(keep_cols) == 0:
+            keep_cols = np.array([0])
+        return cls(
+            values=jnp.asarray(w)[:, jnp.asarray(keep_cols)],
+            kept=jnp.asarray(keep_cols, jnp.int32),
+            shape=tuple(w.shape),
+        )
+
+    def to_dense(self) -> Array:
+        out = jnp.zeros(self.shape, self.values.dtype)
+        return out.at[:, self.kept].set(self.values)
+
+    def apply(self, x: Array) -> Array:
+        """y_compact = x @ W_kept; caller scatters or folds into next layer."""
+        return x @ self.values
+
+    def scatter(self, y_compact: Array) -> Array:
+        out_shape = y_compact.shape[:-1] + (self.shape[1],)
+        out = jnp.zeros(out_shape, y_compact.dtype)
+        return out.at[..., self.kept].set(y_compact)
+
+    @property
+    def nbytes(self) -> int:
+        item = jnp.dtype(self.values.dtype).itemsize
+        return int(self.values.size) * item + int(self.kept.size) * 4
+
+
+@dataclasses.dataclass
+class CSR:
+    """Textbook CSR -- storage-size baseline only (host-side, numpy)."""
+
+    data: np.ndarray
+    indices: np.ndarray  # int32 column index per nonzero  <- the redundancy
+    indptr: np.ndarray  # [K+1]
+    shape: Tuple[int, int]
+
+    @classmethod
+    def from_dense(cls, w, mask) -> "CSR":
+        w = np.asarray(w) * np.asarray(mask, dtype=np.asarray(w).dtype)
+        k, n = w.shape
+        indptr = np.zeros(k + 1, np.int64)
+        idx, data = [], []
+        for i in range(k):
+            nz = np.nonzero(w[i])[0]
+            idx.append(nz.astype(np.int32))
+            data.append(w[i, nz])
+            indptr[i + 1] = indptr[i] + len(nz)
+        return cls(
+            data=np.concatenate(data) if data else np.zeros(0, w.dtype),
+            indices=np.concatenate(idx) if idx else np.zeros(0, np.int32),
+            indptr=indptr,
+            shape=(k, n),
+        )
+
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros(self.shape, self.data.dtype)
+        for i in range(self.shape[0]):
+            lo, hi = self.indptr[i], self.indptr[i + 1]
+            out[i, self.indices[lo:hi]] = self.data[lo:hi]
+        return out
+
+    @property
+    def nbytes(self) -> int:
+        return (
+            self.data.nbytes + self.indices.nbytes + self.indptr.nbytes
+        )

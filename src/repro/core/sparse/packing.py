@@ -1,0 +1,79 @@
+"""Layout helpers shared by formats.py, reorder.py and the Pallas kernels."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "block_mask",
+    "pad_to_multiple",
+    "extract_blocks",
+    "pack_balanced",
+    "unpack_balanced",
+]
+
+Array = jax.Array
+
+
+def block_mask(mask: Array, bm: int, bn: int) -> Array:
+    """[K, N] elementwise mask -> [Kb, Nb] bool kept-block map."""
+    k, n = mask.shape
+    return jnp.any(mask.reshape(k // bm, bm, n // bn, bn) != 0, axis=(1, 3))
+
+
+def pad_to_multiple(x: Array, multiple: int, axis: int) -> Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def extract_blocks(w: Array, bm: int, bn: int) -> Array:
+    """[K, N] -> [Kb, Nb, bm, bn]."""
+    k, n = w.shape
+    return w.reshape(k // bm, bm, n // bn, bn).transpose(0, 2, 1, 3)
+
+
+def pack_balanced(
+    w: Array, bmask: np.ndarray, bm: int, bn: int
+) -> Tuple[Array, Array]:
+    """Column-major packing padded to the max per-column count.
+
+    Returns ``(values [Nb, S, bm, bn], block_rows [Nb, S] int32 with -1 pad)``.
+    Host-side (numpy) -- runs once at deployment/compile time, not in the step.
+    """
+    k, n = w.shape
+    kb, nb = k // bm, n // bn
+    blocks = np.asarray(w).reshape(kb, bm, nb, bn).transpose(2, 0, 1, 3)
+    counts = bmask.sum(axis=0)
+    s_max = max(int(counts.max(initial=0)), 1)
+    values = np.zeros((nb, s_max, bm, bn), np.asarray(w).dtype)
+    rows = np.full((nb, s_max), -1, np.int32)
+    for j in range(nb):
+        kept = np.nonzero(bmask[:, j])[0]
+        values[j, : len(kept)] = blocks[j, kept]
+        rows[j, : len(kept)] = kept
+    return jnp.asarray(values), jnp.asarray(rows)
+
+
+def unpack_balanced(
+    values: Array, rows: Array, shape: Tuple[int, int], bm: int, bn: int
+) -> Array:
+    """Inverse of pack_balanced (exact, ignoring -1 pads)."""
+    k, n = shape
+    kb, nb = k // bm, n // bn
+    v = np.asarray(values)
+    r = np.asarray(rows)
+    out = np.zeros((kb, bm, nb, bn), v.dtype)
+    for j in range(nb):
+        for s in range(r.shape[1]):
+            if r[j, s] >= 0:
+                out[r[j, s], :, j, :] = v[j, s]
+    return jnp.asarray(out.reshape(k, n))

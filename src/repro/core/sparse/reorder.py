@@ -1,0 +1,177 @@
+"""Matrix reorder (paper section 3, "Matrix reorder") adapted to TPU.
+
+The paper reorders *rows* (filters) so rows with the same/similar pruning
+pattern sit together, then compacts along columns -- fixing SpMM thread load
+imbalance and irregular access on mobile SIMD.
+
+On TPU the executor is an output-stationary Pallas grid: one program per
+(M-tile, output block-column).  The imbalance analogue is *per-output-column
+surviving-block counts* differing -> every program pads to the max count and
+the padding is wasted MXU work.  The reorder pass therefore:
+
+1. sorts output block-columns by surviving count ("rows with similar pattern
+   together" -- here columns, because im2col'd conv filters are W's columns);
+2. partitions them into *bands* of equal (or near-equal) count, so lowering
+   can issue one pallas_call per band with an exact trip count -- zero padding
+   inside a band;
+3. emits a column permutation which the graph layer *folds into the next op*
+   (permuting a layer's output features = permuting the next weight's input
+   rows), so runtime permutation cost is zero -- same trick as the paper's
+   offline reorder.
+
+Balance metrics quantify the win (EXPERIMENTS.md section Kernels).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ReorderPlan", "Band", "plan_reorder", "balance_stats", "apply_column_perm"]
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Band:
+    """A contiguous (post-permutation) group of output block-columns executed
+    with one pallas_call of exactly ``count`` accumulation steps."""
+
+    start: int  # first block-column (in permuted order)
+    stop: int  # one past last
+    count: int  # surviving blocks per column in this band (max over members)
+
+    @property
+    def n_cols(self) -> int:
+        return self.stop - self.start
+
+
+@dataclasses.dataclass(frozen=True)
+class ReorderPlan:
+    """Column permutation + band partition for one pruned weight."""
+
+    #: permutation of output block-columns: new_j = perm[old_j] position;
+    #: ``order[new_pos] = old_j`` (argsort form, easiest to apply)
+    order: np.ndarray  # [Nb] int32
+    bands: Tuple[Band, ...]
+    bm: int
+    bn: int
+    #: waste fraction before/after (padded blocks / real blocks)
+    waste_before: float
+    waste_after: float
+
+    @property
+    def identity(self) -> bool:
+        return bool(np.all(self.order == np.arange(len(self.order))))
+
+
+def _counts(bmask: np.ndarray) -> np.ndarray:
+    return bmask.sum(axis=0).astype(np.int64)  # per output block-column
+
+
+def balance_stats(bmask: np.ndarray) -> dict:
+    """Imbalance metrics of a [Kb, Nb] block-kept map (output-column view)."""
+    c = _counts(bmask)
+    mx = int(c.max(initial=0))
+    total = int(c.sum())
+    padded = int((mx - c).sum())
+    return {
+        "max": mx,
+        "mean": float(c.mean()) if len(c) else 0.0,
+        "min": int(c.min(initial=0)),
+        "waste_frac": padded / max(total, 1),
+        "imbalance": (mx / max(float(c.mean()), 1e-9)) if len(c) else 1.0,
+    }
+
+
+def plan_reorder(
+    bmask: np.ndarray, max_bands: int = 4, bm: int = 128, bn: int = 128
+) -> ReorderPlan:
+    """Sort output block-columns by surviving count and cut into <=max_bands
+    bands minimizing total padding (dynamic programming over split points).
+    """
+    bmask = np.asarray(bmask, bool)
+    kb, nb = bmask.shape
+    c = _counts(bmask)
+    order = np.argsort(c, kind="stable").astype(np.int32)  # ascending count
+    sorted_c = c[order]
+
+    before = balance_stats(bmask)
+
+    # DP: cost(prefix, bands) = padding if each band pads to its own max
+    # (= its last element, counts sorted ascending).
+    INF = float("inf")
+    # cum[i] = sum of counts[0:i]
+    cum = np.concatenate([[0], np.cumsum(sorted_c)])
+
+    def band_cost(i: int, j: int) -> float:  # columns i..j-1 in one band
+        mx = sorted_c[j - 1]
+        return float(mx * (j - i) - (cum[j] - cum[i]))
+
+    n = nb
+    dp = np.full((max_bands + 1, n + 1), INF)
+    choice = np.zeros((max_bands + 1, n + 1), np.int32)
+    dp[0, 0] = 0.0
+    for b in range(1, max_bands + 1):
+        for j in range(1, n + 1):
+            for i in range(j):
+                if dp[b - 1, i] == INF:
+                    continue
+                cost = dp[b - 1, i] + band_cost(i, j)
+                if cost < dp[b, j]:
+                    dp[b, j] = cost
+                    choice[b, j] = i
+    # best number of bands
+    best_b = int(np.argmin(dp[:, n]))
+    cuts = []
+    j = n
+    for b in range(best_b, 0, -1):
+        i = int(choice[b, j])
+        cuts.append((i, j))
+        j = i
+    cuts.reverse()
+    bands = tuple(
+        Band(start=i, stop=j, count=int(sorted_c[j - 1]) if j > i else 0)
+        for i, j in cuts
+        if j > i
+    )
+    total = int(sorted_c.sum())
+    padded_after = sum(b.count * b.n_cols for b in bands) - total
+    waste_after = padded_after / max(total, 1)
+    return ReorderPlan(
+        order=order,
+        bands=bands,
+        bm=bm,
+        bn=bn,
+        waste_before=before["waste_frac"],
+        waste_after=waste_after,
+    )
+
+
+def apply_column_perm(w: Array, order: np.ndarray, bn: int) -> Array:
+    """Permute output block-columns of ``W[K, N]`` per ``order`` (gather)."""
+    k, n = w.shape
+    nb = n // bn
+    wb = w.reshape(k, nb, bn)
+    return jnp.take(wb, jnp.asarray(order), axis=1).reshape(k, n)
+
+
+def invert_column_perm(order: np.ndarray) -> np.ndarray:
+    inv = np.empty_like(order)
+    inv[order] = np.arange(len(order), dtype=order.dtype)
+    return inv
+
+
+def fold_perm_into_next(w_next: Array, order: np.ndarray, bn: int) -> Array:
+    """Fold an output-column permutation of layer L into layer L+1's input
+    rows: if y' = y[perm], then (x' @ W_next) == (y @ W_next_folded) requires
+    W_next_folded = W_next with input-row blocks gathered by the same order.
+    ``W_next[K, N]`` with K = bn * Nb_prev."""
+    k, n = w_next.shape
+    nb = k // bn
+    wb = w_next.reshape(nb, bn, n)
+    return jnp.take(wb, jnp.asarray(order), axis=0).reshape(k, n)

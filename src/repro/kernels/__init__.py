@@ -1,0 +1,2 @@
+from . import ref
+from .ops import attention, bsr_matmul, col_matmul, ffn_gateup, interpret_default, matmul

@@ -1,0 +1,144 @@
+"""Block-sparse matmul over PBCSR weights (the paper's sparse execution engine,
+TPU-native form -- DESIGN.md section 2).
+
+``y[M, N] = x[M, K] @ W`` where W survives structured block pruning.  Weights
+arrive *packed*: only surviving ``(bm, bn)`` blocks are stored
+(``values[Nb, S, bm, bn]``), with one scalar-prefetched int32 block-row index
+per block (``block_rows[Nb, S]``, -1 = padding).  Properties:
+
+* pruned blocks are never read from HBM and never touch the MXU -- compute
+  and memory scale with density, not with the dense shape;
+* the index table lives in SMEM via ``PrefetchScalarGridSpec`` (scalar
+  prefetch), so the x-tile address for step ``s`` is known before the DMA --
+  no data-dependent stalls on the datapath (the paper's "irregular memory
+  access" fix);
+* the grid is output-stationary ``(M/bmx, Nb, S)`` with equal trip count S
+  everywhere -- the load-balance contract established by the balanced
+  projection or by the matrix-reorder bands (one call per band, exact S);
+* padding blocks (index -1) clamp to x-block 0 and add zeros: exact, merely
+  wasted work, which the reorder pass minimizes.
+
+The bias+activation epilogue is fused exactly as in dense_matmul.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .dense_matmul import _ACTIVATIONS
+
+__all__ = ["bsr_matmul_kernel", "bsr_matmul"]
+
+
+def bsr_matmul_kernel(
+    rows_ref,  # scalar-prefetch: [Nb, S] int32 block-row per step
+    x_ref,  # [bmx, bm] tile of x (block-row selected via rows_ref)
+    v_ref,  # [1, 1, bm, bn] packed weight block
+    b_ref,  # [1, bn] bias tile or None
+    o_ref,  # [bmx, bn] output tile
+    acc_ref,  # VMEM f32 accumulator
+    *,
+    activation: Optional[str],
+):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    j = pl.program_id(1)
+    is_pad = rows_ref[j, s] < 0
+    blk = jnp.dot(
+        x_ref[...], v_ref[0, 0], preferred_element_type=jnp.float32
+    )
+    # padded steps contribute zero even if values were garbage (they are zero
+    # by construction; the select also guards clamped x reads).
+    acc_ref[...] += jnp.where(is_pad, 0.0, 1.0) * blk
+
+    @pl.when(s == pl.num_programs(2) - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        if b_ref is not None:
+            acc = acc + b_ref[...].astype(jnp.float32)
+        o_ref[...] = _ACTIVATIONS[activation](acc).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "block_m", "interpret", "out_dtype", "n_out"),
+)
+def bsr_matmul(
+    x: jax.Array,
+    values: jax.Array,
+    block_rows: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    n_out: Optional[int] = None,
+    activation: Optional[str] = None,
+    block_m: int = 128,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """Block-sparse ``act(x @ W + bias)``.
+
+    Args:
+      x: ``[M, K]`` with M % block_m == 0, K % bm == 0.
+      values: ``[Nb, S, bm, bn]`` packed surviving blocks (zeros at pads).
+      block_rows: ``[Nb, S]`` int32 block-row index per packed block, -1 pad.
+      bias: optional ``[Nb*bn]``.
+      n_out: output width override (defaults to Nb*bn).
+    """
+    m, k = x.shape
+    nb, s_steps, bm, bn = values.shape
+    assert k % bm == 0, (k, bm)
+    assert m % block_m == 0, (m, block_m)
+    n = n_out or nb * bn
+    assert n == nb * bn
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    out_dtype = out_dtype or x.dtype
+
+    grid = (m // block_m, nb, s_steps)
+
+    def x_index(i, j, s, rows):
+        # pads (-1) clamp to x-block 0; their contribution is masked in-kernel
+        return (i, jnp.maximum(rows[j, s], 0))
+
+    in_specs = [
+        pl.BlockSpec((block_m, bm), x_index),
+        pl.BlockSpec((1, 1, bm, bn), lambda i, j, s, rows: (j, s, 0, 0)),
+    ]
+    args = [x, values]
+    if bias is not None:
+        assert bias.shape == (n,), bias.shape
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, s, rows: (0, j)))
+        args.append(bias.reshape(1, n))
+        kern = functools.partial(bsr_matmul_kernel, activation=activation)
+    else:
+        def kern(rows_ref, x_ref, v_ref, o_ref, acc_ref):
+            return bsr_matmul_kernel(
+                rows_ref, x_ref, v_ref, None, o_ref, acc_ref, activation=activation
+            )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, bn), lambda i, j, s, rows: (i, j)),
+        scratch_shapes=[pltpu.VMEM((block_m, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(block_rows, *args)

@@ -1,0 +1,116 @@
+"""Tiled dense matmul with fused bias+activation epilogue (Pallas TPU).
+
+This is (a) the baseline against which the BSR kernel is compared and (b) the
+execution engine for column-/channel-compacted weights (a strictly smaller
+dense GEMM).  The fused epilogue is the TPU materialization of the paper's
+DSL fusion pass (Conv/Linear + BatchNorm + Activation in one kernel -- no
+HBM round-trip for the intermediate).
+
+Grid: ``(M/bm, N/bn, K/bk)`` with a VMEM f32 accumulator; K innermost so the
+accumulator lives across the contraction.  Block shapes default to MXU-square
+128 and must divide the (padded) operand shapes -- the ops.py wrapper pads.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["dense_matmul_kernel", "dense_matmul"]
+
+
+_ACTIVATIONS = {
+    None: lambda x: x,
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "tanh": jnp.tanh,
+}
+
+
+def dense_matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, activation: Optional[str]):
+    """One (i, j, k) grid step: acc += x[i,k] @ w[k,j]; epilogue at last k."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        if b_ref is not None:
+            acc = acc + b_ref[...].astype(jnp.float32)
+        o_ref[...] = _ACTIVATIONS[activation](acc).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "block_m", "block_n", "block_k", "interpret", "out_dtype"),
+)
+def dense_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    activation: Optional[str] = None,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """``act(x @ w + bias)`` -- 2-D operands, shapes multiples of the blocks.
+
+    Use :func:`repro.kernels.ops.matmul` for the padded/raked public API.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        x.shape,
+        w.shape,
+        (block_m, block_n, block_k),
+    )
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    out_dtype = out_dtype or x.dtype
+    grid = (m // block_m, n // block_n, k // block_k)
+
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+    ]
+    args = [x, w]
+    if bias is not None:
+        assert bias.shape == (n,), bias.shape
+        in_specs.append(pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)))
+        args.append(bias.reshape(1, n))
+        kern = functools.partial(dense_matmul_kernel, activation=activation)
+    else:
+        def kern(x_ref, w_ref, o_ref, acc_ref):
+            return dense_matmul_kernel(
+                x_ref, w_ref, None, o_ref, acc_ref, activation=activation
+            )
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(*args)

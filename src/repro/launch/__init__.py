@@ -1,0 +1,1 @@
+from .mesh import HW, make_mesh, make_production_mesh

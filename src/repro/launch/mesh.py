@@ -1,0 +1,38 @@
+"""Production mesh builders (DESIGN.md section 5).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; callers (dryrun.py) must set XLA_FLAGS before first jax init.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh", "HW"]
+
+
+class HW:
+    """TPU v5e-class hardware constants (roofline denominators)."""
+
+    PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+    HBM_BW = 819e9  # bytes/s per chip
+    ICI_BW = 50e9  # bytes/s per link (conservative single-link figure)
+    HBM_BYTES = 16 * 1024**3  # 16 GiB per chip
+    CHIPS_PER_POD = 256
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary mesh helper for tests/perf variants."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )

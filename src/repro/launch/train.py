@@ -1,0 +1,132 @@
+"""End-to-end training launcher (runs REAL steps on whatever devices exist).
+
+On this CPU container it trains reduced configs (``--smoke``); on a real
+pod the same script takes the full config -- all distribution goes through
+the same pjit path the dry-run validates.  Features wired in:
+
+* ADMM structured pruning phases: dense warmup -> ADMM -> hard prune ->
+  masked fine-tune (the paper's full pipeline, --prune);
+* checkpoint/resume (atomic, keep-N), preemption-safe exit, straggler log;
+* gradient accumulation, remat, deterministic data with checkpointed cursor.
+
+Example (CPU):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --smoke \
+      --steps 60 --batch 8 --seq 128 --prune --ckpt /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCH_IDS, get_config, smoke_config
+from ..core.pruning import AdmmConfig, Block, Column, PrunePlan, hard_prune
+from ..data.pipeline import PipelineState, SyntheticPipeline
+from ..models import get_model
+from ..training.checkpoint import CheckpointManager
+from ..training.fault_tolerance import PreemptionHandler, StragglerMonitor
+from ..training.optimizer import AdamWConfig
+from ..training.train_loop import TrainState, init_train_state, make_train_step
+
+
+def default_prune_plan(sparsity: float = 0.5) -> PrunePlan:
+    """The paper's recipe mapped to transformer weights (DESIGN.md section 7):
+    column pruning for FFN in-projections (style-transfer recipe), MXU-block
+    pruning for attention projections."""
+    return PrunePlan.from_rules(
+        [
+            ("*ffn*w_gate*['w']", Column(sparsity)),
+            ("*ffn*w_up*['w']", Column(sparsity)),
+            ("*attn*w_q*['w']", Block(sparsity, bm=64, bn=64)),
+            ("*attn*w_o*['w']", Block(sparsity, bm=64, bn=64)),
+        ],
+        min_size=16384,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2.5-3b")
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--prune", action="store_true")
+    ap.add_argument("--sparsity", type=float, default=0.5)
+    ap.add_argument("--admm-every", type=int, default=10)
+    ap.add_argument("--hard-prune-at", type=float, default=0.6,
+                    help="fraction of steps before hard prune + masked tune")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = get_model(cfg)
+    pipe = SyntheticPipeline(cfg, batch=args.batch, seq=args.seq + 1, seed=args.seed)
+
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps, warmup_steps=max(args.steps // 20, 5))
+    admm_cfg = AdmmConfig(rho=1e-2, rho_ramp=1.2, rho_max=1.0, update_every=args.admm_every) if args.prune else None
+    plan = default_prune_plan(args.sparsity) if args.prune else None
+
+    params = model.init(jax.random.PRNGKey(args.seed))
+    state = init_train_state(params, opt_cfg, admm_cfg=admm_cfg, prune_plan=plan)
+    step_fn = jax.jit(make_train_step(model.loss, opt_cfg, admm_cfg=admm_cfg, accum=args.accum))
+
+    mgr = CheckpointManager(args.ckpt, save_every=args.save_every) if args.ckpt else None
+    start_step = 0
+    if mgr:
+        restored = mgr.restore_latest((state, pipe.state.to_dict()))
+        if restored:
+            (state, data_state), start_step = restored
+            pipe.state = PipelineState.from_dict(
+                {k: int(v) for k, v in data_state.items()}
+            )
+            print(f"resumed from step {start_step}")
+
+    hard_at = int(args.steps * args.hard_prune_at) if args.prune else -1
+    mon = StragglerMonitor(
+        on_straggler=lambda s, dt, med: print(f"  [straggler] step {s}: {dt:.2f}s vs median {med:.2f}s")
+    )
+    with PreemptionHandler() as pre:
+        for step in range(start_step, args.steps):
+            mon.start_step()
+            batch = {k: jnp.asarray(v) for k, v in pipe.next().items()}
+            state, metrics = step_fn(state, batch)
+            dt = mon.end_step()
+            if step % 10 == 0 or step == args.steps - 1:
+                m = {k: float(v) for k, v in metrics.items() if jnp.ndim(v) == 0}
+                print(
+                    f"step {step:5d} loss={m.get('loss', 0):.4f} ce={m.get('ce', 0):.4f} "
+                    + (f"residual={m.get('primal_residual', 0):.3f} " if args.prune else "")
+                    + f"({dt:.2f}s)"
+                )
+            if args.prune and step == hard_at:
+                pruned, masks = hard_prune(state.params, state.admm)
+                state = TrainState(params=pruned, opt=state.opt, admm=None, masks=masks)
+                step_fn = jax.jit(make_train_step(model.loss, opt_cfg, accum=args.accum))
+                from ..core.pruning import tree_sparsity_report
+
+                rep = tree_sparsity_report(pruned, masks)
+                print(f"  [hard prune] global sparsity over pruned leaves: "
+                      f"{rep['pruned_global']:.3f}; masked fine-tune begins")
+            if mgr:
+                mgr.maybe_save(step + 1, (state, pipe.state.to_dict()),
+                               force=pre.should_stop)
+            if pre.should_stop:
+                print(f"preempted at step {step}; checkpoint saved; exiting cleanly")
+                return
+    print(f"done; median step {mon.median:.2f}s, stragglers: {len(mon.straggler_steps)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from . import attention, cnn, encdec, ffn, layers, rglru, sharding, ssm, transformer
+from .registry import Model, get_model

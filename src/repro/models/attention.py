@@ -1,0 +1,503 @@
+"""Attention: GQA/MQA (+qk_norm, +bias), MLA (DeepSeek low-rank KV), sliding
+window, prefix-LM masks; full and chunked (flash-style) implementations; KV
+caches (full / compressed / ring-buffer) with single-token decode steps.
+
+Memory strategy: ``full`` materializes [B, H, Sq, Skv] scores (fine to 8k);
+``chunked`` streams KV in blocks with running (max, sum) renormalization --
+the standard online-softmax recurrence -- so prefill_32k fits per-device HBM.
+The chunk loop is a *python* loop (static unroll) so dry-run HLO FLOPs remain
+exact for the roofline (DESIGN.md section 8); pass ``unroll=False`` to trade
+accounting for compile time on very long sequences.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import apply_rope, init_linear, init_rmsnorm, linear, rmsnorm
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------- #
+# masks                                                                        #
+# --------------------------------------------------------------------------- #
+
+
+def _mask_bias(
+    q_pos: Array,  # [Sq] absolute positions of queries
+    kv_pos: Array,  # [Skv]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    prefix_len: int = 0,
+) -> Array:
+    """Additive mask bias [Sq, Skv] built from iota comparisons (never a
+    materialized constant table)."""
+    qi = q_pos[:, None]
+    kj = kv_pos[None, :]
+    ok = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        ok = kj <= qi
+        if prefix_len > 0:  # prefix-LM: bidirectional inside the prefix
+            both_prefix = (qi < prefix_len) & (kj < prefix_len)
+            ok = ok | both_prefix
+    if window is not None:
+        ok = ok & (qi - kj < window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------- #
+# core attention                                                               #
+# --------------------------------------------------------------------------- #
+
+
+def _sdpa_full(q: Array, k: Array, v: Array, bias: Array, scale: float) -> Array:
+    """q [B,Sq,H,dh], k [B,Skv,G,dh], v [B,Skv,G,dv]; H = G*rep (dv may differ
+    from dh, e.g. MLA's rope-extended queries).  bias [Sq,Skv]."""
+    b, sq, h, dh = q.shape
+    g = k.shape[2]
+    dv = v.shape[-1]
+    rep = h // g
+    qg = q.reshape(b, sq, g, rep, dh)
+    logits = jnp.einsum("bsgrd,btgd->bgrst", qg.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits * scale + bias[None, None, None]
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrst,btgd->bsgrd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def _sdpa_chunked(
+    q: Array,
+    k: Array,
+    v: Array,
+    q_pos: Array,
+    kv_pos: Array,
+    scale: float,
+    *,
+    causal: bool,
+    window: Optional[int],
+    prefix_len: int,
+    chunk: int = 1024,
+) -> Array:
+    """Online-softmax over KV chunks (flash-attention recurrence, pure jnp).
+
+    Python loop over chunks -> exact HLO FLOP accounting in the dry-run.
+    """
+    b, sq, h, dh = q.shape
+    g = k.shape[2]
+    dv = v.shape[-1]
+    rep = h // g
+    skv = k.shape[1]
+    n_chunks = -(-skv // chunk)
+    qg = q.reshape(b, sq, g, rep, dh).astype(jnp.float32)
+
+    m = jnp.full((b, g, rep, sq), NEG_INF, jnp.float32)
+    l = jnp.zeros((b, g, rep, sq), jnp.float32)
+    acc = jnp.zeros((b, sq, g, rep, dv), jnp.float32)
+    for c in range(n_chunks):
+        lo = c * chunk
+        hi = min(lo + chunk, skv)
+        kc = k[:, lo:hi].astype(jnp.float32)
+        vc = v[:, lo:hi].astype(jnp.float32)
+        bias = _mask_bias(
+            q_pos, kv_pos[lo:hi], causal=causal, window=window, prefix_len=prefix_len
+        )
+        logits = jnp.einsum("bsgrd,btgd->bgrst", qg, kc) * scale + bias[None, None, None]
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * jnp.moveaxis(alpha, 3, 1)[..., None] + jnp.einsum(
+            "bgrst,btgd->bsgrd", p, vc
+        )
+        m = m_new
+    out = acc / jnp.moveaxis(jnp.maximum(l, 1e-30), 3, 1)[..., None]
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def sdpa(
+    q: Array,
+    k: Array,
+    v: Array,
+    q_pos: Array,
+    kv_pos: Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    prefix_len: int = 0,
+    impl: str = "auto",
+    chunk: int = 1024,
+    scale: Optional[float] = None,
+) -> Array:
+    scale = scale if scale is not None else 1.0 / math.sqrt(q.shape[-1])
+    if impl == "auto":
+        impl = "chunked" if k.shape[1] > 8192 and q.shape[1] > 1 else "full"
+    if impl == "full":
+        bias = _mask_bias(q_pos, kv_pos, causal=causal, window=window, prefix_len=prefix_len)
+        return _sdpa_full(q, k, v, bias, scale)
+    return _sdpa_chunked(
+        q, k, v, q_pos, kv_pos, scale,
+        causal=causal, window=window, prefix_len=prefix_len, chunk=chunk,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# GQA attention block                                                          #
+# --------------------------------------------------------------------------- #
+
+
+def init_gqa(key: Array, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    dh = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if cfg.prune.enabled and cfg.prune.exec_mode in ("bsr_xla", "bsr"):
+        # the paper's attention recipe: MXU-block pruning of q/o projections
+        from .layers import init_pruned_linear
+
+        sp = cfg.prune.sparsity
+        p: Params = {
+            "w_q": init_pruned_linear(k1, cfg.d_model, cfg.n_heads * dh,
+                                      exec_mode=cfg.prune.exec_mode, sparsity=sp,
+                                      bias=cfg.qkv_bias, dtype=dtype),
+            "w_k": init_linear(k2, cfg.d_model, cfg.n_kv_heads * dh, bias=cfg.qkv_bias, dtype=dtype),
+            "w_v": init_linear(k3, cfg.d_model, cfg.n_kv_heads * dh, bias=cfg.qkv_bias, dtype=dtype),
+            "w_o": init_pruned_linear(k4, cfg.n_heads * dh, cfg.d_model,
+                                      exec_mode=cfg.prune.exec_mode, sparsity=sp, dtype=dtype),
+        }
+    else:
+        p = {
+            "w_q": init_linear(k1, cfg.d_model, cfg.n_heads * dh, bias=cfg.qkv_bias, dtype=dtype),
+            "w_k": init_linear(k2, cfg.d_model, cfg.n_kv_heads * dh, bias=cfg.qkv_bias, dtype=dtype),
+            "w_v": init_linear(k3, cfg.d_model, cfg.n_kv_heads * dh, bias=cfg.qkv_bias, dtype=dtype),
+            "w_o": init_linear(k4, cfg.n_heads * dh, cfg.d_model, dtype=dtype),
+        }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(dh, dtype)
+        p["k_norm"] = init_rmsnorm(dh, dtype)
+    return p
+
+
+def _linear_auto(p: Params, x: Array, mode: str = "dense", activation=None) -> Array:
+    """Dispatch on packed-param presence (pruned layers carry 'values')."""
+    if "values" in p:
+        mode = "bsr_xla" if "block_rows" in p else "colpack_xla"
+    return linear(p, x, mode=mode, activation=activation)
+
+
+def gqa_project_qkv(
+    p: Params, cfg: ArchConfig, x: Array, positions: Array, *, mode: str = "dense"
+) -> Tuple[Array, Array, Array]:
+    b, s, _ = x.shape
+    dh = cfg.resolved_head_dim
+    q = _linear_auto(p["w_q"], x, mode).reshape(b, s, cfg.n_heads, dh)
+    k = _linear_auto(p["w_k"], x, mode).reshape(b, s, cfg.n_kv_heads, dh)
+    v = _linear_auto(p["w_v"], x, mode).reshape(b, s, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attention(
+    p: Params,
+    cfg: ArchConfig,
+    x: Array,
+    positions: Array,
+    *,
+    window: Optional[int] = None,
+    prefix_len: int = 0,
+    causal: bool = True,
+    impl: str = "auto",
+    mode: str = "dense",
+    chunk: int = 1024,
+) -> Array:
+    """Self-attention over a full sequence (train / prefill).
+
+    ``positions`` is [B, S] for RoPE; the mask uses row 0 (all batch rows
+    share the same position grid in train/prefill).
+    """
+    q, k, v = gqa_project_qkv(p, cfg, x, positions, mode=mode)
+    pos1d = positions[0]
+    out = sdpa(
+        q, k, v, pos1d, pos1d,
+        causal=causal, window=window, prefix_len=prefix_len, impl=impl, chunk=chunk,
+    )
+    b, s = x.shape[:2]
+    return _linear_auto(p["w_o"], out.reshape(b, s, -1), mode)
+
+
+# ----------------------------- KV cache ------------------------------------ #
+
+
+def init_kv_cache(
+    cfg: ArchConfig, batch: int, max_len: int, *, window: Optional[int] = None,
+    dtype=jnp.bfloat16,
+) -> Params:
+    dh = cfg.resolved_head_dim
+    size = min(window, max_len) if window else max_len
+    return {
+        "k": jnp.zeros((batch, size, cfg.n_kv_heads, dh), dtype),
+        "v": jnp.zeros((batch, size, cfg.n_kv_heads, dh), dtype),
+        # absolute position of the next token, PER ROW (continuous batching:
+        # each slot of the serving batch advances independently)
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def gqa_decode_step(
+    p: Params,
+    cfg: ArchConfig,
+    x_t: Array,  # [B, 1, D]
+    cache: Params,
+    *,
+    window: Optional[int] = None,
+    mode: str = "dense",
+) -> Tuple[Array, Params]:
+    """One decode step.  Ring-buffer writes when ``window`` is set."""
+    b = x_t.shape[0]
+    dh = cfg.resolved_head_dim
+    pos = cache["pos"]  # [B]
+    positions = pos[:, None]
+    q, k_new, v_new = gqa_project_qkv(p, cfg, x_t, positions, mode=mode)
+    size = cache["k"].shape[1]
+    slot = pos % size if window is not None else jnp.minimum(pos, size - 1)
+    rows = jnp.arange(b)
+    k = cache["k"].at[rows, slot].set(k_new[:, 0])
+    v = cache["v"].at[rows, slot].set(v_new[:, 0])
+    # absolute positions of cache slots, per row
+    idx = jnp.arange(size, dtype=jnp.int32)
+    if window is None:
+        kv_pos = jnp.broadcast_to(idx, (b, size))
+        valid = kv_pos <= pos[:, None]
+    else:
+        wraps = (pos // size)[:, None]
+        kv_pos = jnp.where(
+            idx[None, :] <= slot[:, None],
+            wraps * size + idx[None, :],
+            (wraps - 1) * size + idx[None, :],
+        )
+        valid = (kv_pos >= 0) & (kv_pos <= pos[:, None]) & (
+            pos[:, None] - kv_pos < (window or size)
+        )
+    g = cfg.n_kv_heads
+    rep = cfg.n_heads // g
+    qg = q.reshape(b, 1, g, rep, dh).astype(jnp.float32)
+    logits = jnp.einsum("bsgrd,btgd->bgrst", qg, k.astype(jnp.float32)) / math.sqrt(dh)
+    logits = jnp.where(valid[:, None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrst,btgd->bsgrd", probs, v.astype(jnp.float32))
+    out = out.reshape(b, 1, cfg.n_heads * dh).astype(x_t.dtype)
+    y = _linear_auto(p["w_o"], out, mode)
+    return y, {"k": k, "v": v, "pos": pos + 1}
+
+
+def gqa_prefill(
+    p: Params,
+    cfg: ArchConfig,
+    x: Array,
+    positions: Array,
+    max_len: int,
+    *,
+    window: Optional[int] = None,
+    prefix_len: int = 0,
+    impl: str = "auto",
+    mode: str = "dense",
+) -> Tuple[Array, Params]:
+    """Full-sequence attention + populated KV cache (serving prefill)."""
+    b, s, _ = x.shape
+    q, k, v = gqa_project_qkv(p, cfg, x, positions, mode=mode)
+    pos1d = positions[0]
+    out = sdpa(
+        q, k, v, pos1d, pos1d,
+        causal=True, window=window, prefix_len=prefix_len, impl=impl,
+    )
+    y = _linear_auto(p["w_o"], out.reshape(b, s, -1), mode)
+    size = min(window, max_len) if window else max_len
+    if window is None or s <= size:
+        pad = size - s if s <= size else 0
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))[:, :size]
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))[:, :size]
+    else:
+        # ring layout: slot i holds the largest position p < s with p%size==i
+        idx = jnp.arange(size)
+        slot_pos = idx + size * ((s - 1 - idx) // size)
+        kc = jnp.take(k, slot_pos, axis=1)
+        vc = jnp.take(v, slot_pos, axis=1)
+    cache = {"k": kc, "v": vc, "pos": jnp.full((b,), s, jnp.int32)}
+    return y, cache
+
+
+# --------------------------------------------------------------------------- #
+# MLA (DeepSeek-V2 multi-head latent attention)                                #
+# --------------------------------------------------------------------------- #
+
+
+def init_mla(key: Array, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    dh = cfg.resolved_head_dim
+    r = cfg.kv_lora_rank
+    dr = cfg.rope_head_dim
+    keys = jax.random.split(key, 8)
+    p: Params = {}
+    if cfg.q_lora_rank:
+        p["w_dq"] = init_linear(keys[0], cfg.d_model, cfg.q_lora_rank, dtype=dtype)
+        p["q_norm"] = init_rmsnorm(cfg.q_lora_rank, dtype)
+        p["w_uq"] = init_linear(keys[1], cfg.q_lora_rank, cfg.n_heads * (dh + dr), dtype=dtype)
+    else:
+        p["w_q"] = init_linear(keys[0], cfg.d_model, cfg.n_heads * (dh + dr), dtype=dtype)
+    p["w_dkv"] = init_linear(keys[2], cfg.d_model, r, dtype=dtype)
+    p["kv_norm"] = init_rmsnorm(r, dtype)
+    p["w_kr"] = init_linear(keys[3], cfg.d_model, dr, dtype=dtype)  # shared rope key
+    p["w_uk"] = init_linear(keys[4], r, cfg.n_heads * dh, dtype=dtype)
+    p["w_uv"] = init_linear(keys[5], r, cfg.n_heads * dh, dtype=dtype)
+    p["w_o"] = init_linear(keys[6], cfg.n_heads * dh, cfg.d_model, dtype=dtype)
+    return p
+
+
+def _mla_q(p: Params, cfg: ArchConfig, x: Array, positions: Array) -> Tuple[Array, Array]:
+    b, s, _ = x.shape
+    dh, dr = cfg.resolved_head_dim, cfg.rope_head_dim
+    if cfg.q_lora_rank:
+        cq = rmsnorm(p["q_norm"], linear(p["w_dq"], x), cfg.norm_eps)
+        q = linear(p["w_uq"], cq)
+    else:
+        q = linear(p["w_q"], x)
+    q = q.reshape(b, s, cfg.n_heads, dh + dr)
+    q_nope, q_rope = q[..., :dh], q[..., dh:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_attention(
+    p: Params, cfg: ArchConfig, x: Array, positions: Array, *, impl: str = "auto"
+) -> Array:
+    """Full-sequence MLA (train / prefill): decompress K/V per head."""
+    b, s, _ = x.shape
+    dh, dr = cfg.resolved_head_dim, cfg.rope_head_dim
+    h = cfg.n_heads
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_kv = rmsnorm(p["kv_norm"], linear(p["w_dkv"], x), cfg.norm_eps)  # [B,S,r]
+    k_rope = apply_rope(
+        linear(p["w_kr"], x).reshape(b, s, 1, dr), positions, cfg.rope_theta
+    )  # shared across heads
+    k_nope = linear(p["w_uk"], c_kv).reshape(b, s, h, dh)
+    v = linear(p["w_uv"], c_kv).reshape(b, s, h, dh)
+    # assemble per-head keys/queries with concatenated rope parts
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))], axis=-1)
+    scale = 1.0 / math.sqrt(dh + dr)
+    pos1d = positions[0]
+    out = sdpa(q, k, v, pos1d, pos1d, causal=True, impl=impl, scale=scale)
+    return linear(p["w_o"], out.reshape(b, s, h * dh))
+
+
+def mla_prefill(
+    p: Params, cfg: ArchConfig, x: Array, positions: Array, max_len: int,
+    *, impl: str = "auto",
+) -> Tuple[Array, Params]:
+    """Full-sequence MLA + populated compressed cache."""
+    b, s, _ = x.shape
+    dr = cfg.rope_head_dim
+    y = mla_attention(p, cfg, x, positions, impl=impl)
+    c_kv = rmsnorm(p["kv_norm"], linear(p["w_dkv"], x), cfg.norm_eps)
+    k_rope = apply_rope(
+        linear(p["w_kr"], x).reshape(b, s, 1, dr), positions, cfg.rope_theta
+    ).reshape(b, s, dr)
+    pad = max_len - s
+    cache = {
+        "c_kv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+        "k_rope": jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))),
+        "pos": jnp.full((b,), s, jnp.int32),
+    }
+    return y, cache
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def mla_decode_step(
+    p: Params, cfg: ArchConfig, x_t: Array, cache: Params
+) -> Tuple[Array, Params]:
+    """Absorbed decode: queries move into latent space; cache stays r-dim.
+
+    score_h(t) = q_nope_h^T W_uk_h c_t + q_rope_h^T k_rope_t
+    out_h      = (sum_t p_t c_t) W_uv_h           (absorb on the way out)
+    """
+    b = x_t.shape[0]
+    dh, dr, r, h = cfg.resolved_head_dim, cfg.rope_head_dim, cfg.kv_lora_rank, cfg.n_heads
+    pos = cache["pos"]  # [B]
+    positions = pos[:, None]
+    q_nope, q_rope = _mla_q(p, cfg, x_t, positions)  # [B,1,H,dh],[B,1,H,dr]
+    c_new = rmsnorm(p["kv_norm"], linear(p["w_dkv"], x_t), cfg.norm_eps)  # [B,1,r]
+    kr_new = apply_rope(
+        linear(p["w_kr"], x_t).reshape(b, 1, 1, dr), positions, cfg.rope_theta
+    ).reshape(b, 1, dr)
+    rows = jnp.arange(b)
+    c_kv = cache["c_kv"].at[rows, pos].set(c_new[:, 0])
+    k_rope = cache["k_rope"].at[rows, pos].set(kr_new[:, 0])
+    w_uk = p["w_uk"]["w"].reshape(r, h, dh)
+    # absorb: q_r [B,H,r]
+    q_r = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32), w_uk.astype(jnp.float32))
+    s_nope = jnp.einsum("bhr,btr->bht", q_r, c_kv.astype(jnp.float32))
+    s_rope = jnp.einsum("bhd,btd->bht", q_rope[:, 0].astype(jnp.float32), k_rope.astype(jnp.float32))
+    size = c_kv.shape[1]
+    valid = jnp.arange(size)[None, :] <= pos[:, None]  # [B, T]
+    logits = (s_nope + s_rope) / math.sqrt(dh + dr)
+    logits = jnp.where(valid[:, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bht,btr->bhr", probs, c_kv.astype(jnp.float32))  # [B,H,r]
+    w_uv = p["w_uv"]["w"].reshape(r, h, dh)
+    out = jnp.einsum("bhr,rhd->bhd", ctx, w_uv.astype(jnp.float32))
+    out = out.reshape(b, 1, h * dh).astype(x_t.dtype)
+    y = linear(p["w_o"], out)
+    return y, {"c_kv": c_kv, "k_rope": k_rope, "pos": pos + 1}
+
+
+# --------------------------------------------------------------------------- #
+# cross attention (whisper decoder)                                            #
+# --------------------------------------------------------------------------- #
+
+
+def init_cross_attention(key: Array, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    dh = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "w_q": init_linear(k1, cfg.d_model, cfg.n_heads * dh, dtype=dtype),
+        "w_k": init_linear(k2, cfg.d_model, cfg.n_kv_heads * dh, dtype=dtype),
+        "w_v": init_linear(k3, cfg.d_model, cfg.n_kv_heads * dh, dtype=dtype),
+        "w_o": init_linear(k4, cfg.n_heads * dh, cfg.d_model, dtype=dtype),
+    }
+
+
+def cross_attention_kv(p: Params, cfg: ArchConfig, enc_out: Array) -> Tuple[Array, Array]:
+    b, s, _ = enc_out.shape
+    dh = cfg.resolved_head_dim
+    k = linear(p["w_k"], enc_out).reshape(b, s, cfg.n_kv_heads, dh)
+    v = linear(p["w_v"], enc_out).reshape(b, s, cfg.n_kv_heads, dh)
+    return k, v
+
+
+def cross_attention(
+    p: Params, cfg: ArchConfig, x: Array, k: Array, v: Array
+) -> Array:
+    b, s, _ = x.shape
+    dh = cfg.resolved_head_dim
+    q = linear(p["w_q"], x).reshape(b, s, cfg.n_heads, dh)
+    q_pos = jnp.arange(s, dtype=jnp.int32)
+    kv_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    out = sdpa(q, k, v, q_pos, kv_pos, causal=False, impl="full")
+    return linear(p["w_o"], out.reshape(b, s, -1))

@@ -1,0 +1,188 @@
+"""The paper's three demo applications as LR-DSL graphs (models/cnn.py).
+
+Compact-but-faithful versions of:
+
+* **style transfer** -- generative network in the style of Zhang & Dana 2017
+  (MSG-Net): conv-in -> downsample convs -> residual blocks (instance norm)
+  -> upsample convs -> conv-out.  Pruned with **column pruning** (paper).
+* **coloring** -- Iizuka et al. 2016: low-level conv stack -> {mid-level,
+  global} branches -> fusion (global feature broadcast + 1x1 conv) ->
+  decoder with upsampling.  Pruned with **kernel-pattern pruning** (paper).
+* **super resolution** -- WDSR-style (Yu et al. 2018): wide-activation
+  residual blocks + pixel-shuffle upsample.  **Kernel-pattern pruning**.
+
+Channel widths are scaled-down (mobile-sized) versions; batch-norm layers are
+inserted where the originals have them so the fold_norm pass has real work.
+These graphs are the substrate of benchmarks/table1_apps.py (Table 1).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.graph.ir import Graph, GraphBuilder
+
+Array = jax.Array
+
+
+def _conv_params(key, c_out, c_in, k, dtype=jnp.float32, bias=True):
+    scale = 1.0 / math.sqrt(c_in * k * k)
+    p = {"w": jax.random.normal(key, (c_out, c_in, k, k), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((c_out,), dtype)
+    return p
+
+
+def _bn_params(c, dtype=jnp.float32):
+    return {
+        "scale": jnp.ones((c,), dtype),
+        "bias": jnp.zeros((c,), dtype),
+        "mean": jnp.zeros((c,), dtype),
+        "var": jnp.ones((c,), dtype),
+    }
+
+
+def _in_params(c, dtype=jnp.float32):
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+
+
+# --------------------------------------------------------------------------- #
+# style transfer                                                               #
+# --------------------------------------------------------------------------- #
+
+
+def build_style_transfer(key: Array, base: int = 32, n_res: int = 5) -> Graph:
+    """conv9-IN-relu, 2x downsample conv3 s2, n_res residual blocks, 2x
+    upsample, conv9-out.  Input [N, 3, H, W]."""
+    keys = iter(jax.random.split(key, 64))
+    b = GraphBuilder(["x"])
+    h = b.add("conv2d", "x", name="conv_in",
+              params=_conv_params(next(keys), base, 3, 9), stride=1)
+    h = b.add("norm", h, name="in_in", params=_in_params(base), kind="instance")
+    h = b.add("activation", h, name="act_in", fn="relu")
+    c = base
+    for i in range(2):  # downsample
+        h = b.add("conv2d", h, name=f"down{i}",
+                  params=_conv_params(next(keys), c * 2, c, 3), stride=2)
+        h = b.add("norm", h, name=f"down{i}_in", params=_in_params(c * 2), kind="instance")
+        h = b.add("activation", h, name=f"down{i}_act", fn="relu")
+        c *= 2
+    for i in range(n_res):  # residual blocks
+        r = b.add("conv2d", h, name=f"res{i}_c1",
+                  params=_conv_params(next(keys), c, c, 3))
+        r = b.add("norm", r, name=f"res{i}_n1", params=_in_params(c), kind="instance")
+        r = b.add("activation", r, name=f"res{i}_a1", fn="relu")
+        r = b.add("conv2d", r, name=f"res{i}_c2",
+                  params=_conv_params(next(keys), c, c, 3))
+        r = b.add("norm", r, name=f"res{i}_n2", params=_in_params(c), kind="instance")
+        h = b.add("add", (h, r), name=f"res{i}_add")
+    for i in range(2):  # upsample
+        h = b.add("upsample", h, name=f"up{i}_u", factor=2)
+        h = b.add("conv2d", h, name=f"up{i}",
+                  params=_conv_params(next(keys), c // 2, c, 3))
+        h = b.add("norm", h, name=f"up{i}_in", params=_in_params(c // 2), kind="instance")
+        h = b.add("activation", h, name=f"up{i}_act", fn="relu")
+        c //= 2
+    out = b.add("conv2d", h, name="conv_out", params=_conv_params(next(keys), 3, c, 9))
+    return b.build(out)
+
+
+# --------------------------------------------------------------------------- #
+# coloring                                                                     #
+# --------------------------------------------------------------------------- #
+
+
+def build_coloring(key: Array, base: int = 32) -> Graph:
+    """Iizuka-style: low-level stack -> (mid branch, global branch) -> fusion
+    -> decoder.  Input [N, 1, H, W] grayscale; output [N, 2, H, W] chroma."""
+    keys = iter(jax.random.split(key, 64))
+    b = GraphBuilder(["x"])
+
+    def conv_bn_relu(h, c_out, c_in, name, stride=1, k=3):
+        h = b.add("conv2d", h, name=name,
+                  params=_conv_params(next(keys), c_out, c_in, k), stride=stride)
+        h = b.add("norm", h, name=name + "_bn", params=_bn_params(c_out), kind="batch")
+        return b.add("activation", h, name=name + "_act", fn="relu")
+
+    # low-level features (strided)
+    h = conv_bn_relu("x", base, 1, "low1", stride=2)
+    h = conv_bn_relu(h, base * 2, base, "low2")
+    h = conv_bn_relu(h, base * 2, base * 2, "low3", stride=2)
+    h = conv_bn_relu(h, base * 4, base * 2, "low4")
+    # mid-level branch
+    mid = conv_bn_relu(h, base * 4, base * 4, "mid1")
+    mid = conv_bn_relu(mid, base * 2, base * 4, "mid2")
+    # global branch: strided convs -> global pool -> fc
+    g = conv_bn_relu(h, base * 4, base * 4, "glob1", stride=2)
+    g = conv_bn_relu(g, base * 4, base * 4, "glob2", stride=2)
+    g = b.add("global_avg_pool", g, name="glob_pool")
+    g = b.add("linear", g, name="glob_fc1",
+              params={"w": jax.random.normal(next(keys), (base * 4, base * 2), jnp.float32) * 0.05,
+                      "b": jnp.zeros((base * 2,), jnp.float32)})
+    g = b.add("activation", g, name="glob_fc1_act", fn="relu")
+    # fusion: broadcast global feature over mid map, concat, 1x1 conv
+    gb = b.add("broadcast_spatial", (g, mid), name="glob_bcast")
+    fused = b.add("concat", (mid, gb), name="fusion_cat", axis=1)
+    h = conv_bn_relu(fused, base * 2, base * 4, "fuse1", k=1)
+    # decoder
+    h = conv_bn_relu(h, base, base * 2, "dec1")
+    h = b.add("upsample", h, name="dec_up1", factor=2)
+    h = conv_bn_relu(h, base, base, "dec2")
+    h = b.add("upsample", h, name="dec_up2", factor=2)
+    h = conv_bn_relu(h, base // 2, base, "dec3")
+    out = b.add("conv2d", h, name="dec_out", params=_conv_params(next(keys), 2, base // 2, 3))
+    out = b.add("activation", out, name="dec_tanh", fn="tanh")
+    return b.build(out)
+
+
+# --------------------------------------------------------------------------- #
+# super resolution (WDSR-style)                                                #
+# --------------------------------------------------------------------------- #
+
+
+def build_super_resolution(
+    key: Array, base: int = 32, n_res: int = 8, expand: int = 4, scale: int = 2
+) -> Graph:
+    """Wide-activation residual body + pixel shuffle.  Input [N, 3, H, W]."""
+    keys = iter(jax.random.split(key, 64))
+    b = GraphBuilder(["x"])
+    h = b.add("conv2d", "x", name="head", params=_conv_params(next(keys), base, 3, 3))
+    body_in = h
+    for i in range(n_res):
+        r = b.add("conv2d", h, name=f"res{i}_expand",
+                  params=_conv_params(next(keys), base * expand, base, 3))
+        r = b.add("activation", r, name=f"res{i}_act", fn="relu")
+        r = b.add("conv2d", r, name=f"res{i}_project",
+                  params=_conv_params(next(keys), base, base * expand, 3))
+        h = b.add("add", (h, r), name=f"res{i}_add")
+    h = b.add("add", (h, body_in), name="global_skip")
+    h = b.add("conv2d", h, name="tail",
+              params=_conv_params(next(keys), 3 * scale * scale, base, 3))
+    out = b.add("pixel_shuffle", h, name="shuffle", factor=scale)
+    return b.build(out)
+
+
+APPS = {
+    "style_transfer": build_style_transfer,
+    "coloring": build_coloring,
+    "super_resolution": build_super_resolution,
+}
+
+#: the paper's pruning recipe per app (section 2: "column pruning for style
+#: transfer and kernel pruning for coloring and super resolution")
+PAPER_RECIPE = {
+    "style_transfer": "column",
+    "coloring": "pattern",
+    "super_resolution": "pattern",
+}
+
+#: Table 1 of the paper (ms on Samsung Galaxy S10, Adreno 640)
+PAPER_TABLE1 = {
+    "style_transfer": {"unpruned": 283.0, "pruned": 178.0, "pruned_compiler": 67.0},
+    "coloring": {"unpruned": 137.0, "pruned": 85.0, "pruned_compiler": 38.0},
+    "super_resolution": {"unpruned": 269.0, "pruned": 192.0, "pruned_compiler": 73.0},
+}

@@ -1,0 +1,203 @@
+"""FFN blocks: gated MLP (SwiGLU/GeGLU) and MoE (DeepSeek-style shared +
+routed experts, top-k, gather-based dispatch).
+
+The gated MLP is where the paper's technique bites hardest in transformers
+(the d_ff GEMMs dominate FLOPs): ``mode`` routes through the PrunedLinear
+execution engines, and ``fused=True`` uses the Pallas fused gate*up kernel.
+
+MoE dispatch is gather-based (sort tokens by expert, capacity-clamped): no
+[T, E, C] one-hot einsum, so dry-run HLO FLOPs reflect real expert compute.
+Expert weight stacks are [E, D, F] -- sharded over the ``model`` axis (EP).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, MoEConfig
+from ..kernels import ops as kops
+from .layers import init_linear, linear
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------- #
+# dense gated FFN                                                              #
+# --------------------------------------------------------------------------- #
+
+
+def init_mlp(
+    key: Array, d_model: int, d_ff: int, dtype=jnp.bfloat16,
+    prune: Optional[Tuple[str, float]] = None,
+) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if prune is not None:
+        # the paper's FFN recipe: column pruning -> packed smaller GEMMs
+        mode, sp = prune
+        from .layers import init_pruned_linear
+
+        return {
+            "w_gate": init_pruned_linear(k1, d_model, d_ff, exec_mode=mode, sparsity=sp, dtype=dtype),
+            "w_up": init_pruned_linear(k2, d_model, d_ff, exec_mode=mode, sparsity=sp, dtype=dtype),
+            "w_down": init_pruned_linear(k3, d_ff, d_model, exec_mode=mode, sparsity=sp, dtype=dtype),
+        }
+    return {
+        "w_gate": init_linear(k1, d_model, d_ff, dtype=dtype),
+        "w_up": init_linear(k2, d_model, d_ff, dtype=dtype),
+        "w_down": init_linear(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def mlp(
+    p: Params,
+    x: Array,
+    *,
+    activation: str = "silu",
+    mode: str = "dense",
+    fused: bool = False,
+) -> Array:
+    if fused and mode in ("dense", "masked") and "w" in p["w_gate"]:
+        wg, wu = p["w_gate"]["w"], p["w_up"]["w"]
+        if mode == "masked":
+            wg = wg * p["w_gate"]["mask"].astype(wg.dtype)
+            wu = wu * p["w_up"]["mask"].astype(wu.dtype)
+        h = kops.ffn_gateup(x, wg, wu, activation=activation)
+    else:
+        g = _linear_auto(p["w_gate"], x, mode, activation=activation)
+        u = _linear_auto(p["w_up"], x, mode)
+        h = g * u
+    return _linear_auto(p["w_down"], h, mode)
+
+
+def _linear_auto(p: Params, x: Array, mode: str = "dense", activation=None) -> Array:
+    if "values" in p:
+        mode = "bsr_xla" if "block_rows" in p else "colpack_xla"
+    return linear(p, x, mode=mode, activation=activation)
+
+
+# --------------------------------------------------------------------------- #
+# MoE                                                                          #
+# --------------------------------------------------------------------------- #
+
+
+def init_moe(key: Array, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    mc = cfg.moe
+    assert mc is not None
+    d, f = cfg.d_model, mc.d_expert
+    k_r, k_g, k_u, k_d, k_s = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(d)
+
+    def stack(k, shape):
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype)
+
+    p: Params = {
+        "router": init_linear(k_r, d, mc.n_routed, dtype=jnp.float32),
+        "experts": {
+            "w_gate": stack(k_g, (mc.n_routed, d, f)),
+            "w_up": stack(k_u, (mc.n_routed, d, f)),
+            "w_down": stack(k_d, (mc.n_routed, f, d)),
+        },
+    }
+    if mc.n_shared:
+        p["shared"] = init_mlp(k_s, d, f * mc.n_shared, dtype)
+    return p
+
+
+def _dispatch_indices(
+    expert_idx: Array, n_experts: int, capacity: int
+) -> Tuple[Array, Array, Array]:
+    """Per-group gather-based dispatch bookkeeping (GShard-style groups).
+
+    Args: expert_idx [G, Tk] expert choice per (group, token-slot).  The group
+    axis is the data-sharded batch axis, so the cumsum below never crosses
+    devices -- the dispatch stays local and only the expert gather/scatter
+    (the intended all-to-all) communicates.
+
+    Returns:
+      gather_idx [G, E, C]  token-slot index filling each expert's slots,
+      slot_valid [G, E, C]  bool,
+      kept       [G, Tk]    this (token, slot) made it under capacity.
+    """
+    g_, tk = expert_idx.shape
+    onehot = jax.nn.one_hot(expert_idx, n_experts, dtype=jnp.int32)  # [G, Tk, E]
+    pos = (jnp.cumsum(onehot, axis=1) - 1) * onehot  # slot within expert
+    pos = pos.sum(axis=-1)  # [G, Tk]
+    kept = pos < capacity
+    flat_slot = expert_idx * capacity + jnp.minimum(pos, capacity - 1)  # [G, Tk]
+    arange_tk = jnp.broadcast_to(jnp.arange(tk, dtype=jnp.int32), (g_, tk))
+    gather_idx = jnp.zeros((g_, n_experts * capacity), jnp.int32)
+    gather_idx = jax.vmap(lambda gi, fs, at, kp: gi.at[fs].set(jnp.where(kp, at, 0)))(
+        gather_idx, flat_slot, arange_tk, kept
+    )
+    slot_valid = jax.vmap(lambda sv, fs, kp: sv.at[fs].set(kp))(
+        jnp.zeros((g_, n_experts * capacity), bool), flat_slot, kept
+    )
+    return (
+        gather_idx.reshape(g_, n_experts, capacity),
+        slot_valid.reshape(g_, n_experts, capacity),
+        kept,
+    )
+
+
+def moe(
+    p: Params,
+    cfg: ArchConfig,
+    x: Array,
+    *,
+    activation: str = "silu",
+) -> Tuple[Array, Array]:
+    """Returns (output, router_aux_loss).  x: [B, S, D].
+
+    Dispatch groups = batch rows (B is the data-sharded axis): routing
+    bookkeeping is device-local; the token gather to the expert-sharded
+    [B, E, C, D] tensor is where GSPMD inserts the all-to-all.
+    Capacity is per group: ``C = S * top_k / E * capacity_factor``.
+    """
+    mc: MoEConfig = cfg.moe
+    b, s, d = x.shape
+    logits = linear(p["router"], x.astype(jnp.float32))  # [B, S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, mc.top_k)  # [B, S, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    capacity = max(int(s * mc.top_k / mc.n_routed * mc.capacity_factor), 4)
+    expert_idx = top_i.reshape(b, s * mc.top_k)  # [B, Tk]
+    gather_idx, slot_valid, kept = _dispatch_indices(expert_idx, mc.n_routed, capacity)
+
+    token_of_slot = gather_idx // mc.top_k  # [B, E, C] token position in row
+    xe = jnp.take_along_axis(
+        x[:, :, None, :],  # [B, S, 1, D]
+        token_of_slot.reshape(b, -1, 1, 1).astype(jnp.int32),
+        axis=1,
+    ).reshape(b, mc.n_routed, capacity, d)
+    xe = xe * slot_valid[..., None].astype(xe.dtype)
+
+    we = p["experts"]
+    gt = jnp.einsum("becd,edf->becf", xe, we["w_gate"])
+    ut = jnp.einsum("becd,edf->becf", xe, we["w_up"])
+    act = jax.nn.silu if activation == "silu" else jax.nn.gelu
+    h = act(gt.astype(jnp.float32)).astype(gt.dtype) * ut
+    ye = jnp.einsum("becf,efd->becd", h, we["w_down"])  # [B, E, C, D]
+
+    # combine: scatter-add expert outputs back to (token, slot), weight, sum
+    flat_tk = gather_idx.reshape(b, -1)  # [B, E*C] -> token-slot index
+    contrib = ye.reshape(b, -1, d) * slot_valid.reshape(b, -1, 1).astype(ye.dtype)
+    y_slots = jax.vmap(
+        lambda ft, ct: jnp.zeros((s * mc.top_k, d), ct.dtype).at[ft].add(ct)
+    )(flat_tk, contrib)
+    w_slots = (top_p.reshape(b, -1, 1) * kept.reshape(b, -1, 1)).astype(ye.dtype)
+    y = (y_slots * w_slots).reshape(b, s, mc.top_k, d).sum(axis=2)
+
+    if "shared" in p:
+        y = y + mlp(p["shared"], x, activation=activation)
+
+    # load-balance auxiliary loss (Switch-style)
+    me = probs.mean(axis=(0, 1))  # [E] mean router prob
+    ce = jax.nn.one_hot(top_i[..., 0], mc.n_routed).mean(axis=(0, 1))  # top-1 load
+    aux = mc.n_routed * jnp.sum(me * ce)
+    return y, aux.astype(jnp.float32)

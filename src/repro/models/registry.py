@@ -1,0 +1,156 @@
+"""Uniform model API over all families + ShapeDtypeStruct input specs.
+
+``get_model(cfg)`` returns a :class:`Model` namespace with:
+
+* ``init(key)``                     -> params
+* ``loss(params, batch)``           -> (scalar, metrics)     [train_*]
+* ``forward(params, batch)``        -> logits                [prefill_*]
+* ``init_cache(batch, max_len)``    -> caches
+* ``decode_step(params, batch, caches)`` -> (logits, caches) [decode_* / long_*]
+* ``input_specs(shape)``            -> (step_name, batch-spec pytree of
+                                        ShapeDtypeStruct, cache specs or None)
+
+The same pattern as shannon/kernels: weak-type-correct ShapeDtypeStructs,
+shardable, zero device allocation -- the multi-pod dry-run lowers every cell
+from these.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from . import encdec as encdec_mod
+from . import transformer as lm_mod
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[[Array], Params]
+    loss: Callable[[Params, Dict[str, Array]], Tuple[Array, Dict]]
+    forward: Callable[[Params, Dict[str, Array]], Array]
+    init_cache: Callable[[int, int], Any]
+    decode_step: Callable[[Params, Dict[str, Array], Any], Tuple[Array, Any]]
+    input_specs: Callable[[ShapeConfig], Tuple[str, Dict[str, Any], Any]]
+
+
+def _token_spec(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def get_model(cfg: ArchConfig, *, attn_impl: str = "auto") -> Model:
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.is_encdec:
+        return _encdec_model(cfg, dtype)
+    return _lm_model(cfg, dtype, attn_impl)
+
+
+# --------------------------------------------------------------------------- #
+# decoder-only (dense / moe / vlm / ssm / hybrid)                              #
+# --------------------------------------------------------------------------- #
+
+
+def _lm_model(cfg: ArchConfig, dtype, attn_impl: str) -> Model:
+    is_vlm = cfg.vision_tokens > 0
+
+    def init(key):
+        return lm_mod.init_lm(key, cfg)
+
+    def loss(params, batch):
+        return lm_mod.loss_fn(params, cfg, batch, attn_impl=attn_impl)
+
+    def forward(params, batch):
+        return lm_mod.forward(
+            params, cfg, batch["tokens"],
+            patch_embeds=batch.get("patch_embeds"), attn_impl=attn_impl,
+        )[0]
+
+    def init_cache(batch, max_len):
+        return lm_mod.init_cache(cfg, batch, max_len, dtype)
+
+    def decode_step(params, batch, caches):
+        return lm_mod.decode_step(params, cfg, batch["tokens_t"], caches)
+
+    def input_specs(shape: ShapeConfig):
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            batch = {"tokens": _token_spec(b, s), "labels": _token_spec(b, s)}
+            if is_vlm:
+                text = s - cfg.vision_tokens
+                batch = {
+                    "tokens": _token_spec(b, text),
+                    "labels": _token_spec(b, text),
+                    "patch_embeds": jax.ShapeDtypeStruct(
+                        (b, cfg.vision_tokens, cfg.d_model), dtype
+                    ),
+                }
+            return "train_step", batch, None
+        if shape.kind == "prefill":
+            batch = {"tokens": _token_spec(b, s)}
+            if is_vlm:
+                batch["tokens"] = _token_spec(b, s - cfg.vision_tokens)
+                batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.vision_tokens, cfg.d_model), dtype
+                )
+            return "prefill", batch, None
+        # decode: one new token against a cache of size seq_len
+        cache_specs = jax.eval_shape(lambda: init_cache(b, s))
+        return "serve_step", {"tokens_t": _token_spec(b, 1)}, cache_specs
+
+    return Model(cfg, init, loss, forward, init_cache, decode_step, input_specs)
+
+
+# --------------------------------------------------------------------------- #
+# encoder-decoder (whisper)                                                    #
+# --------------------------------------------------------------------------- #
+
+
+def _encdec_model(cfg: ArchConfig, dtype) -> Model:
+    def init(key):
+        return encdec_mod.init_encdec(key, cfg)
+
+    def loss(params, batch):
+        return encdec_mod.loss_fn(params, cfg, batch)
+
+    def forward(params, batch):
+        enc = encdec_mod.encode(params, cfg, batch["frames"])
+        return encdec_mod.decode_train(params, cfg, batch["tokens"], enc)
+
+    def init_cache(batch, max_len):
+        return encdec_mod.init_cache(cfg, batch, max_len, dtype=dtype)
+
+    def decode_step(params, batch, caches):
+        # cross-KV rides along in ``caches`` as (self_caches, cross_kv)
+        self_caches, cross_kv = caches
+        logits, self_caches = encdec_mod.decode_step(
+            params, cfg, batch["tokens_t"], self_caches, cross_kv
+        )
+        return logits, (self_caches, cross_kv)
+
+    def input_specs(shape: ShapeConfig):
+        b, s = shape.global_batch, shape.seq_len
+        frames = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), dtype)
+        if shape.kind == "train":
+            return (
+                "train_step",
+                {"frames": frames, "tokens": _token_spec(b, s), "labels": _token_spec(b, s)},
+                None,
+            )
+        if shape.kind == "prefill":
+            return "prefill", {"frames": frames, "tokens": _token_spec(b, s)}, None
+        self_caches = jax.eval_shape(lambda: init_cache(b, s))
+        dh = cfg.resolved_head_dim
+        kv = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.n_kv_heads, dh), dtype)
+        cross_kv = [(kv, kv) for _ in range(cfg.n_layers)]
+        return "serve_step", {"tokens_t": _token_spec(b, 1)}, (self_caches, cross_kv)
+
+    return Model(cfg, init, loss, forward, init_cache, decode_step, input_specs)

@@ -1,0 +1,111 @@
+"""RG-LRU recurrent block (Griffin, arXiv:2402.19427) for RecurrentGemma.
+
+The recurrent block: x -> (linear branch, gate branch); linear branch goes
+conv1d -> RG-LRU; output = out_proj(rglru_out * gelu(gate)).
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_r x_t)          recurrence gate
+    i_t = sigmoid(W_i x_t)          input gate
+    a_t = a^(c * r_t)               with a = sigmoid(Lambda), c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Full-sequence form uses ``jax.lax.associative_scan`` over the affine maps
+(h -> a*h + b), giving O(log S) depth -- the TPU-friendly way to run a linear
+recurrence at train/prefill time.  Decode is the plain recurrence with a
+[B, W] state -- constant memory, so recurrentgemma runs ``long_500k``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import causal_conv1d, conv1d_step, init_conv1d, init_linear, linear
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+_C = 8.0  # Griffin's fixed exponent scale
+
+
+def _width(cfg: ArchConfig) -> int:
+    return cfg.recurrent.lru_width or cfg.d_model
+
+
+def init_rglru_block(key: Array, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    w = _width(cfg)
+    keys = jax.random.split(key, 6)
+    return {
+        "in_proj": init_linear(keys[0], cfg.d_model, w, dtype=dtype),
+        "gate_proj": init_linear(keys[1], cfg.d_model, w, dtype=dtype),
+        "conv": init_conv1d(keys[2], w, cfg.recurrent.d_conv, dtype=dtype),
+        "w_r": init_linear(keys[3], w, w, dtype=dtype),
+        "w_i": init_linear(keys[4], w, w, dtype=dtype),
+        # Lambda init so a = sigmoid(Lambda)^c in ~(0.9, 0.999)
+        "lam": jnp.log(jnp.linspace(0.9, 0.999, w) ** (1.0 / _C) /
+                       (1 - jnp.linspace(0.9, 0.999, w) ** (1.0 / _C))).astype(jnp.float32),
+        "out_proj": init_linear(keys[5], w, cfg.d_model, dtype=dtype),
+    }
+
+
+def _gates(p: Params, x: Array):
+    """x: [..., W] (post conv).  Returns (a, gated_input) in f32."""
+    r = jax.nn.sigmoid(linear(p["w_r"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(linear(p["w_i"], x).astype(jnp.float32))
+    log_a_base = jax.nn.log_sigmoid(p["lam"])  # log a_base, [W]
+    log_a = _C * r * log_a_base  # [..., W]
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x.astype(jnp.float32))
+    return a, b
+
+
+def rglru_block(p: Params, cfg: ArchConfig, x: Array, *, return_state: bool = False):
+    """Full-sequence recurrent block.  x: [B, S, D].
+
+    ``return_state=True`` also returns the decode cache (final h + conv
+    window) for chunked prefill."""
+    gate = jax.nn.gelu(linear(p["gate_proj"], x).astype(jnp.float32))
+    u_raw = linear(p["in_proj"], x)
+    u = causal_conv1d(p["conv"], u_raw)
+    a, b = _gates(p, u)  # [B, S, W] each, f32
+
+    # associative scan over affine maps h -> a h + b along S
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h * gate).astype(x.dtype)
+    out = linear(p["out_proj"], y)
+    if not return_state:
+        return out
+    width = p["conv"]["w"].shape[0]
+    pad = jnp.pad(u_raw, ((0, 0), (width - 1, 0), (0, 0)))
+    cache = {"h": h[:, -1], "conv": pad[:, -(width - 1):, :]}
+    return out, cache
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> Params:
+    w = _width(cfg)
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.recurrent.d_conv - 1, w), dtype),
+    }
+
+
+def rglru_step(
+    p: Params, cfg: ArchConfig, x_t: Array, cache: Params
+) -> Tuple[Array, Params]:
+    """One decode step.  x_t: [B, 1, D]."""
+    gate = jax.nn.gelu(linear(p["gate_proj"], x_t[:, 0]).astype(jnp.float32))
+    u = linear(p["in_proj"], x_t[:, 0])
+    u, conv_win = conv1d_step(p["conv"], cache["conv"], u)
+    a, b = _gates(p, u)  # [B, W]
+    h = a * cache["h"] + b
+    y = (h * gate).astype(x_t.dtype)[:, None, :]
+    return linear(p["out_proj"], y), {"h": h, "conv": conv_win}

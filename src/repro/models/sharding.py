@@ -1,0 +1,107 @@
+"""Path-pattern -> PartitionSpec rules (MaxText-style logical sharding).
+
+Tensor-parallel layout over the ``model`` mesh axis; batch over
+``("pod","data")`` (or ``("data",)`` single-pod).  Rules are ordered; first
+substring match on the ``jax.tree_util.keystr`` path wins.  Anything
+unmatched is replicated -- safe default for norms/scalars.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_pspecs", "param_shardings", "batch_spec", "DEFAULT_RULES", "FSDP_RULES"]
+
+PyTree = Any
+
+# (substring-regex, spec) -- specs written with "model" TP axis only; the
+# batch axes never appear in parameter specs.
+DEFAULT_RULES: List[Tuple[str, P]] = [
+    # embeddings / unembedding: vocab-sharded
+    (r"\['embed'\].*table", P("model", None)),
+    (r"\['lm_head'\].*\['w'\]", P(None, "model")),
+    # MoE expert stacks [E, D, F]: expert-parallel
+    (r"\['experts'\]\['w_gate'\]", P("model", None, None)),
+    (r"\['experts'\]\['w_up'\]", P("model", None, None)),
+    (r"\['experts'\]\['w_down'\]", P("model", None, None)),
+    (r"\['router'\]", P(None)),
+    # attention: heads over model
+    (r"\['(w_q|w_k|w_v|w_uq|w_uk|w_uv)'\]\['w'\]", P(None, "model")),
+    (r"\['(w_q|w_k|w_v|w_uq|w_uk|w_uv)'\]\['b'\]", P("model")),
+    (r"\['w_o'\]\['w'\]", P("model", None)),
+    (r"\['(w_dq|w_dkv|w_kr)'\]\['w'\]", P(None, None)),  # small latent projs
+    # gated FFN: column-parallel in, row-parallel out
+    (r"\['(w_gate|w_up|in_proj|gate_proj|w_r|w_i)'\]\['w'\]", P(None, "model")),
+    (r"\['(w_gate|w_up|in_proj|gate_proj|w_r|w_i)'\]\['b'\]", P("model")),
+    (r"\['(w_down|out_proj)'\]\['w'\]", P("model", None)),
+    # packed sparse weights: PBCSR values [Nb, S, bm, bn] -> output-column
+    # sharded (block-cols over model); ColumnCompact values like the dense w.
+    (r"\['values'\]", P("model", None, None, None)),
+    (r"\['block_rows'\]", P("model", None)),
+    # conv1d stems, norms, scalars: replicated
+]
+
+
+# FSDP variant: weights additionally sharded over ``data`` so >100B-param
+# configs (deepseek-v2-236b) fit per-chip HBM; GSPMD all-gathers shards at
+# use sites (the memory <-> collective trade recorded in section Roofline).
+FSDP_RULES: List[Tuple[str, P]] = [
+    (r"\['embed'\].*table", P("model", "data")),
+    (r"\['lm_head'\]\['w'\]", P("data", "model")),
+    (r"\['experts'\]\['w_gate'\]", P("model", "data", None)),
+    (r"\['experts'\]\['w_up'\]", P("model", "data", None)),
+    (r"\['experts'\]\['w_down'\]", P("model", "data", None)),
+    (r"\['router'\]", P(None)),
+    (r"\['(w_q|w_k|w_v|w_uq|w_uk|w_uv)'\]\['w'\]", P("data", "model")),
+    (r"\['(w_q|w_k|w_v|w_uq|w_uk|w_uv)'\]\['b'\]", P("model")),
+    (r"\['w_o'\]\['w'\]", P("model", "data")),
+    (r"\['(w_dq|w_dkv|w_kr)'\]\['w'\]", P("data", None)),
+    (r"\['(w_gate|w_up|in_proj|gate_proj|w_r|w_i)'\]\['w'\]", P("data", "model")),
+    (r"\['(w_gate|w_up|in_proj|gate_proj|w_r|w_i)'\]\['b'\]", P("model")),
+    (r"\['(w_down|out_proj)'\]\['w'\]", P("model", "data")),
+    (r"\['values'\]", P("model", None, None, None)),
+    (r"\['block_rows'\]", P("model", None)),
+]
+
+
+def _spec_for(path: str, rules) -> Optional[P]:
+    for pat, spec in rules:
+        if re.search(pat, path):
+            return spec
+    return None
+
+
+def param_pspecs(params: PyTree, rules=None) -> PyTree:
+    """Mirror tree of PartitionSpecs (P() for unmatched leaves)."""
+    rules = DEFAULT_RULES if rules is None else rules
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        s = _spec_for(jax.tree_util.keystr(path), rules)
+        if s is None:
+            specs.append(P())
+            continue
+        nd = getattr(leaf, "ndim", len(getattr(leaf, "shape", ())))
+        if len(s) > nd:  # e.g. a 2-D rule hit a packed 1-D leaf: replicate
+            specs.append(P())
+        else:
+            specs.append(P(*s, *([None] * (nd - len(s)))))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(mesh: Mesh, params: PyTree, rules=None) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_pspecs(params, rules)
+    )
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """Batch axis spec: ('pod','data') when the pod axis exists."""
+    if "pod" in mesh.axis_names:
+        return P(("pod", "data"))
+    return P("data")

@@ -1,0 +1,179 @@
+"""Mamba-2 (SSD, state-space duality) block -- arXiv:2405.21060.
+
+Chunked SSD: the sequence is cut into chunks of length L; within a chunk the
+dual (quadratic, attention-like) form runs on the MXU, across chunks a linear
+recurrence carries the [H, N, P] state.  Decode is the pure recurrence --
+constant state, which is why mamba2 runs the ``long_500k`` shape.
+
+Shapes: x [B, S, D]; inner width P_total = expand*D split into H heads of
+P = head_dim; B/C projections have N = d_state per group (n_groups shared
+across heads).  Gated RMSNorm + out_proj close the block.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import causal_conv1d, conv1d_step, init_conv1d, init_linear, init_rmsnorm, linear, rmsnorm
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def _dims(cfg: ArchConfig):
+    sc = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    n_heads = d_inner // sc.head_dim
+    return d_inner, n_heads, sc.d_state, sc.head_dim, sc.n_groups
+
+
+def init_mamba2(key: Array, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    sc = cfg.ssm
+    d_inner, h, n, p_dim, g = _dims(cfg)
+    d_xbc = d_inner + 2 * g * n
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": init_linear(k1, cfg.d_model, 2 * d_inner + 2 * g * n + h, dtype=dtype),
+        "conv": init_conv1d(k2, d_xbc, sc.d_conv, dtype=dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "gate_norm": init_rmsnorm(d_inner, dtype),
+        "out_proj": init_linear(k3, d_inner, cfg.d_model, dtype=dtype),
+    }
+
+
+def _split_proj(cfg: ArchConfig, proj: Array):
+    d_inner, h, n, p_dim, g = _dims(cfg)
+    z, xbc, dt = jnp.split(proj, [d_inner, 2 * d_inner + 2 * g * n], axis=-1)
+    return z, xbc, dt
+
+
+def _split_xbc(cfg: ArchConfig, xbc: Array):
+    d_inner, h, n, p_dim, g = _dims(cfg)
+    x, bc = jnp.split(xbc, [d_inner], axis=-1)
+    b_proj, c_proj = jnp.split(bc, 2, axis=-1)
+    return x, b_proj, c_proj
+
+
+def mamba2_forward(p: Params, cfg: ArchConfig, x: Array, *, return_state: bool = False):
+    """Full-sequence chunked SSD.  x: [B, S, D] -> [B, S, D].
+
+    ``return_state=True`` additionally returns the decode cache after the
+    sequence (final SSD state + conv window) -- the chunked-prefill path for
+    serving."""
+    sc = cfg.ssm
+    d_inner, h, n, p_dim, g = _dims(cfg)
+    bsz, s, _ = x.shape
+    L = min(sc.chunk, s)
+    while s % L:  # largest chunk <= cfg that divides S (exactness over speed)
+        L -= 1
+    nc = s // L
+
+    proj = linear(p["in_proj"], x)
+    z, xbc_raw, dt = _split_proj(cfg, proj)
+    xbc = jax.nn.silu(causal_conv1d(p["conv"], xbc_raw).astype(jnp.float32)).astype(x.dtype)
+    xs, b_proj, c_proj = _split_xbc(cfg, xbc)
+
+    xs = xs.reshape(bsz, nc, L, h, p_dim).astype(jnp.float32)
+    B = b_proj.reshape(bsz, nc, L, g, n).astype(jnp.float32)
+    C = c_proj.reshape(bsz, nc, L, g, n).astype(jnp.float32)
+    rep = h // g
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    dt = dt.reshape(bsz, nc, L, h)
+    A = -jnp.exp(p["A_log"])  # [H] negative
+    dA = dt * A  # log-decay per step  [B,nc,L,H]
+
+    # cumulative log decay within chunk
+    cum = jnp.cumsum(dA, axis=2)  # [B,nc,L,H]
+    # intra-chunk (dual quadratic form):
+    # Y_intra[t] = sum_{s<=t} (C_t . B_s) exp(cum_t - cum_s) dt_s x_s
+    # mask BEFORE exp: the upper triangle has positive exponents whose inf
+    # would poison gradients through the where (d/dx where(c, inf*0) = nan)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,T,S,H]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.exp(jnp.where(tri[None, None, :, :, None], diff, -1e30))
+    cb = jnp.einsum("bnlgd,bnsgd->bnlsg", C, B)  # [B,nc,T,S,G]
+    cb = jnp.repeat(cb, rep, axis=-1)  # -> [B,nc,T,S,H]
+    att = cb * decay * dt[:, :, None, :, :]  # weight on x_s
+    y_intra = jnp.einsum("bnlsh,bnshp->bnlhp", att, xs)
+
+    # chunk states: S_c = sum_s exp(cum_last - cum_s) dt_s B_s x_s^T  [B,nc,H,N,P]
+    last = cum[:, :, -1:, :]  # [B,nc,1,H]
+    w = jnp.exp(last - cum) * dt  # [B,nc,L,H]
+    Bh = jnp.repeat(B, rep, axis=-2) if g > 1 else jnp.broadcast_to(
+        B, (bsz, nc, L, h, n)
+    ) if g == 1 else B
+    states = jnp.einsum("bnlh,bnlhd,bnlhp->bnhdp", w, Bh, xs)
+
+    # inter-chunk recurrence over nc (python loop: nc known statically)
+    chunk_decay = jnp.exp(last[:, :, 0, :])  # [B,nc,H]
+    hstate = jnp.zeros((bsz, h, n, p_dim), jnp.float32)
+    y_inter_chunks = []
+    Ch = jnp.repeat(C, rep, axis=-2) if g > 1 else jnp.broadcast_to(
+        C, (bsz, nc, L, h, n)
+    ) if g == 1 else C
+    for ci in range(nc):
+        # contribution of h entering this chunk
+        dec_t = jnp.exp(cum[:, ci])  # [B,L,H]
+        y_in = jnp.einsum("blhd,bhdp,blh->blhp", Ch[:, ci], hstate, dec_t)
+        y_inter_chunks.append(y_in)
+        hstate = hstate * chunk_decay[:, ci][:, :, None, None] + states[:, ci]
+    y_inter = jnp.stack(y_inter_chunks, axis=1)  # [B,nc,L,H,P]
+
+    y = y_intra + y_inter + p["D"][None, None, None, :, None] * xs
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = rmsnorm(p["gate_norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), cfg.norm_eps)
+    out = linear(p["out_proj"], y)
+    if not return_state:
+        return out
+    width = p["conv"]["w"].shape[0]
+    pad = jnp.pad(xbc_raw, ((0, 0), (width - 1, 0), (0, 0)))
+    cache = {"state": hstate, "conv": pad[:, -(width - 1):, :]}
+    return out, cache
+
+
+# ------------------------------ decode ------------------------------------- #
+
+
+def init_mamba2_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> Params:
+    sc = cfg.ssm
+    d_inner, h, n, p_dim, g = _dims(cfg)
+    d_xbc = d_inner + 2 * g * n
+    return {
+        "state": jnp.zeros((batch, h, n, p_dim), jnp.float32),
+        "conv": jnp.zeros((batch, sc.d_conv - 1, d_xbc), dtype),
+    }
+
+
+def mamba2_step(
+    p: Params, cfg: ArchConfig, x_t: Array, cache: Params
+) -> Tuple[Array, Params]:
+    """One decode step.  x_t: [B, 1, D]."""
+    d_inner, h, n, p_dim, g = _dims(cfg)
+    bsz = x_t.shape[0]
+    proj = linear(p["in_proj"], x_t[:, 0])  # [B, ...]
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc, conv_win = conv1d_step(p["conv"], cache["conv"], xbc)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x_t.dtype)
+    xs, b_proj, c_proj = _split_xbc(cfg, xbc)
+    xs = xs.reshape(bsz, h, p_dim).astype(jnp.float32)
+    B = b_proj.reshape(bsz, g, n).astype(jnp.float32)
+    C = c_proj.reshape(bsz, g, n).astype(jnp.float32)
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=1)
+    Ch = jnp.repeat(C, rep, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = jnp.exp(dt * -jnp.exp(p["A_log"]))  # [B,H]
+    state = cache["state"] * a[:, :, None, None] + jnp.einsum(
+        "bh,bhd,bhp->bhdp", dt, Bh, xs
+    )
+    y = jnp.einsum("bhd,bhdp->bhp", Ch, state) + p["D"][None, :, None] * xs
+    y = y.reshape(bsz, 1, d_inner).astype(x_t.dtype)
+    y = rmsnorm(p["gate_norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x_t.dtype)[:, None, :], cfg.norm_eps)
+    return linear(p["out_proj"], y), {"state": state, "conv": conv_win}

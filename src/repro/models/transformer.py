@@ -1,0 +1,425 @@
+"""Generic decoder-only LM covering the dense / MoE / SSM / hybrid families.
+
+Every layer has a *block kind*:
+
+* ``attn``       pre-norm GQA (or MLA) + pre-norm FFN (MLP or MoE)
+* ``localattn``  same but sliding-window attention (hybrid archs)
+* ``mamba``      single pre-norm Mamba-2 mixer (no FFN, as in Mamba)
+* ``rec``        pre-norm RG-LRU recurrent block + pre-norm MLP (Griffin)
+
+``block_kinds(cfg)`` derives the per-layer pattern from the ArchConfig;
+``forward`` runs full sequences (train/prefill), ``decode_step`` one token
+against per-layer caches.  Layers are a python list (unrolled lowering =
+exact dry-run HLO accounting; ``cfg.use_scan`` stacks homogeneous layers).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import attention as attn_mod
+from . import ffn as ffn_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .layers import embed, init_embedding, init_linear, init_rmsnorm, linear, rmsnorm
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------- #
+# structure                                                                    #
+# --------------------------------------------------------------------------- #
+
+
+def block_kinds(cfg: ArchConfig) -> List[str]:
+    if cfg.ssm is not None:
+        return ["mamba"] * cfg.n_layers
+    if cfg.recurrent is not None:
+        pat = cfg.recurrent.pattern
+        return [pat[i % len(pat)] for i in range(cfg.n_layers)]
+    return ["attn"] * cfg.n_layers
+
+
+def scan_plan(cfg: ArchConfig) -> Tuple[List[int], int, int, List[int]]:
+    """Layer grouping for scan-mode lowering (compile-time at 512 devices).
+
+    Returns (prefix_layers, unit_len, n_units, suffix_layers): ``prefix`` and
+    ``suffix`` run unrolled (structurally distinct layers, e.g. DeepSeek's
+    dense-FFN layer 0 or a hybrid pattern remainder); the middle
+    ``n_units`` repetitions of the ``unit_len``-layer pattern run as one
+    ``lax.scan`` over stacked params.
+    """
+    kinds = block_kinds(cfg)
+    prefix: List[int] = []
+    start = 0
+    if cfg.moe is not None and cfg.moe.first_dense > 0:
+        prefix = list(range(cfg.moe.first_dense))
+        start = cfg.moe.first_dense
+    unit = len(cfg.recurrent.pattern) if cfg.recurrent is not None else 1
+    body = cfg.n_layers - start
+    n_units = body // unit
+    suffix = list(range(start + n_units * unit, cfg.n_layers))
+    return prefix, unit, n_units, suffix
+
+
+def _attn_kind(cfg: ArchConfig) -> str:
+    return "mla" if cfg.kv_lora_rank else "gqa"
+
+
+def _is_moe_layer(cfg: ArchConfig, i: int) -> bool:
+    return cfg.moe is not None and i >= cfg.moe.first_dense
+
+
+# --------------------------------------------------------------------------- #
+# init                                                                         #
+# --------------------------------------------------------------------------- #
+
+
+def init_layer(key: Array, cfg: ArchConfig, i: int, dtype=jnp.bfloat16) -> Params:
+    kind = block_kinds(cfg)[i]
+    keys = jax.random.split(key, 4)
+    p: Params = {"norm1": init_rmsnorm(cfg.d_model, dtype)}
+    if kind == "mamba":
+        p["mixer"] = ssm_mod.init_mamba2(keys[0], cfg, dtype)
+        return p
+    if kind == "rec":
+        p["mixer"] = rglru_mod.init_rglru_block(keys[0], cfg, dtype)
+    else:  # attn / localattn
+        if _attn_kind(cfg) == "mla":
+            p["attn"] = attn_mod.init_mla(keys[0], cfg, dtype)
+        else:
+            p["attn"] = attn_mod.init_gqa(keys[0], cfg, dtype)
+    p["norm2"] = init_rmsnorm(cfg.d_model, dtype)
+    if kind in ("attn", "localattn") and _is_moe_layer(cfg, i):
+        p["moe"] = ffn_mod.init_moe(keys[1], cfg, dtype)
+    else:
+        prune = None
+        if cfg.prune.enabled:
+            # paper recipe (DESIGN.md section 7): column-prune the FFN
+            prune = ("colpack_xla", cfg.prune.sparsity)
+        p["ffn"] = ffn_mod.init_mlp(keys[1], cfg.d_model, cfg.d_ff, dtype, prune=prune)
+    return p
+
+
+def init_lm(key: Array, cfg: ArchConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    p: Params = {
+        "embed": init_embedding(keys[0], cfg.vocab_padded, cfg.d_model, dtype),
+        "layers": [init_layer(keys[i + 1], cfg, i, dtype) for i in range(cfg.n_layers)],
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_linear(keys[-1], cfg.d_model, cfg.vocab_padded, dtype=dtype)
+    if cfg.vision_tokens:
+        p["vision_proj"] = init_linear(keys[-2], cfg.d_model, cfg.d_model, dtype=dtype)
+    return p
+
+
+# --------------------------------------------------------------------------- #
+# forward (train / prefill)                                                    #
+# --------------------------------------------------------------------------- #
+
+
+def _apply_block(
+    p: Params,
+    cfg: ArchConfig,
+    kind: str,
+    i: int,
+    x: Array,
+    positions: Array,
+    *,
+    prefix_len: int = 0,
+    attn_impl: str = "auto",
+    mode: str = "dense",
+    attn_chunk: int = 1024,
+) -> Tuple[Array, Array]:
+    """Returns (x_out, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind == "mamba":
+        return x + ssm_mod.mamba2_forward(p["mixer"], cfg, h), aux
+    if kind == "rec":
+        mixed = rglru_mod.rglru_block(p["mixer"], cfg, h)
+    elif _attn_kind(cfg) == "mla":
+        mixed = attn_mod.mla_attention(p["attn"], cfg, h, positions, impl=attn_impl)
+    else:
+        window = cfg.recurrent.window if (kind == "localattn" and cfg.recurrent) else None
+        mixed = attn_mod.gqa_attention(
+            p["attn"], cfg, h, positions,
+            window=window, prefix_len=prefix_len, impl=attn_impl, mode=mode,
+            chunk=attn_chunk,
+        )
+    x = x + mixed
+    h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if "moe" in p:
+        y, aux = ffn_mod.moe(p["moe"], cfg, h2, activation=cfg.ffn_activation)
+    else:
+        y = ffn_mod.mlp(p["ffn"], h2, activation=cfg.ffn_activation, mode=mode)
+    return x + y, aux
+
+
+def forward(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: Array,  # [B, S] int32
+    *,
+    patch_embeds: Optional[Array] = None,  # [B, P, D] VLM stub frontend
+    attn_impl: str = "auto",
+    mode: str = "dense",
+    remat: bool = False,
+    layout_scan: bool = False,
+    remat_policy: str = "full",
+    residual_spec=None,
+    attn_chunk: int = 1024,
+) -> Tuple[Array, Array]:
+    """Returns (logits [B, S_text, V], aux_loss).
+
+    ``remat=True`` checkpoints each block (recompute activations in the
+    backward pass) -- the standard memory/compute trade for train_4k at the
+    production mesh.  ``layout_scan=True`` lowers the repeated layer pattern
+    as one ``lax.scan`` over stacked params (see scan_plan) -- compile time
+    at 512 devices stays seconds instead of minutes."""
+    x = embed(params["embed"], tokens)
+    prefix_len = 0
+    if patch_embeds is not None:
+        vis = linear(params["vision_proj"], patch_embeds)
+        x = jnp.concatenate([vis.astype(x.dtype), x], axis=1)
+        prefix_len = patch_embeds.shape[1]
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    kinds = block_kinds(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def run_block(p_, x_, kind, i):
+        def blk(p__, x__):
+            out, aux = _apply_block(
+                p__, cfg, kind, i, x__, positions,
+                prefix_len=prefix_len, attn_impl=attn_impl, mode=mode,
+                attn_chunk=attn_chunk,
+            )
+            if residual_spec is not None:
+                # e.g. sequence parallelism: keep the residual stream sharded
+                # over ('model') along S between blocks
+                out = jax.lax.with_sharding_constraint(out, residual_spec)
+            return out, aux
+
+        if remat:
+            if remat_policy == "dots":
+                # save matmul outputs (incl. the TP-collective results): the
+                # backward pass re-reads instead of recompute+re-communicate
+                blk = jax.checkpoint(
+                    blk, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                )
+            else:
+                blk = jax.checkpoint(blk)
+        return blk(p_, x_)
+
+    if not layout_scan:
+        for i, (p, kind) in enumerate(zip(params["layers"], kinds)):
+            x, aux = run_block(p, x, kind, i)
+            aux_total = aux_total + aux
+    else:
+        prefix, unit, n_units, suffix = scan_plan(cfg)
+        for i in prefix:
+            x, aux = run_block(params["layers"][i], x, kinds[i], i)
+            aux_total = aux_total + aux
+        start = len(prefix)
+        if n_units > 0:
+            # stack each pattern position's layers: dict pos -> [n_units, ...]
+            stacked = {
+                pos: jax.tree.map(
+                    lambda *xs: jnp.stack(xs),
+                    *[params["layers"][start + u * unit + pos] for u in range(n_units)],
+                )
+                for pos in range(unit)
+            }
+
+            def body(carry, unit_params):
+                x_, aux_ = carry
+                for pos in range(unit):
+                    kind = kinds[start + pos]
+                    x_, a = run_block(unit_params[pos], x_, kind, start + pos)
+                    aux_ = aux_ + a
+                return (x_, aux_), None
+
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), stacked)
+        for i in suffix:
+            x, aux = run_block(params["layers"][i], x, kinds[i], i)
+            aux_total = aux_total + aux
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if prefix_len:
+        x = x[:, prefix_len:]
+    logits = _unembed(params, cfg, x)
+    return logits, aux_total
+
+
+def _unembed(params: Params, cfg: ArchConfig, x: Array) -> Array:
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T
+    else:
+        logits = linear(params["lm_head"], x)
+    if cfg.vocab_padded != cfg.vocab:  # mask pad classes (never predicted)
+        pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+        logits = jnp.where(pad_mask, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+def loss_fn(
+    params: Params,
+    cfg: ArchConfig,
+    batch: Dict[str, Array],
+    *,
+    attn_impl: str = "auto",
+    mode: str = "dense",
+    remat: bool = False,
+    layout_scan: bool = False,
+    remat_policy: str = "full",
+    residual_spec=None,
+    attn_chunk: int = 1024,
+) -> Tuple[Array, Dict[str, Array]]:
+    """Next-token cross entropy (+ MoE aux)."""
+    logits, aux = forward(
+        params, cfg, batch["tokens"],
+        patch_embeds=batch.get("patch_embeds"), attn_impl=attn_impl, mode=mode,
+        remat=remat, layout_scan=layout_scan, remat_policy=remat_policy,
+        residual_spec=residual_spec, attn_chunk=attn_chunk,
+    )
+    labels = batch["labels"]
+    # CE via logsumexp: one f32 reduction instead of a full log_softmax copy
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits32, axis=-1)
+    picked = jnp.take_along_axis(logits32, labels[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    weights = batch.get("weights", jnp.ones_like(nll))
+    ce = jnp.sum(nll * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+    aux_w = cfg.moe.router_aux_weight if cfg.moe else 0.0
+    total = ce + aux_w * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+# --------------------------------------------------------------------------- #
+# prefill (forward + populated caches, for the serving engine)                 #
+# --------------------------------------------------------------------------- #
+
+
+def prefill(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: Array,
+    max_len: int,
+    *,
+    patch_embeds: Optional[Array] = None,
+    attn_impl: str = "auto",
+) -> Tuple[Array, List[Params]]:
+    """Returns (logits [B, S_text, V], caches positioned at S)."""
+    x = embed(params["embed"], tokens)
+    prefix_len = 0
+    if patch_embeds is not None:
+        vis = linear(params["vision_proj"], patch_embeds)
+        x = jnp.concatenate([vis.astype(x.dtype), x], axis=1)
+        prefix_len = patch_embeds.shape[1]
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    kinds = block_kinds(cfg)
+    caches: List[Params] = []
+    for i, (p, kind) in enumerate(zip(params["layers"], kinds)):
+        h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        if kind == "mamba":
+            mixed, cache = ssm_mod.mamba2_forward(p["mixer"], cfg, h, return_state=True)
+            x = x + mixed
+            caches.append(cache)
+            continue
+        if kind == "rec":
+            mixed, cache = rglru_mod.rglru_block(p["mixer"], cfg, h, return_state=True)
+        elif _attn_kind(cfg) == "mla":
+            mixed, cache = attn_mod.mla_prefill(
+                p["attn"], cfg, h, positions, max_len, impl=attn_impl
+            )
+        else:
+            window = cfg.recurrent.window if (kind == "localattn" and cfg.recurrent) else None
+            mixed, cache = attn_mod.gqa_prefill(
+                p["attn"], cfg, h, positions, max_len,
+                window=window, prefix_len=prefix_len, impl=attn_impl,
+            )
+        x = x + mixed
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if "moe" in p:
+            y, _ = ffn_mod.moe(p["moe"], cfg, h2, activation=cfg.ffn_activation)
+        else:
+            y = ffn_mod.mlp(p["ffn"], h2, activation=cfg.ffn_activation)
+        x = x + y
+        caches.append(cache)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if prefix_len:
+        x = x[:, prefix_len:]
+    return _unembed(params, cfg, x), caches
+
+
+# --------------------------------------------------------------------------- #
+# decode                                                                       #
+# --------------------------------------------------------------------------- #
+
+
+def init_cache(
+    cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16
+) -> List[Params]:
+    caches: List[Params] = []
+    for i, kind in enumerate(block_kinds(cfg)):
+        if kind == "mamba":
+            caches.append(ssm_mod.init_mamba2_cache(cfg, batch, dtype))
+        elif kind == "rec":
+            caches.append(rglru_mod.init_rglru_cache(cfg, batch, dtype))
+        elif _attn_kind(cfg) == "mla":
+            caches.append(attn_mod.init_mla_cache(cfg, batch, max_len, dtype))
+        else:
+            window = cfg.recurrent.window if (kind == "localattn" and cfg.recurrent) else None
+            caches.append(
+                attn_mod.init_kv_cache(cfg, batch, max_len, window=window, dtype=dtype)
+            )
+    return caches
+
+
+def decode_step(
+    params: Params,
+    cfg: ArchConfig,
+    tokens_t: Array,  # [B, 1] int32
+    caches: List[Params],
+    *,
+    mode: str = "dense",
+) -> Tuple[Array, List[Params]]:
+    """One token for the whole stack.  Returns (logits [B, 1, V], caches)."""
+    x = embed(params["embed"], tokens_t)
+    kinds = block_kinds(cfg)
+    new_caches: List[Params] = []
+    for i, (p, kind, cache) in enumerate(zip(params["layers"], kinds, caches)):
+        h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+        if kind == "mamba":
+            mixed, cache = ssm_mod.mamba2_step(p["mixer"], cfg, h, cache)
+            x = x + mixed
+            new_caches.append(cache)
+            continue
+        if kind == "rec":
+            mixed, cache = rglru_mod.rglru_step(p["mixer"], cfg, h, cache)
+        elif _attn_kind(cfg) == "mla":
+            mixed, cache = attn_mod.mla_decode_step(p["attn"], cfg, h, cache)
+        else:
+            window = cfg.recurrent.window if (kind == "localattn" and cfg.recurrent) else None
+            mixed, cache = attn_mod.gqa_decode_step(
+                p["attn"], cfg, h, cache, window=window, mode=mode
+            )
+        x = x + mixed
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if "moe" in p:
+            y, _ = ffn_mod.moe(p["moe"], cfg, h2, activation=cfg.ffn_activation)
+        else:
+            y = ffn_mod.mlp(p["ffn"], h2, activation=cfg.ffn_activation, mode=mode)
+        x = x + y
+        new_caches.append(cache)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _unembed(params, cfg, x), new_caches

@@ -1,0 +1,200 @@
+"""Batched serving engine: prefill + decode with jit'd steps, greedy/temperature
+sampling, and a slot-based continuous-batching scheduler.
+
+The engine wraps the uniform model API (models/registry.py):
+
+* ``prefill(prompts)``   -- one jitted call filling every layer cache;
+* ``decode(n)``          -- jitted single-token steps appended to outputs;
+* :class:`RequestScheduler` -- fixed-slot continuous batching: finished
+  sequences release their slot, queued requests are spliced into the batch
+  (per-slot cache reset), the decode step never re-compiles.
+
+Pruned serving: pass a model whose params were processed by the compiler
+layer (``exec_mode='bsr'|'colpack'``) -- the engine is agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..models import transformer as lm_mod
+from ..models.registry import Model
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray  # [B, n_steps]
+    logprobs: Optional[np.ndarray] = None
+
+
+class Engine:
+    def __init__(
+        self,
+        model: Model,
+        params: Any,
+        *,
+        batch_size: int,
+        max_len: int,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ):
+        if model.cfg.is_encdec:
+            raise NotImplementedError("use EncDecEngine for whisper-family")
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self.temperature = temperature
+        self._key = jax.random.PRNGKey(seed)
+
+        cfg = self.cfg
+
+        @jax.jit
+        def _prefill(params, tokens, patch_embeds=None):
+            logits, caches = lm_mod.prefill(
+                params, cfg, tokens, max_len, patch_embeds=patch_embeds
+            )
+            return logits[:, -1], caches
+
+        @jax.jit
+        def _decode(params, tok_t, caches):
+            logits, caches = lm_mod.decode_step(params, cfg, tok_t, caches)
+            return logits[:, -1], caches
+
+        self._prefill = _prefill
+        self._decode = _decode
+
+    # ------------------------------------------------------------------ #
+    def _sample(self, logits: Array) -> Array:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.categorical(sub, logits / self.temperature).astype(jnp.int32)
+
+    def generate(
+        self,
+        prompts: Array,  # [B, S] int32
+        n_steps: int,
+        patch_embeds: Optional[Array] = None,
+    ) -> GenerationResult:
+        assert prompts.shape[0] == self.batch_size
+        logits, caches = self._prefill(self.params, prompts, patch_embeds) if (
+            patch_embeds is not None
+        ) else self._prefill(self.params, prompts)
+        out = []
+        tok = self._sample(logits)
+        out.append(tok)
+        for _ in range(n_steps - 1):
+            logits, caches = self._decode(self.params, tok[:, None], caches)
+            tok = self._sample(logits)
+            out.append(tok)
+        return GenerationResult(tokens=np.stack([np.asarray(t) for t in out], axis=1))
+
+
+# --------------------------------------------------------------------------- #
+# continuous batching                                                          #
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [S]
+    max_new: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class RequestScheduler:
+    """Fixed-slot continuous batching over the decode step.
+
+    Each slot owns one row of the batched cache.  When a request finishes
+    (max_new or eos), the slot's cache row is reset and the next queued
+    request is prefilled into it (single-row prefill) while other slots keep
+    decoding -- the standard orca/vLLM-style loop at toy scale.
+    """
+
+    def __init__(self, engine: Engine, eos_id: Optional[int] = None):
+        self.engine = engine
+        self.eos_id = eos_id
+        self.queue: List[Request] = []
+        self.slots: List[Optional[Request]] = [None] * engine.batch_size
+        self._caches = None
+        self._last_tok = np.zeros((engine.batch_size,), np.int32)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if (slot is None or slot.done) and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                # single-row prefill: run the row through prefill and splice
+                logits, caches = self.engine._prefill(
+                    self.engine.params, jnp.asarray(req.prompt[None, :])
+                )
+                tok = int(np.asarray(jnp.argmax(logits, -1))[0])
+                req.generated.append(tok)
+                self._last_tok[i] = tok
+                if self._caches is None:
+                    # first admission: broadcast row cache to full batch
+                    self._caches = jax.tree.map(
+                        lambda c: jnp.concatenate(
+                            [c] * self.engine.batch_size, axis=0
+                        ) if hasattr(c, "ndim") and c.ndim > 0 and c.shape[0] == 1 else c,
+                        caches,
+                    )
+                else:
+                    self._caches = _splice_row(self._caches, caches, i)
+
+    def step(self) -> bool:
+        """One decode tick over all active slots.  Returns False when idle."""
+        self._admit()
+        active = [s for s in self.slots if s is not None and not s.done]
+        if not active:
+            return False
+        logits, self._caches = self.engine._decode(
+            self.engine.params, jnp.asarray(self._last_tok[:, None]), self._caches
+        )
+        toks = np.asarray(jnp.argmax(logits, -1))
+        for i, req in enumerate(self.slots):
+            if req is None or req.done:
+                continue
+            t = int(toks[i])
+            req.generated.append(t)
+            self._last_tok[i] = t
+            if len(req.generated) >= req.max_new or (
+                self.eos_id is not None and t == self.eos_id
+            ):
+                req.done = True
+        return True
+
+    def run(self, max_ticks: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_ticks):
+            if not self.step() and not self.queue:
+                break
+        return [s for s in self.slots if s is not None]
+
+
+def _splice_row(caches, row_caches, i: int):
+    """Write row 0 of ``row_caches`` into row i of the batched ``caches``
+    (leaves whose leading dim is the batch)."""
+
+    def splice(full, row):
+        if not hasattr(full, "ndim") or full.ndim == 0:
+            return full  # scalars (pos counters) stay global
+        return full.at[i].set(row[0])
+
+    return jax.tree.map(splice, caches, row_caches)

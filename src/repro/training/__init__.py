@@ -1,0 +1,6 @@
+from .checkpoint import CheckpointManager, restore, save
+from .compression import CompressionConfig, make_compressed_allreduce
+from .fault_tolerance import Heartbeat, PreemptionHandler, StragglerMonitor, retry
+from .optimizer import AdamWConfig, adamw_init, adamw_update, cosine_schedule, zero1_pspecs
+from .train_loop import TrainState, init_train_state, make_train_step
+from .collective_matmul import ag_matmul, make_overlapped_tp_matmuls, rs_matmul

@@ -1,0 +1,176 @@
+"""Pure-JAX optimizers (no optax in this container): AdamW + schedules +
+global-norm clipping, with optional ZeRO-1 state sharding.
+
+The optimizer state is a pytree mirroring the params, so it shards under
+pjit exactly like them; :func:`zero1_pspecs` additionally spreads the m/v
+moments over the data axis (ZeRO-1) for memory-bound configs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "AdamWConfig",
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "linear_warmup",
+    "global_norm",
+    "clip_by_global_norm",
+    "zero1_pspecs",
+]
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    #: keep Adam moments in this dtype (bf16 halves optimizer HBM; the
+    #: update math still runs in f32)
+    state_dtype: str = "float32"
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: PyTree
+    v: PyTree
+
+
+def adamw_init(params: PyTree, config: AdamWConfig) -> AdamWState:
+    dt = jnp.dtype(config.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def linear_warmup(step, warmup: int):
+    return jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+
+
+def cosine_schedule(step, config: AdamWConfig):
+    warm = linear_warmup(step, config.warmup_steps)
+    t = jnp.clip(
+        (step - config.warmup_steps)
+        / max(config.total_steps - config.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = config.min_lr_frac + (1 - config.min_lr_frac) * cos
+    return config.lr * warm * frac
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    grads: PyTree,
+    state: AdamWState,
+    params: PyTree,
+    config: AdamWConfig,
+) -> Tuple[PyTree, AdamWState, Dict[str, jax.Array]]:
+    """Returns (new_params, new_state, metrics)."""
+    if config.grad_clip:
+        grads, gnorm = clip_by_global_norm(grads, config.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr = cosine_schedule(state.step, config)
+    b1, b2 = config.b1, config.b2
+    sdt = jnp.dtype(config.state_dtype)
+
+    def upd(p, g, m, v):
+        if g.dtype == jax.dtypes.float0:  # non-differentiable leaf (indices)
+            return p, m, v
+        gf = g.astype(jnp.float32)
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = mf / (1 - b1 ** step.astype(jnp.float32))
+        vhat = vf / (1 - b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + config.eps)
+        if config.weight_decay and p.ndim >= 2:  # decay matrices only
+            delta = delta + config.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mf.astype(sdt), vf.astype(sdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        a, b, c = upd(p, g, m, v)
+        new_p.append(a)
+        new_m.append(b)
+        new_v.append(c)
+    return (
+        jax.tree.unflatten(treedef, new_p),
+        AdamWState(step, jax.tree.unflatten(treedef, new_m), jax.tree.unflatten(treedef, new_v)),
+        {"grad_norm": gnorm, "lr": lr},
+    )
+
+
+def zero1_pspecs(
+    param_pspecs: PyTree,
+    params: Optional[PyTree] = None,
+    *,
+    data_axis: str = "data",
+    data_size: int = 0,
+) -> PyTree:
+    """ZeRO-1: shard optimizer moments along the first axis the param spec
+    leaves replicated (classic moment-sharding over data).
+
+    When ``params``/``data_size`` are given, only dims divisible by the data
+    axis are sharded (uneven leaves like positional tables stay replicated).
+    """
+
+    def shard(spec: P, leaf=None) -> P:
+        shape = getattr(leaf, "shape", None)
+        parts = list(spec) if len(spec) else ([None] * (len(shape) if shape else 0))
+        # axis already consumed by the param sharding (e.g. FSDP rules)?
+        used = set()
+        for p in parts:
+            for a in (p if isinstance(p, tuple) else (p,)):
+                used.add(a)
+        if data_axis in used:
+            return spec
+        for i, p in enumerate(parts):
+            if p is None:
+                if shape is not None and data_size and shape[i] % data_size != 0:
+                    continue
+                parts[i] = data_axis
+                return P(*parts)
+        return spec  # fully sharded already (or nothing divisible)
+
+    if params is None:
+        return jax.tree.map(shard, param_pspecs, is_leaf=lambda x: isinstance(x, P))
+    return jax.tree.map(
+        lambda s, l: shard(s, l), param_pspecs, params,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,2 @@
+from .flops import model_flops, param_counts
+from .hlo import collective_bytes, op_histogram

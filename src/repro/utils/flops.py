@@ -1,0 +1,56 @@
+"""Analytic MODEL_FLOPS accounting (roofline numerator, DESIGN.md section 8).
+
+``MODEL_FLOPS = 6 * N * D`` for training, ``2 * N_active * D`` for inference,
+with N the (active) parameter count and D the processed tokens.  Attention
+score FLOPs are excluded by convention (the 6ND rule); the ratio against HLO
+FLOPs therefore dips below 1 for long-context shapes -- expected and noted
+per cell.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+from ..configs.base import ArchConfig, ShapeConfig
+
+__all__ = ["param_counts", "model_flops"]
+
+
+def param_counts(cfg: ArchConfig, params_shapes: Any) -> Dict[str, float]:
+    """(total, active) parameter counts from eval_shape'd params.
+
+    ``active`` scales routed-expert weights by top_k / n_routed and excludes
+    the unembedding-free share the same way the 6ND convention does (we keep
+    embeddings in N, as MaxText/PaLM accounting does).
+    """
+    total = 0
+    active = 0.0
+    flat = jax.tree_util.tree_flatten_with_path(params_shapes)[0]
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        total += n
+        if cfg.moe is not None and "['experts']" in name:
+            active += n * (cfg.moe.top_k / cfg.moe.n_routed)
+        else:
+            active += n
+    return {"total": float(total), "active": float(active)}
+
+
+def model_flops(
+    cfg: ArchConfig, shape: ShapeConfig, counts: Dict[str, float]
+) -> float:
+    """Whole-step model FLOPs (all chips together)."""
+    n_active = counts["active"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence; the KV/state read is the memory story,
+    # FLOPs remain 2*N per token
+    return 2.0 * n_active * shape.global_batch

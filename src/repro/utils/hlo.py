@@ -1,0 +1,119 @@
+"""HLO-text analysis: collective-byte accounting for the roofline.
+
+``collective_bytes(hlo_text)`` sums the operand bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+in a compiled (post-SPMD, per-device) module.  cost_analysis() does not
+report these, so we parse the text (DESIGN.md section 8).
+
+Async pairs: ``*-start`` ops carry the operands; their ``*-done`` twins are
+skipped so nothing is double counted.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+__all__ = ["collective_bytes", "DTYPE_BYTES", "op_histogram"]
+
+DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# an operand like "bf16[8,128,1024]" (layout annotations optional)
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# definition line: "%name = <result-type> op(...)" or "name.1 = ..."
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\])\S*)\s+([a-z][\w\-]*)\(([^)]*)\)",
+    re.M,
+)
+_OPERAND_NAME_RE = re.compile(r"%?([\w.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in DTYPE_BYTES:
+        return 0  # token/opaque types
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES[dtype]
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of a result type string (handles tuple types)."""
+    return sum(_shape_bytes(m.group(1), m.group(2)) for m in _SHAPE_RE.finditer(type_str))
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int]]:
+    """Returns (total_operand_bytes, per-op-kind breakdown), per device.
+
+    Post-optimization HLO prints operands as bare names (``all-reduce(%fusion.3)``),
+    so this is a two-pass parse: first map instruction name -> result type,
+    then sum the *operand* types of every collective (falling back to the
+    collective's own result type when an operand is unresolvable, e.g. a
+    parameter declared without a def line in scoped printouts).
+    """
+    types: Dict[str, str] = {}
+    collectives = []
+    for m in _DEF_RE.finditer(hlo_text):
+        name, rtype, op, operands = m.groups()
+        types[name] = rtype
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                base = c
+                break
+            if op == c + "-done":
+                base = "SKIP"
+                break
+        if base and base != "SKIP":
+            collectives.append((base, rtype, operands))
+    per_kind: Dict[str, int] = defaultdict(int)
+    for kind, rtype, operands in collectives:
+        total = 0
+        # operands may be typed (unoptimized HLO) or bare names (optimized)
+        typed = sum(
+            _shape_bytes(sm.group(1), sm.group(2)) for sm in _SHAPE_RE.finditer(operands)
+        )
+        if typed:
+            total = typed
+        else:
+            for om in _OPERAND_NAME_RE.finditer(operands):
+                t = types.get(om.group(1))
+                if t:
+                    total += _type_bytes(t)
+            if total == 0:
+                total = _type_bytes(rtype)  # conservative fallback
+        per_kind[kind] += total
+    return sum(per_kind.values()), dict(per_kind)
+
+
+def op_histogram(hlo_text: str) -> Dict[str, int]:
+    """Counts of interesting ops (fusion/reshape/collective) for perf iteration."""
+    ops = defaultdict(int)
+    for name in (
+        "fusion", "custom-call", "convolution", "dot", "transpose", "reshape",
+        "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+        "collective-permute", "dynamic-slice", "dynamic-update-slice", "while",
+    ):
+        ops[name] = len(re.findall(rf"\b{name}(?:\.\d+)?\(", hlo_text)) + len(
+            re.findall(rf"= [^\n]*?\b{name}\(", hlo_text)
+        )
+    # cheap heuristic is noisy; prefer exact "= <type> op(" matches
+    exact = defaultdict(int)
+    for m in re.finditer(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z][a-z0-9-]*)\(", hlo_text):
+        exact[m.group(1)] += 1
+    return dict(exact)

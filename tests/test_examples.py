@@ -1,0 +1,36 @@
+"""Examples are runnable (subprocess smoke, tiny settings)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=420):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + REPO
+    out = subprocess.run([sys.executable] + args, capture_output=True, text=True,
+                         timeout=timeout, env=env, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_quickstart():
+    out = _run(["examples/quickstart.py"])
+    assert "OK" in out and "BSR kernel vs dense max err" in out
+
+
+@pytest.mark.slow
+def test_train_lm_tiny_with_prune():
+    out = _run(["examples/train_lm_100m.py", "--tiny", "--steps", "25", "--prune"])
+    assert "hard prune" in out and "trained 25 steps" in out
+
+
+@pytest.mark.slow
+def test_serve_pruned_lm():
+    out = _run(["examples/serve_pruned_lm.py"])
+    assert "OK" in out and "continuous batching" in out

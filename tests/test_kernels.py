@@ -1,0 +1,217 @@
+"""Pallas kernel sweeps: shapes x dtypes vs the pure-jnp oracles (ref.py).
+
+All kernels run in interpret mode on CPU (the container has no TPU); the
+BlockSpec tiling paths are identical to the hardware path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pruning import Block, Column, project
+from repro.core.sparse import ColumnCompact, PBCSR, block_mask, plan_reorder, apply_column_perm
+from repro.kernels import bsr_matmul, col_matmul, ffn_gateup, matmul, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32) * 0.1
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------------------- #
+# dense matmul + fused epilogue                                                #
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "m,k,n", [(128, 128, 128), (256, 384, 512), (100, 200, 300), (1, 128, 128)]
+)
+@pytest.mark.parametrize("activation", [None, "relu", "gelu"])
+def test_dense_matmul_sweep(dtype, m, k, n, activation):
+    x = _rand(KEY, (m, k), dtype)
+    w = _rand(jax.random.PRNGKey(1), (k, n), dtype)
+    b = _rand(jax.random.PRNGKey(2), (n,), dtype)
+    got = matmul(x, w, b, activation=activation)
+    want = ref.matmul_ref(x, w, b, activation=activation)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_dense_matmul_batched_leading_dims():
+    x = _rand(KEY, (2, 3, 100), jnp.float32)
+    w = _rand(jax.random.PRNGKey(1), (100, 60), jnp.float32)
+    got = matmul(x, w)
+    want = ref.matmul_ref(x.reshape(-1, 100), w).reshape(2, 3, 60)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
+# block-sparse matmul                                                          #
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("sparsity", [0.3, 0.5, 0.75])
+@pytest.mark.parametrize("bm,bn", [(128, 128), (64, 128)])
+def test_bsr_matmul_sweep(dtype, sparsity, bm, bn):
+    k, n, m = 512, 768, 128
+    w = _rand(jax.random.PRNGKey(1), (k, n), jnp.float32)
+    wp, mask = project(w, Block(sparsity, bm=bm, bn=bn))
+    fmt = PBCSR.from_dense(wp.astype(dtype), mask, bm, bn)
+    x = _rand(KEY, (m, k), dtype)
+    got = bsr_matmul(x, fmt.values, fmt.block_rows)
+    want = ref.matmul_ref(x, wp.astype(dtype))
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_bsr_matmul_with_bias_activation():
+    k, n = 256, 384
+    w = _rand(jax.random.PRNGKey(1), (k, n), jnp.float32)
+    wp, mask = project(w, Block(0.5, bm=128, bn=128))
+    fmt = PBCSR.from_dense(wp, mask, 128, 128)
+    x = _rand(KEY, (64, k), jnp.float32)
+    b = _rand(jax.random.PRNGKey(2), (n,), jnp.float32)
+    got = bsr_matmul(x, fmt.values, fmt.block_rows, b, activation="silu")
+    want = ref.matmul_ref(x, wp, b, activation="silu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_bsr_matmul_banded_matches_reordered_dense():
+    """Unbalanced mask -> reorder plan -> banded execution == dense."""
+    k, n = 512, 768
+    w = _rand(jax.random.PRNGKey(3), (k, n), jnp.float32)
+    wp, mask = project(w, Block(0.6, bm=128, bn=128, balanced=False))
+    bm_ = np.asarray(block_mask(mask, 128, 128))
+    plan = plan_reorder(bm_, max_bands=3)
+    w_perm = apply_column_perm(wp, plan.order, 128)
+    m_perm = apply_column_perm(mask, plan.order, 128)
+    fmt = PBCSR.from_dense(w_perm, m_perm, 128, 128)
+    x = _rand(KEY, (64, k), jnp.float32)
+    bands = [(b.start, b.stop, b.count) for b in plan.bands]
+    got = bsr_matmul(x, fmt.values, fmt.block_rows, bands=bands)
+    want = ref.matmul_ref(x, w_perm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_bsr_padding_blocks_are_exact_zero_contributions():
+    """-1 padded slots must add exactly nothing (not read garbage)."""
+    k, n, bmk = 256, 256, 128
+    vals = jnp.zeros((2, 2, bmk, bmk), jnp.float32)
+    vals = vals.at[0, 0].set(jnp.eye(bmk))
+    rows = jnp.array([[0, -1], [1, -1]], jnp.int32)
+    x = _rand(KEY, (128, k), jnp.float32)
+    got = bsr_matmul(x, vals, rows)
+    want = jnp.concatenate([x[:, :128], jnp.zeros((128, 128))], axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(0, 3), st.sampled_from([0.4, 0.6]))
+@settings(max_examples=6, deadline=None)
+def test_bsr_matmul_property(seed, sparsity):
+    k, n = 256, 256
+    w = _rand(jax.random.PRNGKey(seed), (k, n), jnp.float32)
+    wp, mask = project(w, Block(sparsity, bm=64, bn=64, balanced=False))
+    fmt = PBCSR.from_dense(wp, mask, 64, 64)
+    x = _rand(jax.random.PRNGKey(seed + 100), (128, k), jnp.float32)
+    got = bsr_matmul(x, fmt.values, fmt.block_rows)
+    want = ref.bsr_matmul_ref(x, fmt.values, fmt.block_rows)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
+# column-pruned matmul + fused FFN                                             #
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_col_matmul(dtype):
+    k, n = 512, 256
+    w = _rand(jax.random.PRNGKey(1), (k, n), jnp.float32)
+    wp, mask = project(w, Column(0.5))
+    cc = ColumnCompact.from_dense(wp.astype(dtype), mask)
+    x = _rand(KEY, (32, k), dtype)
+    got = col_matmul(x, cc.values, cc.kept)
+    want = ref.matmul_ref(x, wp.astype(dtype))
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("activation", ["silu", "gelu"])
+def test_ffn_gateup(dtype, activation):
+    d, f = 300, 250
+    x = _rand(KEY, (2, 17, d), dtype)
+    wg = _rand(jax.random.PRNGKey(1), (d, f), dtype)
+    wu = _rand(jax.random.PRNGKey(2), (d, f), dtype)
+    got = ffn_gateup(x, wg, wu, activation=activation)
+    want = ref.ffn_gateup_ref(x.reshape(-1, d), wg, wu, activation=activation).reshape(2, 17, f)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_bsr_flops_scale_with_density():
+    """Packed sizes scale with density -- the compute-scales-with-density
+    contract (values tensor is the only O(big) buffer)."""
+    k, n = 512, 512
+    w = _rand(KEY, (k, n), jnp.float32)
+    sizes = {}
+    for sp in (0.25, 0.5, 0.75):
+        wp, mask = project(w, Block(sp, bm=128, bn=128))
+        fmt = PBCSR.from_dense(wp, mask, 128, 128)
+        sizes[sp] = int(fmt.values.size)
+    assert sizes[0.75] < sizes[0.5] < sizes[0.25]
+
+
+# --------------------------------------------------------------------------- #
+# flash attention                                                              #
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("sq,skv,d", [(128, 128, 64), (256, 256, 64), (200, 200, 32)])
+def test_flash_attention_causal_sweep(dtype, sq, skv, d):
+    from repro.kernels import attention
+
+    q = _rand(KEY, (2, 2, sq, d), dtype) * 3
+    k = _rand(jax.random.PRNGKey(1), (2, 2, skv, d), dtype) * 3
+    v = _rand(jax.random.PRNGKey(2), (2, 2, skv, d), dtype) * 3
+    got = attention(q, k, v, causal=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+def test_flash_attention_noncausal_and_scale():
+    from repro.kernels import attention
+
+    q = _rand(KEY, (1, 2, 128, 64), jnp.float32) * 3
+    k = _rand(jax.random.PRNGKey(1), (1, 2, 256, 64), jnp.float32) * 3
+    v = _rand(jax.random.PRNGKey(2), (1, 2, 256, 64), jnp.float32) * 3
+    got = attention(q, k, v, causal=False, scale=0.5)
+    want = ref.flash_attention_ref(q, k, v, causal=False, scale=0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_matches_model_sdpa():
+    """The Pallas kernel and the model-side jnp chunked sdpa agree."""
+    from repro.kernels import attention
+    from repro.models.attention import sdpa
+
+    b, h, s, d = 1, 2, 256, 32
+    q = _rand(KEY, (b, h, s, d), jnp.float32) * 3
+    k = _rand(jax.random.PRNGKey(1), (b, h, s, d), jnp.float32) * 3
+    v = _rand(jax.random.PRNGKey(2), (b, h, s, d), jnp.float32) * 3
+    got = attention(q, k, v, causal=True)
+    pos = jnp.arange(s)
+    want = sdpa(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        pos, pos, causal=True, impl="chunked", chunk=64,
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)

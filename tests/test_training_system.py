@@ -1,0 +1,273 @@
+"""System behaviour: train loop (loss decreases), ADMM phases, checkpoint
+save/restore/resume, data determinism, fault-tolerance plumbing, serving."""
+
+import dataclasses
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.pruning import AdmmConfig, tree_sparsity_report, hard_prune
+from repro.data.pipeline import PipelineState, SyntheticPipeline
+from repro.models import get_model
+from repro.serving.engine import Engine, Request, RequestScheduler
+from repro.training.checkpoint import CheckpointManager, restore, save
+from repro.training.fault_tolerance import PreemptionHandler, StragglerMonitor, retry
+from repro.training.optimizer import AdamWConfig, cosine_schedule
+from repro.training.train_loop import TrainState, init_train_state, make_train_step
+from repro.launch.train import default_prune_plan
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(arch="qwen2.5-3b", steps=40, lr=2e-3, prune=False, accum=1):
+    cfg = smoke_config(arch)
+    model = get_model(cfg)
+    pipe = SyntheticPipeline(cfg, batch=8, seq=33, seed=0)
+    opt_cfg = AdamWConfig(lr=lr, total_steps=steps, warmup_steps=2)
+    admm_cfg = AdmmConfig(rho=1e-2, update_every=5) if prune else None
+    plan = default_prune_plan(0.5) if prune else None
+    params = model.init(KEY)
+    state = init_train_state(params, opt_cfg, admm_cfg=admm_cfg, prune_plan=plan)
+    step = jax.jit(make_train_step(model.loss, opt_cfg, admm_cfg=admm_cfg, accum=accum))
+    return cfg, model, pipe, opt_cfg, state, step
+
+
+def test_train_loss_decreases():
+    cfg, model, pipe, opt_cfg, state, step = _setup(steps=30)
+    losses = []
+    for _ in range(30):
+        batch = {k: jnp.asarray(v) for k, v in pipe.next().items()}
+        state, m = step(state, batch)
+        losses.append(float(m["ce"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1, losses[:3] + losses[-3:]
+
+
+def test_grad_accumulation_matches_full_batch():
+    cfg, model, pipe, opt_cfg, state, _ = _setup()
+    batch = {k: jnp.asarray(v) for k, v in pipe.next().items()}
+    step1 = jax.jit(make_train_step(model.loss, opt_cfg, accum=1))
+    step4 = jax.jit(make_train_step(model.loss, opt_cfg, accum=4))
+    s1, m1 = step1(state, batch)
+    s4, m4 = step4(state, batch)
+    # same mean gradient -> same updated params (up to accum-order fp noise)
+    d = jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max()),
+        s1.params, s4.params,
+    )
+    assert max(jax.tree.leaves(d)) < 5e-3
+
+
+def test_admm_full_pipeline_prunes_and_recovers():
+    cfg, model, pipe, opt_cfg, state, step = _setup(steps=40, prune=True)
+    for _ in range(20):
+        batch = {k: jnp.asarray(v) for k, v in pipe.next().items()}
+        state, m = step(state, batch)
+    assert state.admm is not None and float(m["primal_residual"]) > 0
+    pruned, masks = hard_prune(state.params, state.admm)
+    rep = tree_sparsity_report(pruned, masks)
+    assert rep["pruned_global"] == pytest.approx(0.5, abs=0.05)
+    # masked fine-tune: sparsity is preserved across steps
+    state2 = TrainState(params=pruned, opt=state.opt, admm=None, masks=masks)
+    step2 = jax.jit(make_train_step(model.loss, opt_cfg))
+    for _ in range(5):
+        batch = {k: jnp.asarray(v) for k, v in pipe.next().items()}
+        state2, m2 = step2(state2, batch)
+    rep2 = tree_sparsity_report(state2.params, masks)
+    assert rep2["pruned_global"] == pytest.approx(rep["pruned_global"], abs=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# checkpointing                                                                #
+# --------------------------------------------------------------------------- #
+
+
+def test_checkpoint_roundtrip_and_resume(tmp_path):
+    cfg, model, pipe, opt_cfg, state, step = _setup(steps=20)
+    mgr = CheckpointManager(str(tmp_path), save_every=5, keep=2)
+    for i in range(10):
+        batch = {k: jnp.asarray(v) for k, v in pipe.next().items()}
+        state, _ = step(state, batch)
+        mgr.maybe_save(i + 1, (state, pipe.state.to_dict()))
+    # keep=2: only the last two checkpoints remain
+    from repro.training.checkpoint import all_steps
+
+    assert all_steps(str(tmp_path)) == [5, 10]
+    (restored, data_state), at = mgr.restore_latest((state, pipe.state.to_dict()))
+    assert at == 10 and int(data_state["data_step"]) == 10
+    d = jax.tree.map(
+        lambda a, b: float(jnp.abs(jnp.asarray(a, jnp.float32) - jnp.asarray(b, jnp.float32)).max()),
+        jax.tree.leaves(restored.params), jax.tree.leaves(state.params),
+    )
+    assert max(jax.tree.leaves(d)) == 0.0
+
+    # resumed run == uninterrupted run (exact determinism)
+    pipe_b = SyntheticPipeline(cfg, batch=8, seq=33, seed=0)
+    pipe_b.state = PipelineState.from_dict(data_state)
+    state_b = restored
+    for _ in range(5):
+        batch = {k: jnp.asarray(v) for k, v in pipe_b.next().items()}
+        state_b, _ = step(state_b, batch)
+    state_a = state
+    for _ in range(5):
+        batch = {k: jnp.asarray(v) for k, v in pipe.next().items()}
+        state_a, _ = step(state_a, batch)
+    d = jax.tree.map(
+        lambda a, b: float(jnp.abs(jnp.asarray(a, jnp.float32) - jnp.asarray(b, jnp.float32)).max()),
+        state_a.params, state_b.params,
+    )
+    assert max(jax.tree.leaves(d)) == 0.0
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A truncated tmp dir never shadows the last good checkpoint."""
+    tree = {"w": jnp.ones((4, 4))}
+    save(str(tmp_path), 1, tree)
+    os.makedirs(tmp_path / "step_000000002.tmp")  # simulated dead write
+    from repro.training.checkpoint import latest_step
+
+    assert latest_step(str(tmp_path)) == 1
+    restored, at = restore(str(tmp_path), tree)
+    assert at == 1
+
+
+def test_checkpoint_rejects_shape_mismatch(tmp_path):
+    save(str(tmp_path), 1, {"w": jnp.ones((4, 4))})
+    with pytest.raises(ValueError):
+        restore(str(tmp_path), {"w": jnp.ones((8, 4))})
+
+
+# --------------------------------------------------------------------------- #
+# data pipeline                                                                #
+# --------------------------------------------------------------------------- #
+
+
+def test_data_determinism_and_sharding():
+    cfg = smoke_config("qwen2.5-3b")
+    a = SyntheticPipeline(cfg, batch=8, seq=16, seed=3)
+    b = SyntheticPipeline(cfg, batch=8, seq=16, seed=3)
+    for _ in range(3):
+        ba, bb = a.next(), b.next()
+        np.testing.assert_array_equal(ba["tokens"], bb["tokens"])
+    # host shards tile the global batch exactly
+    g = a.global_batch(7)
+    parts = [a.host_shard(g, h, 4)["tokens"] for h in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), g["tokens"])
+    # labels are the shifted tokens
+    np.testing.assert_array_equal(g["tokens"][:, 1:], g["labels"][:, :-1])
+
+
+def test_data_is_learnable_structure():
+    """Markov stream: bigram statistics are far from uniform."""
+    cfg = smoke_config("qwen2.5-3b")
+    pipe = SyntheticPipeline(cfg, batch=32, seq=64, seed=0)
+    toks = pipe.next()["tokens"]
+    # successor entropy given prev token must be far below log2(vocab)
+    pairs = {}
+    for row in toks:
+        for a, b in zip(row[:-1], row[1:]):
+            pairs.setdefault(int(a), []).append(int(b))
+    branching = np.mean([len(set(v)) for v in pairs.values() if len(v) >= 3])
+    assert branching < cfg.vocab / 8
+
+
+# --------------------------------------------------------------------------- #
+# fault tolerance                                                              #
+# --------------------------------------------------------------------------- #
+
+
+def test_preemption_handler_flags_signal():
+    with PreemptionHandler() as h:
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert h.should_stop and h.received == signal.SIGTERM
+    # handler restored afterwards
+    assert signal.getsignal(signal.SIGTERM) != h._handler
+
+
+def test_retry_recovers_transients():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("transient")
+        return 42
+
+    assert retry(flaky, retries=5, backoff=0.001) == 42
+    assert calls["n"] == 3
+
+
+def test_straggler_monitor_detects():
+    import time
+
+    mon = StragglerMonitor(threshold=2.0, window=10)
+    for _ in range(6):
+        mon.start_step()
+        time.sleep(0.02)
+        mon.end_step()
+    mon.start_step()
+    time.sleep(0.25)
+    mon.end_step()
+    assert len(mon.straggler_steps) == 1
+
+
+# --------------------------------------------------------------------------- #
+# serving                                                                      #
+# --------------------------------------------------------------------------- #
+
+
+def test_engine_generate_greedy_deterministic():
+    cfg = smoke_config("qwen2.5-3b")
+    model = get_model(cfg)
+    params = model.init(KEY)
+    eng = Engine(model, params, batch_size=2, max_len=64)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    r1 = eng.generate(prompts, 6)
+    r2 = eng.generate(prompts, 6)
+    np.testing.assert_array_equal(r1.tokens, r2.tokens)
+    assert r1.tokens.shape == (2, 6)
+    assert (r1.tokens < cfg.vocab).all(), "pad classes must never be sampled"
+
+
+def test_engine_generate_matches_stepwise_forward():
+    """Greedy generation == argmax over teacher-forced forward logits."""
+    import repro.models.transformer as lm
+
+    cfg = smoke_config("granite-3-2b")
+    model = get_model(cfg)
+    params = model.init(KEY)
+    eng = Engine(model, params, batch_size=1, max_len=32)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (1, 6), 0, cfg.vocab)
+    out = eng.generate(prompts, 4).tokens[0]
+    seq = list(np.asarray(prompts[0]))
+    for t in range(4):
+        logits, _ = lm.forward(params, cfg, jnp.asarray([seq], jnp.int32))
+        nxt = int(jnp.argmax(logits[0, -1]))
+        assert nxt == out[t]
+        seq.append(nxt)
+
+
+def test_request_scheduler_completes_queue():
+    cfg = smoke_config("qwen2.5-3b")
+    model = get_model(cfg)
+    params = model.init(KEY)
+    eng = Engine(model, params, batch_size=2, max_len=48)
+    sched = RequestScheduler(eng)
+    rng = np.random.default_rng(0)
+    for rid in range(5):
+        sched.submit(Request(rid=rid, prompt=rng.integers(0, cfg.vocab, 5).astype(np.int32), max_new=3))
+    sched.run(max_ticks=200)
+    done = [r for r in sched.slots if r is not None] + sched.queue
+    assert all(r.done for r in sched.slots if r is not None)
+    assert not sched.queue  # everything admitted
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    lrs = [float(cosine_schedule(jnp.asarray(s), cfg)) for s in (0, 9, 10, 50, 99)]
+    assert lrs[0] < lrs[1] <= 1.0 + 1e-6
+    assert lrs[-1] == pytest.approx(0.1, abs=0.02)
