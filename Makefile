@@ -1,0 +1,19 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: test test-fast bench deps deps-dev
+
+test:  ## tier-1 verify
+	python -m pytest -x -q
+
+test-fast:  ## compiler + kernel subset (quick signal while iterating)
+	python -m pytest -x -q tests/test_graph_compiler.py tests/test_execution_plan.py tests/test_kernels.py
+
+bench:
+	python -m benchmarks.run
+
+deps:
+	pip install -r requirements.txt
+
+deps-dev:
+	pip install -r requirements-dev.txt

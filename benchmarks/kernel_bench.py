@@ -8,11 +8,15 @@ algorithm, so this bench reports what is *portable* from this container:
 2. measured XLA-CPU wall time of the column-compacted GEMM vs dense (the
    gather+smaller-GEMM path is real on any backend);
 3. storage: PBCSR vs CSR vs dense across sparsities (the paper's
-   "beats CSR" claim).
+   "beats CSR" claim);
+4. block-size auto-tuning: with the tuning cache enabled, sweep the candidate
+   grid once per GEMM shape and report the chosen blocks (the paper's
+   "parameter auto-tuning" applied to Pallas tiling).
 """
 
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -22,6 +26,7 @@ import numpy as np
 from repro.core.pruning import Block, Column, project
 from repro.core.sparse import CSR, ColumnCompact, PBCSR, dense_nbytes
 from repro.kernels import bsr_matmul, matmul, ref
+from repro.kernels import ops as kops
 
 K, N, M = 2048, 2048, 256
 
@@ -83,10 +88,38 @@ def bench_storage():
         print(f"storage,{sp},{d},{csr.nbytes},{pb.nbytes},{csr.nbytes/max(pb.nbytes,1):.2f}x")
 
 
+def bench_tuned_blocks():
+    """Enable the tuning cache, trigger one sweep per shape, report winners.
+
+    Shapes stay small because the container runs Pallas in interpret mode;
+    on real TPU hardware the same sweep times the compiled kernels.
+    """
+    cache = kops.tuning_cache()
+    prev_enabled, prev_entries = cache.enabled, dict(cache.entries)
+    cache.clear()
+    cache.enabled = True
+    try:
+        shapes = [(8, 256, 256), (32, 512, 256), (8, 128, 512)]
+        for m, n, k in shapes:
+            x = jax.random.normal(jax.random.PRNGKey(0), (m, k)) * 0.1
+            w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.1
+            matmul(x, w)  # miss -> sweep -> cached
+            matmul(x, w)  # hit
+        assert cache.sweeps == len(shapes), (cache.sweeps, len(shapes))
+        print("tuning," + cache.report().replace("\n", "\ntuning,"))
+        out = os.environ.get("REPRO_TUNE_CACHE")
+        if out:
+            print(f"tuning,saved,{cache.save(out)}")
+    finally:
+        cache.enabled = prev_enabled
+        cache.entries = prev_entries
+
+
 def main():
     bench_bsr_compute_scaling()
     bench_colcompact_walltime()
     bench_storage()
+    bench_tuned_blocks()
 
 
 if __name__ == "__main__":

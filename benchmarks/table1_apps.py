@@ -19,68 +19,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import lower, optimize
+from repro.core.graph import compile_plan, lower, optimize
+from repro.utils.jax_compat import cost_analysis
 from repro.core.graph.ir import Graph
-from repro.core.pruning import Column, PatternKernel, project
-from repro.core.pruning.projections import _pattern_library
-from repro.models.cnn import APPS, PAPER_RECIPE, PAPER_TABLE1
+from repro.models.cnn import (  # noqa: F401  (re-exported for tests/scripts)
+    APPS,
+    PAPER_RECIPE,
+    PAPER_TABLE1,
+    _channel_mask,
+    _pattern_mask,
+    app_masks,
+)
 
 INPUT_SHAPES = {
     "style_transfer": (1, 3, 128, 128),
     "coloring": (1, 1, 128, 128),
     "super_resolution": (1, 3, 96, 96),
 }
-
-
-# --------------------------------------------------------------------------- #
-# the paper's pruning recipes on conv graphs                                   #
-# --------------------------------------------------------------------------- #
-
-
-def _channel_mask(w, keep_frac: float):
-    """Kill the lowest-energy input channels entirely.  [Co, Ci, kh, kw]."""
-    energy = jnp.sum(w.astype(jnp.float32) ** 2, axis=(0, 2, 3))  # [Ci]
-    ci = w.shape[1]
-    n_keep = max(1, int(round(ci * keep_frac)))
-    thresh = jnp.sort(energy)[ci - n_keep]
-    return (energy >= thresh).astype(w.dtype)[None, :, None, None] * jnp.ones_like(w)
-
-
-def _pattern_mask(w, connectivity_channels: float):
-    """Per-kernel best pattern + channel-granular connectivity pruning."""
-    st = PatternKernel()
-    _, mask = project(w, st)
-    if connectivity_channels > 0:
-        mask = mask * _channel_mask(w, 1.0 - connectivity_channels)
-    return mask
-
-
-def app_masks(g: Graph, app: str, sparsity: float = 0.5):
-    """Masks + structure metadata per the paper's recipe for ``app``."""
-    recipe = PAPER_RECIPE[app]
-    masks, structures = {}, {}
-    for node in g.nodes:
-        p = g.params.get(node.name, {})
-        w = p.get("w")
-        if w is None:
-            continue
-        if node.op == "conv2d":
-            if w.shape[1] <= 4:  # never prune the image-input conv
-                continue
-            if recipe == "column":
-                # column pruning at channel granularity (TPU-exploitable)
-                masks[node.name] = _channel_mask(w, 1.0 - sparsity)
-                structures[node.name] = Column(sparsity)
-            else:
-                if w.shape[2] != 3:
-                    continue  # patterns are defined for 3x3 kernels
-                masks[node.name] = _pattern_mask(w, sparsity)
-                structures[node.name] = PatternKernel(connectivity=sparsity)
-        elif node.op == "linear" and w.shape[0] >= 64:
-            wp, m = project(w, Column(sparsity))
-            masks[node.name] = m
-            structures[node.name] = Column(sparsity)
-    return masks, structures
 
 
 # --------------------------------------------------------------------------- #
@@ -93,7 +48,7 @@ def count_graph_flops(g: Graph, x_shape: Tuple[int, ...]) -> float:
     x = jax.ShapeDtypeStruct(x_shape, jnp.float32)
     params = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), g.params)
     lowered = jax.jit(fn).lower(params, x)
-    return float(lowered.compile().cost_analysis().get("flops", 0.0))
+    return float(cost_analysis(lowered.compile()).get("flops", 0.0))
 
 
 def graph_param_bytes(g: Graph) -> int:
@@ -126,10 +81,12 @@ def bench_app(app: str, sparsity: float = 0.5, base: int = 32) -> Dict[str, Dict
     }
     t_pruned = _time_call(f_dense, pm, x)
 
-    # 3) pruned + compiler (norm-fold, act-fuse, sparse substitution, DCE)
+    # 3) pruned + compiler (PassManager pipeline -> execution plan)
     go = optimize(g, masks, structures)
-    f_opt = jax.jit(lower(go, use_kernels=False))
+    plan = compile_plan(go, backend="reference")
+    f_opt = jax.jit(plan)
     t_opt = _time_call(f_opt, go.params, x)
+    mem = plan.memory_estimate(jax.ShapeDtypeStruct(INPUT_SHAPES[app], jnp.float32))
 
     flops = {
         "unpruned": count_graph_flops(g, INPUT_SHAPES[app]),
@@ -144,6 +101,8 @@ def bench_app(app: str, sparsity: float = 0.5, base: int = 32) -> Dict[str, Dict
         "param_bytes": bytes_,
         "agreement_max_err": err,
         "paper_ms": PAPER_TABLE1[app],
+        "plan_steps": len(plan.steps),
+        "peak_activation_bytes": mem["peak_activation_bytes"],
     }
 
 
@@ -163,7 +122,8 @@ def main() -> None:
         print(
             f"# {app}: ours {sp:.2f}x end-to-end (paper {psp:.2f}x); "
             f"flop cut {r['flops']['unpruned'] / max(r['flops']['pruned_compiler'],1):.2f}x; "
-            f"agreement {r['agreement_max_err']:.2e}"
+            f"agreement {r['agreement_max_err']:.2e}; "
+            f"plan {r['plan_steps']} steps, peak act {r['peak_activation_bytes']/1e6:.2f} MB"
         )
 
 

@@ -1,3 +1,24 @@
 from .ir import Graph, GraphBuilder, Node
+from .executor import ExecutionPlan, compile_plan, register_op, registered_ops
 from .lowering import lower
-from .passes import dce, fold_gathers, fold_norm, fuse_activation, optimize, substitute_sparse
+from .pass_manager import (
+    DEFAULT_PIPELINE,
+    GraphPass,
+    InvariantViolation,
+    PassContext,
+    PassManager,
+    PassStats,
+    available_passes,
+    get_pass,
+    register_pass,
+)
+from .passes import (
+    cse,
+    dce,
+    fold_gathers,
+    fold_norm,
+    fuse_activation,
+    fuse_elementwise,
+    optimize,
+    substitute_sparse,
+)

@@ -1,186 +1,34 @@
-"""Lower a Graph (LR DSL) to a JAX callable.
+"""Lower a Graph (LR DSL) to a JAX callable -- back-compat shim.
 
-Dense linear / sparse_linear nodes execute through the Pallas kernels
-(:mod:`repro.kernels.ops`); convolutions through ``lax.conv_general_dilated``
-(NCHW); everything else is plain jnp.  The returned function is
-``f(params, *inputs) -> outputs`` with ``params = graph.params`` as a pytree,
-so it jits, grads, and pjits like any JAX function.
+The monolithic if/elif interpreter that used to live here is now the
+op-registry execution-plan compiler in :mod:`.executor`.  :func:`lower` is a
+thin wrapper kept for the old call sites: ``lower(g)(params, *inputs)``
+returns exactly what the plan-based executor computes.
 
-``use_kernels=False`` lowers GEMMs with jnp instead (the XLA-native baseline;
-used on CPU benchmarks where interpret-mode Pallas would measure Python, not
-the algorithm).
+``use_kernels=True`` selects the Pallas-backed handler set, ``False`` the
+pure-jnp reference handlers (the XLA-native baseline; used on CPU benchmarks
+where interpret-mode Pallas would measure Python, not the algorithm).
 """
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional, Sequence
+from typing import Any, Callable, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax import lax
-
-from ...kernels import ops as kops
-from ...kernels import ref as kref
+from .executor import ExecutionPlan, compile_plan
 from .ir import Graph
 
 __all__ = ["lower"]
-
-_ACT = kref._ACT
-
-
-def _conv2d(x, w, b, stride, padding, groups, activation):
-    dn = lax.conv_dimension_numbers(x.shape, w.shape, ("NCHW", "OIHW", "NCHW"))
-    y = lax.conv_general_dilated(
-        x,
-        w,
-        window_strides=(stride, stride),
-        padding=padding,
-        dimension_numbers=dn,
-        feature_group_count=groups,
-    )
-    if b is not None:
-        y = y + b[None, :, None, None]
-    return _ACT[activation](y)
-
-
-def _pixel_shuffle(x, r):
-    n, c, h, w = x.shape
-    x = x.reshape(n, c // (r * r), r, r, h, w)
-    x = x.transpose(0, 1, 4, 2, 5, 3)
-    return x.reshape(n, c // (r * r), h * r, w * r)
 
 
 def lower(
     g: Graph, *, use_kernels: bool = True, interpret: Optional[bool] = None
 ) -> Callable[..., Any]:
-    g.validate()
-    nodes = list(g.nodes)
+    """Compile ``g`` to a callable ``f(params, *inputs) -> outputs``.
 
-    def fn(params: Dict[str, Dict[str, Any]], *args):
-        env: Dict[str, Any] = dict(zip(g.inputs, args))
-        for n in nodes:
-            p = params.get(n.name, {})
-            a = n.attrs
-            x = [env[i] for i in n.inputs]
-            if n.op == "linear":
-                if use_kernels:
-                    y = kops.matmul(
-                        x[0], p["w"], p.get("b"), activation=a.get("activation"),
-                        interpret=interpret,
-                    )
-                else:
-                    y = kref.matmul_ref(
-                        x[0], p["w"], p.get("b"), activation=a.get("activation")
-                    )
-            elif n.op == "sparse_linear":
-                fmt = a["format"]
-                if fmt == "colcompact":
-                    if use_kernels:
-                        y = kops.col_matmul(
-                            x[0], p["values"], p["kept"], p.get("b"),
-                            activation=a.get("activation"), interpret=interpret,
-                        )
-                    else:
-                        y = kref.matmul_ref(
-                            jnp.take(x[0], p["kept"], axis=-1), p["values"],
-                            p.get("b"), activation=a.get("activation"),
-                        )
-                elif fmt == "channelcompact":
-                    if use_kernels:
-                        y = kops.matmul(
-                            x[0], p["values"], p.get("b"),
-                            activation=a.get("activation"), interpret=interpret,
-                        )
-                    else:
-                        y = kref.matmul_ref(
-                            x[0], p["values"], p.get("b"),
-                            activation=a.get("activation"),
-                        )
-                elif fmt == "pbcsr":
-                    if use_kernels:
-                        y = kops.bsr_matmul(
-                            x[0], p["values"], p["block_rows"], p.get("b"),
-                            activation=a.get("activation"),
-                            bands=a.get("bands"), interpret=interpret,
-                        )
-                    else:
-                        y = kref.bsr_matmul_ref(
-                            x[0].reshape(-1, x[0].shape[-1]), p["values"],
-                            p["block_rows"], p.get("b"),
-                            activation=a.get("activation"),
-                        ).reshape(*x[0].shape[:-1], -1)
-                else:
-                    raise NotImplementedError(f"sparse format {fmt}")
-            elif n.op == "conv2d":
-                y = _conv2d(
-                    x[0], p["w"], p.get("b"), a.get("stride", 1),
-                    a.get("padding", "SAME"), a.get("groups", 1),
-                    a.get("activation"),
-                )
-            elif n.op == "norm":
-                kind = a["kind"]
-                eps = a.get("eps", 1e-5)
-                xi = x[0]
-                if kind == "batch":  # inference: stored stats, per-channel (C of NCHW)
-                    s = p["scale"] / jnp.sqrt(p["var"] + eps)
-                    y = (xi - p["mean"][None, :, None, None]) * s[
-                        None, :, None, None
-                    ] + p["bias"][None, :, None, None]
-                elif kind == "instance":  # per (N, C) over spatial
-                    mu = xi.mean(axis=(2, 3), keepdims=True)
-                    var = xi.var(axis=(2, 3), keepdims=True)
-                    y = (xi - mu) / jnp.sqrt(var + eps)
-                    y = y * p["scale"][None, :, None, None] + p["bias"][None, :, None, None]
-                elif kind == "layer":  # over last dim
-                    mu = xi.mean(axis=-1, keepdims=True)
-                    var = xi.var(axis=-1, keepdims=True)
-                    y = (xi - mu) / jnp.sqrt(var + eps) * p["scale"] + p["bias"]
-                else:
-                    raise NotImplementedError(kind)
-            elif n.op == "activation":
-                y = _ACT[a["fn"]](x[0])
-            elif n.op == "add":
-                y = x[0] + x[1]
-            elif n.op == "mul":
-                y = x[0] * x[1]
-            elif n.op == "concat":
-                y = jnp.concatenate(x, axis=a.get("axis", 1))
-            elif n.op == "pixel_shuffle":
-                y = _pixel_shuffle(x[0], a["factor"])
-            elif n.op == "upsample":
-                r = a["factor"]
-                y = jnp.repeat(jnp.repeat(x[0], r, axis=2), r, axis=3)
-            elif n.op == "pad_reflect":
-                pd = a["pad"]
-                y = jnp.pad(x[0], ((0, 0), (0, 0), (pd, pd), (pd, pd)), mode="reflect")
-            elif n.op == "gather_channels":
-                axis = a.get("axis", -1)
-                idx = jnp.asarray(np.asarray(a["idx"]))
-                if a["mode"] == "gather":
-                    y = jnp.take(x[0], idx, axis=axis)
-                else:  # scatter back to width n along axis
-                    xi = x[0]
-                    if axis in (-1, xi.ndim - 1):
-                        shp = xi.shape[:-1] + (a["n"],)
-                        y = jnp.zeros(shp, xi.dtype).at[..., idx].set(xi)
-                    elif axis == 1:
-                        shp = (xi.shape[0], a["n"]) + xi.shape[2:]
-                        y = jnp.zeros(shp, xi.dtype).at[:, idx].set(xi)
-                    else:
-                        raise NotImplementedError(axis)
-            elif n.op == "global_avg_pool":
-                y = x[0].mean(axis=(2, 3))
-            elif n.op == "broadcast_spatial":
-                # fuse a [N, C] global feature into a [N, C, H, W] map
-                y = jnp.broadcast_to(
-                    x[0][:, :, None, None],
-                    (x[0].shape[0], x[0].shape[1], x[1].shape[2], x[1].shape[3]),
-                )
-            else:
-                raise NotImplementedError(f"op {n.op}")
-            env[n.name] = y
-        outs = tuple(env[o] for o in g.outputs)
-        return outs[0] if len(outs) == 1 else outs
-
-    return fn
+    The returned object is an :class:`~.executor.ExecutionPlan`: it jits,
+    grads, and pjits like any JAX function, and additionally exposes
+    ``.summary()`` and ``.memory_estimate(*inputs)``.
+    """
+    backend = "kernel" if use_kernels else "reference"
+    plan: ExecutionPlan = compile_plan(g, backend=backend, interpret=interpret)
+    return plan

@@ -16,7 +16,7 @@ All passes are pure: Graph in, Graph out.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -32,6 +32,8 @@ __all__ = [
     "fuse_activation",
     "substitute_sparse",
     "fold_gathers",
+    "fuse_elementwise",
+    "cse",
     "dce",
     "optimize",
 ]
@@ -316,7 +318,157 @@ def fold_gathers(g: Graph) -> Graph:
 
 
 # --------------------------------------------------------------------------- #
-# 5. dead code elimination                                                     #
+# 5. elementwise-chain fusion                                                  #
+# --------------------------------------------------------------------------- #
+
+_EW_OPS = ("activation", "add", "mul")
+
+
+def _is_elementwise(n: Node) -> bool:
+    return n.op in _EW_OPS or (n.op == "norm" and n.attrs.get("kind") == "layer")
+
+
+def fuse_elementwise(g: Graph) -> Graph:
+    """Collapse straight-line runs of memory-bound elementwise ops
+    (``add``/``mul``/``activation``/``norm(layer)``) into one
+    ``fused_elementwise`` node.
+
+    Each run becomes a single node carrying a ``steps`` program:
+
+    * ``("activation", fn)``
+    * ``("add", i)`` / ``("mul", i)`` -- ``i`` indexes the fused node's
+      ``inputs`` tuple (the side operand of the binary op)
+    * ``("norm_layer", pkey, eps)`` -- layernorm whose scale/bias live in the
+      fused node's params under ``{pkey}_scale`` / ``{pkey}_bias``
+
+    The fused node keeps the *last* chain member's name, so consumers and
+    graph outputs are untouched.  One kernel launch instead of k, one trip
+    through memory instead of k -- the paper's "DSL related optimization" for
+    the non-GEMM glue between layers.
+    """
+    outputs = set(g.outputs)
+    merged: set = set()
+    chains: List[List[Node]] = []
+    for n in g.nodes:
+        if n.name in merged or not _is_elementwise(n):
+            continue
+        chain = [n]
+        while True:
+            cur = chain[-1]
+            if cur.name in outputs:
+                break
+            cons = g.consumers(cur.name)
+            if len(cons) != 1:
+                break
+            nxt = cons[0]
+            if (
+                not _is_elementwise(nxt)
+                or nxt.name in merged
+                or nxt.inputs.count(cur.name) != 1
+            ):
+                break
+            chain.append(nxt)
+        if len(chain) >= 2:
+            chains.append(chain)
+            merged.update(c.name for c in chain)
+
+    if not chains:
+        return g
+
+    nodes = list(g.nodes)
+    params = dict(g.params)
+    for chain in chains:
+        head, tail = chain[0], chain[-1]
+        fused_inputs: List[str] = [head.inputs[0]]
+        fused_params: Dict[str, Any] = {}
+        steps: List[Tuple[Any, ...]] = []
+
+        def side_index(name: str) -> int:
+            if name not in fused_inputs:
+                fused_inputs.append(name)
+            return fused_inputs.index(name)
+
+        prev_name = None  # chain value flows implicitly; head consumes inputs[0]
+        for j, c in enumerate(chain):
+            if c.op == "activation":
+                steps.append(("activation", c.attrs["fn"]))
+            elif c.op in ("add", "mul"):
+                sides = list(c.inputs)
+                if prev_name is not None:
+                    sides.remove(prev_name)
+                else:
+                    sides = sides[1:]  # head: inputs[0] is the chain entry
+                steps.append((c.op, side_index(sides[0])))
+            else:  # norm(layer)
+                pkey = f"s{j}"
+                p = params.pop(c.name)
+                fused_params[f"{pkey}_scale"] = p["scale"]
+                fused_params[f"{pkey}_bias"] = p["bias"]
+                steps.append(("norm_layer", pkey, c.attrs.get("eps", 1e-5)))
+            prev_name = c.name
+
+        fused = Node(
+            op="fused_elementwise",
+            name=tail.name,
+            inputs=tuple(fused_inputs),
+            attrs={"steps": tuple(steps)},
+        )
+        drop = {c.name for c in chain[:-1]}
+        nodes = [fused if n.name == tail.name else n for n in nodes if n.name not in drop]
+        for d in drop:
+            params.pop(d, None)
+        if fused_params:
+            params[tail.name] = fused_params
+    g = dataclasses.replace(g, nodes=nodes, params=params)
+    g.validate()
+    return g
+
+
+# --------------------------------------------------------------------------- #
+# 6. common-subexpression elimination                                          #
+# --------------------------------------------------------------------------- #
+
+
+def _attr_key(v: Any) -> Any:
+    """Hashable fingerprint of an attrs value (arrays by content)."""
+    if isinstance(v, dict):
+        return ("dict",) + tuple(sorted((k, _attr_key(x)) for k, x in v.items()))
+    if isinstance(v, (list, tuple)):
+        return ("seq",) + tuple(_attr_key(x) for x in v)
+    if isinstance(v, (np.ndarray, jnp.ndarray)):
+        a = np.asarray(v)
+        return ("arr", a.shape, str(a.dtype), a.tobytes())
+    return v
+
+
+def cse(g: Graph) -> Graph:
+    """Deduplicate nodes computing the same value: identical op, (resolved)
+    inputs and attrs, and -- for parameterized nodes -- the *same* parameter
+    arrays (identity, not value equality: cheap and never wrong)."""
+    seen: Dict[Any, str] = {}
+    replaced: Dict[str, str] = {}
+    keep: List[Node] = []
+    params = dict(g.params)
+    for n in g.nodes:
+        inputs = tuple(replaced.get(i, i) for i in n.inputs)
+        pfp = tuple(sorted((k, id(v)) for k, v in g.params.get(n.name, {}).items()))
+        key = (n.op, inputs, _attr_key(n.attrs), pfp)
+        if n.op != "input" and key in seen:
+            replaced[n.name] = seen[key]
+            params.pop(n.name, None)
+            continue
+        seen.setdefault(key, n.name)
+        keep.append(n.replace(inputs=inputs))
+    if not replaced:
+        return g
+    outputs = tuple(replaced.get(o, o) for o in g.outputs)
+    g = dataclasses.replace(g, nodes=keep, outputs=outputs, params=params)
+    g.validate()
+    return g
+
+
+# --------------------------------------------------------------------------- #
+# 7. dead code elimination                                                     #
 # --------------------------------------------------------------------------- #
 
 
@@ -339,8 +491,37 @@ def dce(g: Graph) -> Graph:
 
 
 # --------------------------------------------------------------------------- #
-# pipeline                                                                     #
+# registration + pipeline                                                      #
 # --------------------------------------------------------------------------- #
+
+from .pass_manager import (  # noqa: E402  (registry must exist before passes)
+    PassContext,
+    PassManager,
+    no_dead_nodes,
+    no_foldable_batchnorm,
+    params_bound_to_nodes,
+    register_pass,
+)
+
+register_pass("fold_norm", post=(no_foldable_batchnorm, params_bound_to_nodes))(
+    lambda g, ctx: fold_norm(g)
+)
+register_pass("fuse_activation", post=(params_bound_to_nodes,))(
+    lambda g, ctx: fuse_activation(g)
+)
+register_pass("substitute_sparse", needs_masks=True, post=(params_bound_to_nodes,))(
+    lambda g, ctx: substitute_sparse(
+        g, ctx.masks, ctx.structures, max_bands=ctx.max_bands
+    )
+)
+register_pass("fold_gathers", needs_masks=True, post=(params_bound_to_nodes,))(
+    lambda g, ctx: fold_gathers(g)
+)
+register_pass("cse", post=(params_bound_to_nodes,))(lambda g, ctx: cse(g))
+register_pass("fuse_elementwise", post=(params_bound_to_nodes,))(
+    lambda g, ctx: fuse_elementwise(g)
+)
+register_pass("dce", post=(no_dead_nodes, params_bound_to_nodes))(lambda g, ctx: dce(g))
 
 
 def optimize(
@@ -349,11 +530,14 @@ def optimize(
     structures: Optional[Dict[str, Structure]] = None,
     *,
     max_bands: int = 4,
+    pipeline: Optional[Tuple[str, ...]] = None,
 ) -> Graph:
-    """The full deployment pipeline (paper's compiler, end to end)."""
-    g = fold_norm(g)
-    g = fuse_activation(g)
-    if masks:
-        g = substitute_sparse(g, masks, structures or {}, max_bands=max_bands)
-        g = fold_gathers(g)
-    return dce(g)
+    """The full deployment pipeline (paper's compiler, end to end).
+
+    Thin wrapper over :class:`~.pass_manager.PassManager` -- pass ``pipeline``
+    to run a custom ordered subset of registered passes.
+    """
+    ctx = PassContext(
+        masks=masks or {}, structures=structures or {}, max_bands=max_bands
+    )
+    return PassManager(pipeline).run(g, ctx)

@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_compat import tpu_compiler_params as _tpu_compiler_params
+
 from .dense_matmul import _ACTIVATIONS
 
 __all__ = ["bsr_matmul_kernel", "bsr_matmul"]
@@ -137,7 +139,7 @@ def bsr_matmul(
         kern,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

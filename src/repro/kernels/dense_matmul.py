@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_compat import tpu_compiler_params as _tpu_compiler_params
+
 __all__ = ["dense_matmul_kernel", "dense_matmul"]
 
 
@@ -109,7 +111,7 @@ def dense_matmul(
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

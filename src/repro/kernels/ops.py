@@ -3,12 +3,23 @@
 These handle the unglamorous parts -- leading-batch flattening, padding to
 block multiples, interpret-mode selection (CPU container vs real TPU), band
 dispatch for reordered BSR weights -- so models call one function per op.
+
+Block sizes are no longer frozen at 128: when a call does not pin them
+explicitly, they come from the :class:`TuningCache` -- keyed by
+``(op, M, N, K, dtype, format)``, seeded with sane defaults (so tests never
+pay a sweep), and able to sweep a small candidate grid once per shape when
+tuning is enabled (``REPRO_TUNE=1`` or :func:`set_tuning`).  The cache
+persists to JSON (``REPRO_TUNE_CACHE=path`` or ``save``/``load``) -- the
+paper's compiler "parameter auto-tuning" applied to Pallas tiling.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import json
 import os
-from typing import Optional, Sequence, Tuple
+import time
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +31,17 @@ from .dense_matmul import dense_matmul as _dense_matmul
 from .flash_attention import flash_attention as _flash_attention
 from .fused_ffn import ffn_gateup as _ffn_gateup
 
-__all__ = ["interpret_default", "matmul", "bsr_matmul", "col_matmul", "ffn_gateup", "attention"]
+__all__ = [
+    "interpret_default",
+    "matmul",
+    "bsr_matmul",
+    "col_matmul",
+    "ffn_gateup",
+    "attention",
+    "TuningCache",
+    "tuning_cache",
+    "set_tuning",
+]
 
 
 def interpret_default() -> bool:
@@ -46,27 +67,187 @@ def _pad_axis(x: jax.Array, mult: int, axis: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
-def matmul(
-    x: jax.Array,
-    w: jax.Array,
-    bias: Optional[jax.Array] = None,
-    *,
-    activation: Optional[str] = None,
-    block_m: int = 128,
-    block_n: int = 128,
-    block_k: int = 128,
-    interpret: Optional[bool] = None,
-) -> jax.Array:
-    """``act(x @ w + bias)`` for arbitrary leading batch dims via the fused
-    dense Pallas kernel; pads M/N/K to block multiples and slices back."""
-    interpret = interpret_default() if interpret is None else interpret
-    x2, lead = _flatten_batch(x)
+# --------------------------------------------------------------------------- #
+# block-size tuning cache                                                      #
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class TuneEntry:
+    blocks: Tuple[int, ...]
+    source: str  # "default" | "swept" | "loaded"
+    ms: Optional[float] = None
+
+
+class TuningCache:
+    """Per-shape kernel block-size cache, keyed by
+    ``(op, M, N, K, dtype, format)``.
+
+    ``resolve`` returns cached blocks when the key is known; otherwise, with
+    tuning enabled *and* a runner supplied (concrete arrays, not tracers), it
+    sweeps the candidate grid once, stores the winner, and returns it.  With
+    tuning disabled it records + returns the seeded default, so test suites
+    never pay a sweep.
+    """
+
+    #: default blocks per op: matmul family is (block_m, block_n, block_k);
+    #: bsr_matmul tunes only block_m (block_n/k come from the packed format)
+    DEFAULTS: Dict[str, Tuple[int, ...]] = {
+        "matmul": (128, 128, 128),
+        "bsr_matmul": (128,),
+    }
+    #: small sweep grids; TPU lanes want the minor dims at 128 multiples
+    #: (pallas_guide: f32 min tile 8x128, MXU 128x128)
+    CANDIDATES: Dict[str, Tuple[Tuple[int, ...], ...]] = {
+        "matmul": (
+            (128, 128, 128),
+            (64, 128, 128),
+            (256, 128, 128),
+            (128, 256, 128),
+            (128, 128, 256),
+        ),
+        "bsr_matmul": ((64,), (128,), (256,)),
+    }
+
+    def __init__(self, enabled: Optional[bool] = None, path: Optional[str] = None):
+        env = os.environ.get("REPRO_TUNE")
+        self.enabled = (env not in (None, "0", "false", "False")) if enabled is None else enabled
+        self.entries: Dict[str, TuneEntry] = {}
+        self.sweeps = 0  # number of grid sweeps actually executed
+        self.path = path or os.environ.get("REPRO_TUNE_CACHE")
+        if self.path and os.path.exists(self.path):
+            try:
+                self.load(self.path)
+            except (json.JSONDecodeError, KeyError, TypeError, OSError) as e:
+                # a stale/corrupt cache must never brick the import; sweeps
+                # or defaults will repopulate it on the next save
+                import warnings
+
+                warnings.warn(f"ignoring unreadable tuning cache {self.path}: {e}")
+
+    # -- keying -------------------------------------------------------------- #
+    @staticmethod
+    def key(op: str, m: int, n: int, k: int, dtype: Any, fmt: str, interpret: bool) -> str:
+        # interpret-mode timings measure Python, not silicon: never let them
+        # masquerade as (or shadow) real-hardware winners
+        mode = "interpret" if interpret else "hw"
+        return f"{op}|{int(m)}x{int(n)}x{int(k)}|{jnp.dtype(dtype).name}|{fmt}|{mode}"
+
+    # -- lookup / sweep ------------------------------------------------------ #
+    def lookup(self, op, m, n, k, dtype, fmt, interpret) -> Optional[Tuple[int, ...]]:
+        e = self.entries.get(self.key(op, m, n, k, dtype, fmt, interpret))
+        return None if e is None else e.blocks
+
+    def resolve(
+        self,
+        op: str,
+        m: int,
+        n: int,
+        k: int,
+        dtype: Any,
+        fmt: str,
+        interpret: bool,
+        runner: Optional[Callable[..., Any]] = None,
+        reps: int = 3,
+    ) -> Tuple[int, ...]:
+        key = self.key(op, m, n, k, dtype, fmt, interpret)
+        hit = self.entries.get(key)
+        can_sweep = self.enabled and runner is not None
+        # seeded-default entries are placeholders, not measurements: re-tune
+        # them the first time a sweep is actually possible
+        if hit is not None and not (can_sweep and hit.source == "default"):
+            return hit.blocks
+        if can_sweep:
+            best, best_ms = None, float("inf")
+            for cand in self.CANDIDATES[op]:
+                try:
+                    jax.block_until_ready(runner(*cand))  # compile + warm
+                    ts = []
+                    for _ in range(reps):
+                        t0 = time.perf_counter()
+                        jax.block_until_ready(runner(*cand))
+                        ts.append(time.perf_counter() - t0)
+                    ms = float(np.median(ts)) * 1e3
+                except Exception:
+                    continue  # candidate invalid for this shape/backend
+                if ms < best_ms:
+                    best, best_ms = cand, ms
+            self.sweeps += 1
+            if best is not None:
+                self.entries[key] = TuneEntry(best, "swept", best_ms)
+                return best
+        default = self.DEFAULTS[op]
+        self.entries[key] = TuneEntry(default, "default")
+        return default
+
+    # -- persistence --------------------------------------------------------- #
+    def save(self, path: Optional[str] = None) -> str:
+        path = path or self.path
+        if not path:
+            raise ValueError("no cache path given (arg or REPRO_TUNE_CACHE)")
+        payload = {
+            "version": 1,
+            # defaults are placeholders (never measured): persisting them
+            # would block future sweeps of those shapes in other processes
+            "entries": {
+                k: {"blocks": list(e.blocks), "source": e.source, "ms": e.ms}
+                for k, e in self.entries.items()
+                if e.source != "default"
+            },
+        }
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        return path
+
+    def load(self, path: str) -> "TuningCache":
+        with open(path) as f:
+            payload = json.load(f)
+        for k, e in payload["entries"].items():
+            self.entries[k] = TuneEntry(tuple(e["blocks"]), "loaded", e.get("ms"))
+        return self
+
+    def clear(self) -> None:
+        self.entries.clear()
+        self.sweeps = 0
+
+    def report(self) -> str:
+        lines = ["op,shape,dtype,format,mode,blocks,source,ms"]
+        for k in sorted(self.entries):
+            op, shape, dt, fmt, mode = k.split("|")
+            e = self.entries[k]
+            ms = "" if e.ms is None else f"{e.ms:.3f}"
+            lines.append(
+                f"{op},{shape},{dt},{fmt},{mode},{'x'.join(map(str, e.blocks))},{e.source},{ms}"
+            )
+        return "\n".join(lines)
+
+
+_TUNING = TuningCache()
+
+
+def tuning_cache() -> TuningCache:
+    """The process-wide block-size cache consulted by matmul/bsr_matmul/
+    col_matmul when block sizes are not pinned explicitly."""
+    return _TUNING
+
+
+def set_tuning(enabled: bool) -> TuningCache:
+    _TUNING.enabled = enabled
+    return _TUNING
+
+
+def _concrete(*arrays) -> bool:
+    """True when no argument is a tracer (sweeping requires real timing)."""
+    return not any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
+def _matmul_blocked(x2, w, bias, activation, block_m, block_n, block_k, interpret):
     m, k = x2.shape
     n = w.shape[1]
     xp = _pad_axis(_pad_axis(x2, block_m, 0), block_k, 1)
     wp = _pad_axis(_pad_axis(w, block_k, 0), block_n, 1)
     bp = None if bias is None else _pad_axis(bias, block_n, 0)
-    out = _dense_matmul(
+    return _dense_matmul(
         xp,
         wp,
         bp,
@@ -76,6 +257,46 @@ def matmul(
         block_k=block_k,
         interpret=interpret,
     )[:m, :n]
+
+
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    activation: Optional[str] = None,
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    _format: str = "dense",
+) -> jax.Array:
+    """``act(x @ w + bias)`` for arbitrary leading batch dims via the fused
+    dense Pallas kernel; pads M/N/K to block multiples and slices back.
+
+    Block sizes left as ``None`` are resolved through the tuning cache
+    (cached winner for this shape if one exists, else the seeded default;
+    a one-off candidate sweep when tuning is enabled on concrete arrays).
+    """
+    interpret = interpret_default() if interpret is None else interpret
+    x2, lead = _flatten_batch(x)
+    m, k = x2.shape
+    n = w.shape[1]
+    if block_m is None and block_n is None and block_k is None:
+        runner = None
+        if _TUNING.enabled and _concrete(x2, w, bias):
+            runner = lambda bm, bn, bk: _matmul_blocked(
+                x2, w, bias, activation, bm, bn, bk, interpret
+            )
+        block_m, block_n, block_k = _TUNING.resolve(
+            "matmul", m, n, k, x2.dtype, _format, interpret, runner
+        )
+    elif block_m is None or block_n is None or block_k is None:
+        # partially pinned: fill from defaults, never from the cache -- a
+        # swept winner for the free dims was timed with different pins
+        dm, dn, dk = TuningCache.DEFAULTS["matmul"]
+        block_m, block_n, block_k = block_m or dm, block_n or dn, block_k or dk
+    out = _matmul_blocked(x2, w, bias, activation, block_m, block_n, block_k, interpret)
     return out.reshape(*lead, n)
 
 
@@ -86,7 +307,7 @@ def bsr_matmul(
     bias: Optional[jax.Array] = None,
     *,
     activation: Optional[str] = None,
-    block_m: int = 128,
+    block_m: Optional[int] = None,
     bands: Optional[Sequence[Tuple[int, int, int]]] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
@@ -95,30 +316,30 @@ def bsr_matmul(
     ``bands`` (from the reorder pass): sequence of ``(start, stop, count)``
     over output block-columns; one pallas_call per band with exact trip count
     ``count``.  Without bands, a single call pads every column to the global
-    max count.
+    max count.  ``block_m=None`` consults the tuning cache.
     """
     interpret = interpret_default() if interpret is None else interpret
     x2, lead = _flatten_batch(x)
     m, k = x2.shape
     nb, s, bm, bn = values.shape
     n = nb * bn
-    assert k == block_rows.shape[0] * 0 + k  # k checked in kernel
-    xp = _pad_axis(x2, block_m, 0)
 
-    def run(vals, rows, bias_slice):
-        return _bsr_matmul(
-            xp,
-            vals,
-            rows,
-            bias_slice,
-            activation=activation,
-            block_m=block_m,
-            interpret=interpret,
-        )
+    def compute(block_m):
+        xp = _pad_axis(x2, block_m, 0)
 
-    if not bands:
-        out = run(values, block_rows, bias)
-    else:
+        def run(vals, rows, bias_slice):
+            return _bsr_matmul(
+                xp,
+                vals,
+                rows,
+                bias_slice,
+                activation=activation,
+                block_m=block_m,
+                interpret=interpret,
+            )
+
+        if not bands:
+            return run(values, block_rows, bias)
         pieces = []
         for start, stop, count in bands:
             if stop <= start:
@@ -140,7 +361,16 @@ def bsr_matmul(
                     None if bias is None else bias[start * bn : stop * bn],
                 )
             )
-        out = jnp.concatenate(pieces, axis=-1)
+        return jnp.concatenate(pieces, axis=-1)
+
+    if block_m is None:
+        runner = None
+        if _TUNING.enabled and _concrete(x2, values, block_rows, bias):
+            runner = compute
+        (block_m,) = _TUNING.resolve(
+            "bsr_matmul", m, n, k, x2.dtype, "pbcsr", interpret, runner
+        )
+    out = compute(block_m)
     return out[:m].reshape(*lead, n)
 
 
@@ -154,9 +384,14 @@ def col_matmul(
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Column-pruned ``act(x @ W + bias)``: static input gather (XLA) + the
-    strictly smaller fused dense GEMM (Pallas).  ``values [K_kept, N]``."""
+    strictly smaller fused dense GEMM (Pallas).  ``values [K_kept, N]``.
+    Tuned under its own ``colcompact`` cache key (the gathered K differs
+    from the dense layer's)."""
     xg = jnp.take(x, kept, axis=-1)
-    return matmul(xg, values, bias, activation=activation, interpret=interpret)
+    return matmul(
+        xg, values, bias, activation=activation, interpret=interpret,
+        _format="colcompact",
+    )
 
 
 def ffn_gateup(

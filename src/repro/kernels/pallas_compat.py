@@ -1,0 +1,16 @@
+"""Version shim for Pallas TPU compiler params.
+
+jax >= 0.5 exposes ``pltpu.CompilerParams``; 0.4.x (this container ships
+0.4.37) calls the same dataclass ``TPUCompilerParams``.  Kernels import the
+helper so they compile against either.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_CP = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def tpu_compiler_params(**kw):
+    return _CP(**kw)

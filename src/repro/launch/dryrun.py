@@ -243,7 +243,9 @@ def _compile_once(cfg, shape_name, mesh, *, zero1, remat, scan, overrides=None):
         compiled = lowered.compile()
     t2 = time.time()
     mem = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    from ..utils.jax_compat import cost_analysis
+
+    ca = cost_analysis(compiled)
     total, per_kind = collective_bytes(compiled.as_text())
     out = {
         "step": step_name,

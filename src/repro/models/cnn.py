@@ -186,3 +186,58 @@ PAPER_TABLE1 = {
     "coloring": {"unpruned": 137.0, "pruned": 85.0, "pruned_compiler": 38.0},
     "super_resolution": {"unpruned": 269.0, "pruned": 192.0, "pruned_compiler": 73.0},
 }
+
+
+# --------------------------------------------------------------------------- #
+# the paper's pruning recipes on conv graphs (shared by benchmarks + serving)  #
+# --------------------------------------------------------------------------- #
+
+
+def _channel_mask(w, keep_frac: float):
+    """Kill the lowest-energy input channels entirely.  [Co, Ci, kh, kw]."""
+    energy = jnp.sum(w.astype(jnp.float32) ** 2, axis=(0, 2, 3))  # [Ci]
+    ci = w.shape[1]
+    n_keep = max(1, int(round(ci * keep_frac)))
+    thresh = jnp.sort(energy)[ci - n_keep]
+    return (energy >= thresh).astype(w.dtype)[None, :, None, None] * jnp.ones_like(w)
+
+
+def _pattern_mask(w, connectivity_channels: float):
+    """Per-kernel best pattern + channel-granular connectivity pruning."""
+    from ..core.pruning import PatternKernel, project
+
+    st = PatternKernel()
+    _, mask = project(w, st)
+    if connectivity_channels > 0:
+        mask = mask * _channel_mask(w, 1.0 - connectivity_channels)
+    return mask
+
+
+def app_masks(g: Graph, app: str, sparsity: float = 0.5):
+    """Masks + structure metadata per the paper's recipe for ``app``."""
+    from ..core.pruning import Column, PatternKernel, project
+
+    recipe = PAPER_RECIPE[app]
+    masks, structures = {}, {}
+    for node in g.nodes:
+        p = g.params.get(node.name, {})
+        w = p.get("w")
+        if w is None:
+            continue
+        if node.op == "conv2d":
+            if w.shape[1] <= 4:  # never prune the image-input conv
+                continue
+            if recipe == "column":
+                # column pruning at channel granularity (TPU-exploitable)
+                masks[node.name] = _channel_mask(w, 1.0 - sparsity)
+                structures[node.name] = Column(sparsity)
+            else:
+                if w.shape[2] != 3:
+                    continue  # patterns are defined for 3x3 kernels
+                masks[node.name] = _pattern_mask(w, sparsity)
+                structures[node.name] = PatternKernel(connectivity=sparsity)
+        elif node.op == "linear" and w.shape[0] >= 64:
+            wp, m = project(w, Column(sparsity))
+            masks[node.name] = m
+            structures[node.name] = Column(sparsity)
+    return masks, structures

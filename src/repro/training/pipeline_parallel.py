@@ -23,7 +23,7 @@ from typing import Any, Callable, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from ..utils.jax_compat import shard_map
 
 __all__ = ["pipeline_forward", "make_pipelined_loss"]
 

@@ -1,0 +1,48 @@
+"""Version shims for jax API drift (container ships jax 0.4.37).
+
+* ``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax`` and
+  renamed its replication-check kwarg ``check_rep`` -> ``check_vma``.
+  Call sites use the new name; the shim translates downward.
+* ``jax.lax.axis_size`` (static mapped-axis size) only exists on newer jax;
+  0.4.x exposes the same number via ``jax.core.axis_frame``.
+* ``Compiled.cost_analysis()`` returns a list of per-device-program dicts on
+  jax<=0.4.x and a plain dict on newer jax.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:  # jax >= 0.6
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_HAS_VMA = "check_vma" in inspect.signature(_shard_map).parameters
+
+__all__ = ["shard_map", "axis_size", "cost_analysis"]
+
+
+def shard_map(f, *args, **kw):
+    if "check_vma" in kw and not _HAS_VMA:
+        kw["check_rep"] = kw.pop("check_vma")
+    return _shard_map(f, *args, **kw)
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a mapped mesh axis (usable in Python control flow)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    from jax.core import axis_frame
+
+    return int(axis_frame(axis_name))
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a single dict on every jax version."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca

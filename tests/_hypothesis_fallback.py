@@ -1,0 +1,72 @@
+"""Deterministic stand-in for hypothesis so tier-1 collection never dies.
+
+When hypothesis is installed the test modules import the real thing; this
+fallback turns each ``@given`` into a small deterministic parameter sweep
+(bounds + midpoint for ranges, every element for ``sampled_from``).  It covers
+exactly the strategy surface the test suite uses: ``integers``, ``floats``,
+``sampled_from``, ``booleans``.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+from types import SimpleNamespace
+from typing import Any, List
+
+
+class _Strategy:
+    def __init__(self, examples: List[Any]):
+        self.examples = examples
+
+
+def _integers(lo: int, hi: int) -> _Strategy:
+    mid = (lo + hi) // 2
+    return _Strategy(sorted({lo, mid, hi}))
+
+
+def _floats(lo: float, hi: float) -> _Strategy:
+    return _Strategy(sorted({lo, (lo + hi) / 2.0, hi}))
+
+
+def _sampled_from(seq) -> _Strategy:
+    return _Strategy(list(seq))
+
+
+def _booleans() -> _Strategy:
+    return _Strategy([False, True])
+
+
+st = SimpleNamespace(
+    integers=_integers,
+    floats=_floats,
+    sampled_from=_sampled_from,
+    booleans=_booleans,
+)
+
+
+def settings(**_kw):
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+def given(*arg_strats: _Strategy, **kw_strats: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            keys = list(kw_strats)
+            pools = [s.examples for s in arg_strats] + [kw_strats[k].examples for k in keys]
+            for combo in itertools.product(*pools):
+                pos = combo[: len(arg_strats)]
+                kw = dict(zip(keys, combo[len(arg_strats) :]))
+                fn(*pos, **kw)
+
+        # pytest must see a zero-arg test, not the wrapped signature
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco

@@ -41,8 +41,7 @@ def test_sharded_train_step_small_mesh():
         from repro.training.optimizer import AdamWConfig
         from repro.training.train_loop import init_train_state, make_train_step
 
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
         cfg = smoke_config("qwen2.5-3b")
         model = get_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
@@ -73,8 +72,7 @@ def test_compressed_allreduce_multi_device():
         import jax, jax.numpy as jnp
         from repro.training.compression import (CompressionConfig,
             make_compressed_allreduce)
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((8,), ("data",))
         tmpl = {"w": jnp.zeros((16, 32))}
         g = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 16, 32))}
         err = {"w": jnp.zeros((8, 16, 32))}
@@ -99,8 +97,7 @@ def test_pipeline_parallel_grad_exactness():
     out = _run("""
         import jax, jax.numpy as jnp
         from repro.training.pipeline_parallel import make_pipelined_loss, pipeline_forward
-        mesh = jax.make_mesh((4,), ("pipe",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((4,), ("pipe",))
         L, D, M, mb = 8, 16, 4, 4
         params = {"w": jax.random.normal(jax.random.PRNGKey(2), (L, D, D)) * 0.2}
         layer_fn = lambda lp, h: jnp.tanh(h @ lp["w"])
@@ -138,14 +135,12 @@ def test_elastic_checkpoint_restore_other_mesh(tmp_path):
         cfg = smoke_config("granite-3-2b")
         model = get_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
-        mesh_a = jax.make_mesh((4, 1), ("data", "model"),
-                               axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh_a = jax.make_mesh((4, 1), ("data", "model"))
         sh_a = jax.tree.map(lambda s: NamedSharding(mesh_a, s), param_pspecs(params))
         params_a = jax.tree.map(jax.device_put, params, sh_a)
         save({str(tmp_path)!r}, 7, params_a)
 
-        mesh_b = jax.make_mesh((2, 2), ("data", "model"),
-                               axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh_b = jax.make_mesh((2, 2), ("data", "model"))
         sh_b = jax.tree.map(lambda s: NamedSharding(mesh_b, s), param_pspecs(params))
         restored, at = restore({str(tmp_path)!r}, params, shardings=sh_b)
         assert at == 7
@@ -191,8 +186,7 @@ def test_overlapped_collective_matmul():
     out = _run("""
         import jax, jax.numpy as jnp
         from repro.training.collective_matmul import make_overlapped_tp_matmuls
-        mesh = jax.make_mesh((4,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((4,), ("model",))
         ag, rs = make_overlapped_tp_matmuls(mesh)
         x = jax.random.normal(jax.random.PRNGKey(0), (16, 32))
         w = jax.random.normal(jax.random.PRNGKey(1), (32, 24)) * 0.1

@@ -1,0 +1,420 @@
+"""Compile pipeline v2: PassManager ordering/invariants, elementwise fusion
+exactness, execution-plan parity with lower() on the three demo apps, buffer
+liveness, and the kernel block-size tuning cache."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import (
+    ExecutionPlan,
+    GraphBuilder,
+    GraphPass,
+    InvariantViolation,
+    PassContext,
+    PassManager,
+    available_passes,
+    compile_plan,
+    cse,
+    fuse_elementwise,
+    lower,
+    optimize,
+)
+from repro.core.graph.ir import Graph, Node
+from repro.kernels import ops as kops
+from repro.models.cnn import APPS, app_masks
+
+KEY = jax.random.PRNGKey(0)
+
+APP_INPUTS = {
+    "style_transfer": (1, 3, 16, 16),
+    "coloring": (1, 1, 16, 16),
+    "super_resolution": (1, 3, 8, 8),
+}
+
+
+# --------------------------------------------------------------------------- #
+# PassManager                                                                  #
+# --------------------------------------------------------------------------- #
+
+
+def _identity_graph():
+    b = GraphBuilder(["x"])
+    h = b.add("linear", "x", name="l1", params={"w": jnp.eye(8)})
+    return b.build(h)
+
+
+def test_pass_manager_runs_in_declared_order():
+    ran = []
+
+    def mk(name):
+        def fn(g, ctx):
+            ran.append(name)
+            return g
+
+        return GraphPass(name=name, fn=fn)
+
+    pm = PassManager([mk("a"), mk("b"), mk("c")])
+    ctx = PassContext()
+    pm.run(_identity_graph(), ctx)
+    assert ran == ["a", "b", "c"]
+    assert list(ctx.stats) == ["a", "b", "c"]
+
+
+def test_pass_manager_unknown_pass_raises():
+    with pytest.raises(KeyError, match="unknown pass"):
+        PassManager(["definitely_not_registered"])
+
+
+def test_registry_contains_default_pipeline():
+    for name in ("fold_norm", "fuse_activation", "substitute_sparse",
+                 "fold_gathers", "cse", "fuse_elementwise", "dce"):
+        assert name in available_passes()
+
+
+def test_pass_manager_validates_between_stages():
+    def breaker(g, ctx):  # duplicate a node name -> structurally invalid
+        return Graph(
+            nodes=list(g.nodes) + [g.nodes[0]],
+            inputs=g.inputs,
+            outputs=g.outputs,
+            params=g.params,
+        )
+
+    pm = PassManager([GraphPass(name="breaker", fn=breaker)])
+    with pytest.raises(InvariantViolation, match="duplicate"):
+        pm.run(_identity_graph(), PassContext())
+
+
+def test_pass_manager_post_invariant_enforced():
+    def bad_post(g, ctx):
+        raise InvariantViolation("declared post failed")
+
+    pm = PassManager([GraphPass(name="noop", fn=lambda g, ctx: g, post=(bad_post,))])
+    with pytest.raises(InvariantViolation, match="declared post"):
+        pm.run(_identity_graph(), PassContext())
+
+
+def test_mask_passes_skipped_without_masks():
+    ctx = PassContext()  # no masks
+    g = PassManager().run(_identity_graph(), ctx)
+    s = ctx.stats["substitute_sparse"]
+    assert s.nodes_before == s.nodes_after and not s.changed
+    assert [n.op for n in g.nodes] == ["linear"]
+
+
+def test_optimize_is_thin_wrapper_with_custom_pipeline():
+    g = _identity_graph()
+    go = optimize(g, pipeline=("dce",))
+    assert [n.name for n in go.nodes] == ["l1"]
+
+
+# --------------------------------------------------------------------------- #
+# elementwise fusion + cse                                                     #
+# --------------------------------------------------------------------------- #
+
+
+def _elementwise_chain_graph():
+    b = GraphBuilder(["x", "y"])
+    l1 = b.add("linear", "x", name="l1",
+               params={"w": jax.random.normal(KEY, (16, 16)) * 0.1})
+    h = b.add("add", (l1, "y"), name="a1")
+    h = b.add("mul", (h, "y"), name="m1")
+    h = b.add("activation", h, name="act1", fn="gelu")
+    h = b.add("norm", h, name="ln1", kind="layer",
+              params={"scale": jnp.ones(16) * 1.3, "bias": jnp.ones(16) * 0.2})
+    return b.build(h)
+
+
+def test_fuse_elementwise_exactness_vs_unfused():
+    g = _elementwise_chain_graph()
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
+    y = jax.random.normal(jax.random.PRNGKey(2), (4, 16))
+    ref = lower(g, use_kernels=False)(g.params, x, y)
+    gf = fuse_elementwise(g)
+    ops = [n.op for n in gf.nodes]
+    assert ops == ["linear", "fused_elementwise"], ops
+    assert gf.nodes[-1].name == "ln1"  # chain tail keeps its name
+    got = lower(gf, use_kernels=False)(gf.params, x, y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-6, atol=1e-6)
+
+
+def test_fuse_elementwise_respects_fanout():
+    b = GraphBuilder(["x"])
+    a1 = b.add("activation", "x", name="a1", fn="relu")
+    a2 = b.add("activation", a1, name="a2", fn="tanh")
+    a3 = b.add("activation", a1, name="a3", fn="gelu")  # a1 has 2 consumers
+    out = b.add("add", (a2, a3), name="out")
+    g = b.build(out)
+    gf = fuse_elementwise(g)
+    # a1 must survive unfused; a2/a3 are single-node "chains" (not fused)
+    assert "a1" in [n.name for n in gf.nodes]
+    x = jax.random.normal(KEY, (2, 8))
+    np.testing.assert_allclose(
+        np.asarray(lower(gf, use_kernels=False)(gf.params, x)),
+        np.asarray(lower(g, use_kernels=False)(g.params, x)),
+        rtol=1e-6,
+    )
+
+
+def test_cse_dedupes_identical_nodes():
+    b = GraphBuilder(["x"])
+    a1 = b.add("activation", "x", name="dup1", fn="relu")
+    a2 = b.add("activation", "x", name="dup2", fn="relu")
+    out = b.add("add", (a1, a2), name="out")
+    g = b.build(out)
+    g2 = cse(g)
+    assert len(g2.nodes) == 2  # one relu + the add
+    x = jax.random.normal(KEY, (2, 8))
+    np.testing.assert_array_equal(
+        np.asarray(lower(g2, use_kernels=False)(g2.params, x)),
+        np.asarray(lower(g, use_kernels=False)(g.params, x)),
+    )
+
+
+def test_cse_keeps_distinct_attrs():
+    b = GraphBuilder(["x"])
+    a1 = b.add("activation", "x", name="r", fn="relu")
+    a2 = b.add("activation", "x", name="t", fn="tanh")
+    out = b.add("add", (a1, a2), name="out")
+    g = cse(b.build(out))
+    assert len(g.nodes) == 3
+
+
+# --------------------------------------------------------------------------- #
+# execution plans                                                              #
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("app", list(APPS))
+def test_plan_matches_lower_on_pruned_apps(app):
+    """lower(g)(params, x) must equal the plan-based executor bit-exactly."""
+    g = APPS[app](KEY, base=16)
+    masks, structures = app_masks(g, app, sparsity=0.5)
+    go = optimize(g, masks, structures)
+    x = jax.random.normal(jax.random.PRNGKey(1), APP_INPUTS[app])
+    y_lower = lower(go, use_kernels=False)(go.params, x)
+    plan = compile_plan(go, backend="reference")
+    assert isinstance(lower(go, use_kernels=False), ExecutionPlan)
+    y_plan = plan(go.params, x)
+    np.testing.assert_array_equal(np.asarray(y_lower), np.asarray(y_plan))
+
+
+def test_plan_schedule_is_topological_and_liveness_sound():
+    g = APPS["coloring"](KEY, base=16)
+    go = optimize(g)
+    plan = compile_plan(go, backend="reference")
+    defined = set(go.inputs)
+    freed = set()
+    for step in plan.steps:
+        for i in step.node.inputs:
+            assert i in defined and i not in freed, (step.node.name, i)
+        defined.add(step.node.name)
+        freed.update(step.frees)
+    # everything except outputs/inputs dies somewhere; outputs never freed
+    assert not (freed & set(go.outputs)) and not (freed & set(go.inputs))
+    consumed = {i for s in plan.steps for i in s.node.inputs}
+    expected_dead = {
+        n.name for n in go.nodes
+        if n.name in consumed and n.name not in go.outputs
+    }
+    assert freed == expected_dead
+
+
+def test_plan_handles_out_of_order_node_list():
+    n1 = Node(op="activation", name="a", inputs=("l",), attrs={"fn": "relu"})
+    n2 = Node(op="linear", name="l", inputs=("x",))
+    g = Graph(nodes=[n1, n2], inputs=("x",), outputs=("a",),
+              params={"l": {"w": jnp.eye(4)}})
+    plan = compile_plan(g, backend="reference")  # schedules l before a
+    assert [s.node.name for s in plan.steps] == ["l", "a"]
+    x = jnp.ones((2, 4))
+    np.testing.assert_array_equal(np.asarray(plan(g.params, x)), np.asarray(jnp.ones((2, 4))))
+
+
+def test_plan_unknown_op_fails_at_compile_time():
+    g = Graph(nodes=[Node(op="martian_conv", name="m", inputs=("x",))],
+              inputs=("x",), outputs=("m",))
+    with pytest.raises(NotImplementedError, match="martian_conv"):
+        compile_plan(g, backend="reference")
+
+
+def test_plan_memory_estimate():
+    g = APPS["super_resolution"](KEY, base=16)
+    go = optimize(g)
+    plan = compile_plan(go, backend="reference")
+    x = jax.ShapeDtypeStruct(APP_INPUTS["super_resolution"], jnp.float32)
+    mem = plan.memory_estimate(x)
+    out = mem["out_structs"][0]
+    assert out.shape == (1, 3, 16, 16)
+    biggest = max(b for _, b, _ in mem["per_step"])
+    assert mem["peak_activation_bytes"] >= biggest > 0
+    assert mem["peak_total_bytes"] == mem["peak_activation_bytes"] + mem["param_bytes"]
+
+
+def test_plan_jits_and_matches_eager():
+    g = APPS["style_transfer"](KEY, base=16)
+    go = optimize(g)
+    plan = compile_plan(go, backend="reference")
+    x = jax.random.normal(KEY, APP_INPUTS["style_transfer"])
+    np.testing.assert_allclose(
+        np.asarray(jax.jit(plan)(go.params, x)),
+        np.asarray(plan(go.params, x)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# tuning cache                                                                 #
+# --------------------------------------------------------------------------- #
+
+
+@pytest.fixture
+def fresh_cache():
+    cache = kops.tuning_cache()
+    prev_enabled, prev_entries, prev_sweeps = cache.enabled, dict(cache.entries), cache.sweeps
+    cache.clear()
+    yield cache
+    cache.enabled = prev_enabled
+    cache.entries = prev_entries
+    cache.sweeps = prev_sweeps
+
+
+def test_tuning_disabled_uses_seeded_default_without_sweep(fresh_cache):
+    fresh_cache.enabled = False
+    x = jax.random.normal(KEY, (16, 64)) * 0.1
+    w = jax.random.normal(KEY, (64, 32)) * 0.1
+    y = kops.matmul(x, w)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), rtol=1e-4, atol=1e-4)
+    assert fresh_cache.sweeps == 0
+    entry = fresh_cache.entries[kops.TuningCache.key("matmul", 16, 32, 64, jnp.float32, "dense", True)]
+    assert entry.source == "default"
+
+
+def test_tuning_sweeps_once_then_hits_cache(fresh_cache, monkeypatch):
+    fresh_cache.enabled = True
+    monkeypatch.setitem(
+        kops.TuningCache.CANDIDATES, "matmul", ((128, 128, 128), (64, 128, 128))
+    )
+    x = jax.random.normal(KEY, (16, 64)) * 0.1
+    w = jax.random.normal(KEY, (64, 32)) * 0.1
+    kops.matmul(x, w)
+    assert fresh_cache.sweeps == 1
+    kops.matmul(x, w)
+    assert fresh_cache.sweeps == 1, "cache hit must skip the sweep"
+    key = kops.TuningCache.key("matmul", 16, 32, 64, jnp.float32, "dense", True)
+    assert fresh_cache.entries[key].source == "swept"
+
+
+def test_tuning_cache_json_roundtrip(fresh_cache, tmp_path):
+    fresh_cache.entries[kops.TuningCache.key("matmul", 8, 8, 8, jnp.float32, "dense", True)] = (
+        kops.TuneEntry((64, 128, 128), "swept", 1.25)
+    )
+    p = tmp_path / "tune.json"
+    fresh_cache.save(str(p))
+    payload = json.loads(p.read_text())
+    assert payload["version"] == 1
+    c2 = kops.TuningCache(enabled=False)
+    c2.load(str(p))
+    assert c2.lookup("matmul", 8, 8, 8, jnp.float32, "dense", True) == (64, 128, 128)
+    assert next(iter(c2.entries.values())).source == "loaded"
+
+
+def test_matmul_consults_cached_blocks(fresh_cache, monkeypatch):
+    fresh_cache.enabled = False
+    key = kops.TuningCache.key("matmul", 16, 32, 64, jnp.float32, "dense", True)
+    fresh_cache.entries[key] = kops.TuneEntry((64, 256, 128), "loaded")
+    seen = {}
+    real = kops._dense_matmul
+
+    def spy(x, w, b, **kw):
+        seen.update(kw)
+        return real(x, w, b, **kw)
+
+    monkeypatch.setattr(kops, "_dense_matmul", spy)
+    x = jax.random.normal(KEY, (16, 64)) * 0.1
+    w = jax.random.normal(KEY, (64, 32)) * 0.1
+    kops.matmul(x, w)
+    assert (seen["block_m"], seen["block_n"], seen["block_k"]) == (64, 256, 128)
+
+
+def test_tuning_never_sweeps_under_jit(fresh_cache):
+    fresh_cache.enabled = True
+    x = jax.random.normal(KEY, (16, 64)) * 0.1
+    w = jax.random.normal(KEY, (64, 32)) * 0.1
+    y = jax.jit(lambda a, b: kops.matmul(a, b))(x, w)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), rtol=1e-4, atol=1e-4)
+    assert fresh_cache.sweeps == 0
+
+
+def test_default_entry_does_not_poison_later_sweep(fresh_cache, monkeypatch):
+    """A shape first seen under jit (default recorded) must still be tuned
+    once concrete arrays show up with tuning enabled -- and seeded defaults
+    must not be persisted (they are placeholders, not measurements)."""
+    fresh_cache.enabled = True
+    monkeypatch.setitem(
+        kops.TuningCache.CANDIDATES, "matmul", ((128, 128, 128), (64, 128, 128))
+    )
+    x = jax.random.normal(KEY, (16, 64)) * 0.1
+    w = jax.random.normal(KEY, (64, 32)) * 0.1
+    jax.jit(lambda a, b: kops.matmul(a, b))(x, w)  # records a default entry
+    key = kops.TuningCache.key("matmul", 16, 32, 64, jnp.float32, "dense", True)
+    assert fresh_cache.entries[key].source == "default"
+    kops.matmul(x, w)  # concrete: the placeholder must be re-tuned
+    assert fresh_cache.sweeps == 1
+    assert fresh_cache.entries[key].source == "swept"
+
+
+def test_save_skips_default_entries(fresh_cache, tmp_path):
+    fresh_cache.entries["a|1x1x1|float32|dense"] = kops.TuneEntry((128, 128, 128), "default")
+    fresh_cache.entries["b|2x2x2|float32|dense"] = kops.TuneEntry((64, 128, 128), "swept", 1.0)
+    p = tmp_path / "t.json"
+    fresh_cache.save(str(p))
+    saved = json.loads(p.read_text())["entries"]
+    assert list(saved) == ["b|2x2x2|float32|dense"]
+
+
+def test_tuning_key_separates_interpret_from_hardware_mode(fresh_cache):
+    """Interpret-mode sweeps time Python, not silicon: their winners must
+    never shadow (or be shadowed by) real-hardware entries."""
+    ki = kops.TuningCache.key("matmul", 8, 8, 8, jnp.float32, "dense", True)
+    kh = kops.TuningCache.key("matmul", 8, 8, 8, jnp.float32, "dense", False)
+    assert ki != kh
+    fresh_cache.entries[ki] = kops.TuneEntry((64, 128, 128), "swept", 1.0)
+    assert fresh_cache.lookup("matmul", 8, 8, 8, jnp.float32, "dense", False) is None
+
+
+def test_memory_estimate_falls_back_for_kernel_only_ops():
+    from repro.core.graph import executor, register_op
+
+    op = "kernel_only_test_op"
+    try:
+        register_op(op, backends=("kernel",))(lambda p, xs, a, rt: xs[0] * 2.0)
+        g = Graph(nodes=[Node(op=op, name="m", inputs=("x",))],
+                  inputs=("x",), outputs=("m",))
+        plan = compile_plan(g, backend="kernel")
+        mem = plan.memory_estimate(jax.ShapeDtypeStruct((2, 4), jnp.float32))
+        assert mem["out_structs"][0].shape == (2, 4)
+    finally:
+        executor._HANDLERS["kernel"].pop(op, None)
+
+
+def test_partially_pinned_blocks_use_defaults_not_cache(fresh_cache, monkeypatch):
+    fresh_cache.enabled = False
+    key = kops.TuningCache.key("matmul", 16, 32, 64, jnp.float32, "dense", True)
+    fresh_cache.entries[key] = kops.TuneEntry((256, 256, 256), "loaded")
+    seen = {}
+    real = kops._dense_matmul
+
+    def spy(x, w, b, **kw):
+        seen.update(kw)
+        return real(x, w, b, **kw)
+
+    monkeypatch.setattr(kops, "_dense_matmul", spy)
+    x = jax.random.normal(KEY, (16, 64)) * 0.1
+    w = jax.random.normal(KEY, (64, 32)) * 0.1
+    kops.matmul(x, w, block_m=64)  # pinned m, free n/k -> defaults, not cache
+    assert (seen["block_m"], seen["block_n"], seen["block_k"]) == (64, 128, 128)
