@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast bench deps deps-dev
+.PHONY: test test-fast bench bench-smoke deps deps-dev
 
 test:  ## tier-1 verify
 	python -m pytest -x -q
@@ -11,6 +11,10 @@ test-fast:  ## compiler + kernel subset (quick signal while iterating)
 
 bench:
 	python -m benchmarks.run
+
+bench-smoke:  ## tiny-shape benchmark pass (CI-sized, no TPU; writes results/BENCH_fusion_smoke.json)
+	python -m benchmarks.kernel_bench --smoke
+	python -m benchmarks.table1_apps --smoke
 
 deps:
 	pip install -r requirements.txt

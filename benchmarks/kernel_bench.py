@@ -11,11 +11,21 @@ algorithm, so this bench reports what is *portable* from this container:
    "beats CSR" claim);
 4. block-size auto-tuning: with the tuning cache enabled, sweep the candidate
    grid once per GEMM shape and report the chosen blocks (the paper's
-   "parameter auto-tuning" applied to Pallas tiling).
+   "parameter auto-tuning" applied to Pallas tiling);
+5. fusion: the fused-elementwise Pallas kernel vs the unfused jnp chain
+   (parity always asserted; the wall-clock win asserted on real hardware
+   only) and ``fuse_epilogue`` plan-step reduction + parity on the three
+   demo apps.  Results land in ``results/BENCH_fusion.json`` so the perf
+   trajectory is recorded across PRs.
+
+``--smoke`` shrinks every shape so CI can exercise the full path without a
+TPU (also reachable via ``make bench-smoke``).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import time
 
@@ -30,6 +40,8 @@ from repro.kernels import ops as kops
 
 K, N, M = 2048, 2048, 256
 
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
 
 def _median_time(fn, *args, reps=7):
     jax.block_until_ready(fn(*args))
@@ -41,14 +53,14 @@ def _median_time(fn, *args, reps=7):
     return float(np.median(ts))
 
 
-def bench_bsr_compute_scaling():
+def bench_bsr_compute_scaling(k=K, n=N, m=M):
     print("kernel_bsr,density,mxu_tiles,values_bytes,correct")
-    w = jax.random.normal(jax.random.PRNGKey(0), (K, N)) * 0.02
-    x = jax.random.normal(jax.random.PRNGKey(1), (M, K))
+    w = jax.random.normal(jax.random.PRNGKey(0), (k, n)) * 0.02
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, k))
     for sp in (0.0, 0.25, 0.5, 0.75):
         if sp == 0.0:
-            tiles = (K // 128) * (N // 128)
-            vb = dense_nbytes((K, N), jnp.float32)
+            tiles = (k // 128) * (n // 128)
+            vb = dense_nbytes((k, n), jnp.float32)
             ok = True
         else:
             wp, mask = project(w, Block(sp, bm=128, bn=128))
@@ -61,10 +73,10 @@ def bench_bsr_compute_scaling():
         print(f"kernel_bsr,{1-sp:.2f},{tiles},{vb},{ok}")
 
 
-def bench_colcompact_walltime():
+def bench_colcompact_walltime(k=K, n=N, m=M):
     print("kernel_colpack,density,ms_dense,ms_colpack,speedup")
-    w = jax.random.normal(jax.random.PRNGKey(0), (K, N)) * 0.02
-    x = jax.random.normal(jax.random.PRNGKey(1), (M, K))
+    w = jax.random.normal(jax.random.PRNGKey(0), (k, n)) * 0.02
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, k))
     f_dense = jax.jit(lambda x, w: x @ w)
     t_dense = _median_time(f_dense, x, w)
     for sp in (0.5, 0.75):
@@ -77,18 +89,18 @@ def bench_colcompact_walltime():
         print(f"kernel_colpack,{1-sp:.2f},{t_dense*1e3:.2f},{t_cc*1e3:.2f},{t_dense/t_cc:.2f}")
 
 
-def bench_storage():
+def bench_storage(side=1024):
     print("storage,sparsity,dense_bytes,csr_bytes,pbcsr_bytes,pbcsr_vs_csr")
-    w = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (1024, 1024)))
+    w = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (side, side)))
     for sp in (0.5, 0.75, 0.9):
         wp, mask = project(jnp.asarray(w), Block(sp, bm=128, bn=128, balanced=False))
         pb = PBCSR.from_dense(wp, mask, 128, 128)
         csr = CSR.from_dense(np.asarray(wp), np.asarray(mask))
-        d = dense_nbytes((1024, 1024), jnp.float32)
+        d = dense_nbytes((side, side), jnp.float32)
         print(f"storage,{sp},{d},{csr.nbytes},{pb.nbytes},{csr.nbytes/max(pb.nbytes,1):.2f}x")
 
 
-def bench_tuned_blocks():
+def bench_tuned_blocks(shapes=None):
     """Enable the tuning cache, trigger one sweep per shape, report winners.
 
     Shapes stay small because the container runs Pallas in interpret mode;
@@ -99,13 +111,16 @@ def bench_tuned_blocks():
     cache.clear()
     cache.enabled = True
     try:
-        shapes = [(8, 256, 256), (32, 512, 256), (8, 128, 512)]
+        shapes = shapes or [(8, 256, 256), (32, 512, 256), (8, 128, 512)]
         for m, n, k in shapes:
             x = jax.random.normal(jax.random.PRNGKey(0), (m, k)) * 0.1
             w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.1
             matmul(x, w)  # miss -> sweep -> cached
             matmul(x, w)  # hit
-        assert cache.sweeps == len(shapes), (cache.sweeps, len(shapes))
+        # the fused-elementwise kernel tunes under its own op key
+        x = jax.random.normal(jax.random.PRNGKey(2), (shapes[0][0], 256)) * 0.1
+        kops.fused_elementwise(x, [x], (("add", 0), ("activation", "relu")))
+        assert cache.sweeps == len(shapes) + 1, (cache.sweeps, len(shapes) + 1)
         print("tuning," + cache.report().replace("\n", "\ntuning,"))
         out = os.environ.get("REPRO_TUNE_CACHE")
         if out:
@@ -115,12 +130,129 @@ def bench_tuned_blocks():
         cache.entries = prev_entries
 
 
-def main():
-    bench_bsr_compute_scaling()
-    bench_colcompact_walltime()
-    bench_storage()
-    bench_tuned_blocks()
+# --------------------------------------------------------------------------- #
+# fusion: fused-elementwise kernel + epilogue-program plans                    #
+# --------------------------------------------------------------------------- #
+
+
+def _elementwise_cases(smoke: bool):
+    """(name, [M, D] view shape) pairs at table-1-ish scales: the NCHW case
+    mirrors a demo-app activation map flattened over its last dim, the LM
+    case a transformer residual stream."""
+    if smoke:
+        return [("app_nchw", (64, 128)), ("lm_residual", (32, 256))]
+    return [("app_nchw", (4096, 128)), ("lm_residual", (256, 2048))]
+
+
+def bench_fusion(smoke: bool = False, out_path: str | None = None) -> dict:
+    interpret = kops.interpret_default()
+    record: dict = {
+        "mode": "interpret" if interpret else "hw",
+        "smoke": smoke,
+        "elementwise": [],
+        "epilogue_plans": [],
+    }
+    print("fusion,case,steps,ms_unfused,ms_fused,speedup,bytes_unfused,bytes_fused,max_err")
+    # 4-step program: activation -> residual add -> gating mul -> layer norm
+    for name, (m, d) in _elementwise_cases(smoke):
+        x = jax.random.normal(jax.random.PRNGKey(0), (m, d))
+        r = jax.random.normal(jax.random.PRNGKey(1), (m, d))
+        s = jax.random.normal(jax.random.PRNGKey(2), (m, d))
+        scale, bias = jnp.ones(d) * 1.1, jnp.zeros(d) + 0.1
+        steps = (("activation", "gelu"), ("add", 0), ("mul", 1), ("norm", 0, 1e-5))
+
+        unfused = jax.jit(
+            lambda x, r, s, scale, bias: ref.fused_elementwise_ref(
+                x, [r, s], steps, [(scale, bias)]
+            )
+        )
+        fused = jax.jit(
+            lambda x, r, s, scale, bias: kops.fused_elementwise(
+                x, [r, s], steps, [(scale, bias)]
+            )
+        )
+        err = float(jnp.abs(fused(x, r, s, scale, bias) - unfused(x, r, s, scale, bias)).max())
+        assert err < 1e-4, (name, err)  # parity gates the bench in every mode
+        t_un = _median_time(unfused, x, r, s, scale, bias, reps=3 if smoke else 7)
+        t_fu = _median_time(fused, x, r, s, scale, bias, reps=3 if smoke else 7)
+        nb = x.size * x.dtype.itemsize
+        # unfused: each step reads the running value (+1 side for add/mul)
+        # and writes it back; fused: one read of x + sides, one write.
+        bytes_unfused = sum(
+            (3 if st[0] in ("add", "mul") else 2) * nb for st in steps
+        )
+        bytes_fused = (1 + 2) * nb + nb  # x + two sides in, one out
+        speedup = t_un / t_fu
+        if not interpret:  # interpret timings measure Python, not silicon
+            assert speedup > 1.0, (name, speedup)
+        row = {
+            "case": name, "shape": [m, d], "n_steps": len(steps),
+            "ms_unfused": t_un * 1e3, "ms_fused": t_fu * 1e3,
+            "speedup": speedup, "bytes_unfused": bytes_unfused,
+            "bytes_fused": bytes_fused, "max_err": err,
+        }
+        record["elementwise"].append(row)
+        print(
+            f"fusion,{name},{len(steps)},{t_un*1e3:.3f},{t_fu*1e3:.3f},"
+            f"{speedup:.2f},{bytes_unfused},{bytes_fused},{err:.2e}"
+        )
+
+    # fuse_epilogue: plan-step reduction + parity on the paper's three apps
+    from repro.core.graph import DEFAULT_PIPELINE, compile_plan, optimize
+    from repro.models.cnn import APPS, app_masks
+
+    no_epi = tuple(
+        p for p in DEFAULT_PIPELINE if p not in ("fuse_activation", "fuse_epilogue")
+    )
+    size = 16 if smoke else 64
+    base = 8 if smoke else 16
+    print("fusion_epilogue,app,steps_unfused,steps_fused,max_err")
+    for app in APPS:
+        g = APPS[app](jax.random.PRNGKey(0), base=base)
+        masks, structures = app_masks(g, app, sparsity=0.5)
+        go = optimize(g, masks, structures)
+        go0 = optimize(g, masks, structures, pipeline=no_epi)
+        plan = compile_plan(go, backend="reference")
+        plan0 = compile_plan(go0, backend="reference")
+        c_in = 1 if app == "coloring" else 3
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, c_in, size, size))
+        err = float(jnp.abs(plan(go.params, x) - plan0(go0.params, x)).max())
+        assert len(plan.steps) < len(plan0.steps), app
+        assert err < 1e-4, (app, err)
+        row = {
+            "app": app, "steps_unfused": len(plan0.steps),
+            "steps_fused": len(plan.steps), "max_err": err,
+        }
+        record["epilogue_plans"].append(row)
+        print(f"fusion_epilogue,{app},{len(plan0.steps)},{len(plan.steps)},{err:.2e}")
+
+    # smoke numbers are CI plumbing, not perf data: never clobber the
+    # cross-PR trajectory artifact with them
+    default_name = "BENCH_fusion_smoke.json" if smoke else "BENCH_fusion.json"
+    out_path = out_path or os.path.join(RESULTS_DIR, default_name)
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"fusion,saved,{os.path.abspath(out_path)}")
+    return record
+
+
+def main(smoke: bool = False):
+    if smoke:
+        bench_bsr_compute_scaling(k=256, n=256, m=128)
+        bench_colcompact_walltime(k=256, n=256, m=64)
+        bench_storage(side=256)
+        bench_tuned_blocks(shapes=[(8, 128, 128)])
+        bench_fusion(smoke=True)
+    else:
+        bench_bsr_compute_scaling()
+        bench_colcompact_walltime()
+        bench_storage()
+        bench_tuned_blocks()
+        bench_fusion()
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny shapes (CI, no TPU)")
+    main(smoke=ap.parse_args().smoke)

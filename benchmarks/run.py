@@ -3,6 +3,9 @@ plus the roofline summary from the dry-run artifacts.
 
   table1   -> benchmarks/table1_apps.py   (paper Table 1, 3 apps x 3 variants)
   kernels  -> benchmarks/kernel_bench.py  (sparse-execution + storage tables)
+  fusion   -> benchmarks/kernel_bench.py::bench_fusion
+              (fused-elementwise kernel + fuse_epilogue plans; writes
+              results/BENCH_fusion.json)
   admm     -> benchmarks/admm_bench.py    (pruning convergence/quality)
   roofline -> results/dryrun summary      (EXPERIMENTS.md section Roofline)
 
@@ -43,7 +46,7 @@ def _roofline_summary() -> None:
 
 
 def main() -> None:
-    sections = sys.argv[1:] or ["table1", "kernels", "admm", "roofline"]
+    sections = sys.argv[1:] or ["table1", "kernels", "fusion", "admm", "roofline"]
     if "table1" in sections:
         from . import table1_apps
 
@@ -51,7 +54,11 @@ def main() -> None:
     if "kernels" in sections:
         from . import kernel_bench
 
-        kernel_bench.main()
+        kernel_bench.main()  # includes the fusion section + BENCH_fusion.json
+    elif "fusion" in sections:
+        from . import kernel_bench
+
+        kernel_bench.bench_fusion()
     if "admm" in sections:
         from . import admm_bench
 

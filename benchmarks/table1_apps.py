@@ -12,6 +12,7 @@ Paper Table 1 (ms):     style 283/178/67   coloring 137/85/38   SR 269/192/73
 
 from __future__ import annotations
 
+import argparse
 import time
 from typing import Dict, Tuple
 
@@ -35,6 +36,14 @@ INPUT_SHAPES = {
     "style_transfer": (1, 3, 128, 128),
     "coloring": (1, 1, 128, 128),
     "super_resolution": (1, 3, 96, 96),
+}
+
+#: ``--smoke`` (make bench-smoke): tiny frames so CI exercises the full
+#: measurement path -- the numbers are not meaningful at this scale
+SMOKE_SHAPES = {
+    "style_transfer": (1, 3, 32, 32),
+    "coloring": (1, 1, 32, 32),
+    "super_resolution": (1, 3, 16, 16),
 }
 
 
@@ -65,13 +74,16 @@ def _time_call(fn, *args, reps: int = 5) -> float:
     return float(np.median(times))
 
 
-def bench_app(app: str, sparsity: float = 0.5, base: int = 32) -> Dict[str, Dict]:
+def bench_app(
+    app: str, sparsity: float = 0.5, base: int = 32, reps: int = 5,
+    shapes: Dict[str, Tuple[int, ...]] = INPUT_SHAPES,
+) -> Dict[str, Dict]:
     g = APPS[app](jax.random.PRNGKey(0), base=base)
-    x = jax.random.normal(jax.random.PRNGKey(1), INPUT_SHAPES[app], jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), shapes[app], jnp.float32)
 
     # 1) unpruned
     f_dense = jax.jit(lower(g, use_kernels=False))
-    t_dense = _time_call(f_dense, g.params, x)
+    t_dense = _time_call(f_dense, g.params, x, reps=reps)
 
     # 2) pruned (masked dense: ADMM output before any compiler work)
     masks, structures = app_masks(g, app, sparsity)
@@ -79,18 +91,18 @@ def bench_app(app: str, sparsity: float = 0.5, base: int = 32) -> Dict[str, Dict
         k: ({**v, "w": v["w"] * masks[k]} if k in masks else v)
         for k, v in g.params.items()
     }
-    t_pruned = _time_call(f_dense, pm, x)
+    t_pruned = _time_call(f_dense, pm, x, reps=reps)
 
     # 3) pruned + compiler (PassManager pipeline -> execution plan)
     go = optimize(g, masks, structures)
     plan = compile_plan(go, backend="reference")
     f_opt = jax.jit(plan)
-    t_opt = _time_call(f_opt, go.params, x)
-    mem = plan.memory_estimate(jax.ShapeDtypeStruct(INPUT_SHAPES[app], jnp.float32))
+    t_opt = _time_call(f_opt, go.params, x, reps=reps)
+    mem = plan.memory_estimate(jax.ShapeDtypeStruct(shapes[app], jnp.float32))
 
     flops = {
-        "unpruned": count_graph_flops(g, INPUT_SHAPES[app]),
-        "pruned_compiler": count_graph_flops(go, INPUT_SHAPES[app]),
+        "unpruned": count_graph_flops(g, shapes[app]),
+        "pruned_compiler": count_graph_flops(go, shapes[app]),
     }
     bytes_ = {"unpruned": graph_param_bytes(g), "pruned_compiler": graph_param_bytes(go)}
     # numerical agreement between pruned and pruned+compiler
@@ -106,10 +118,14 @@ def bench_app(app: str, sparsity: float = 0.5, base: int = 32) -> Dict[str, Dict
     }
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
     print("app,variant,ms_per_frame,flops,param_bytes,paper_ms")
     for app in APPS:
-        r = bench_app(app)
+        r = (
+            bench_app(app, base=8, reps=2, shapes=SMOKE_SHAPES)
+            if smoke
+            else bench_app(app)
+        )
         for variant in ("unpruned", "pruned", "pruned_compiler"):
             print(
                 f"{app},{variant},{r['ms'][variant]:.2f},"
@@ -128,4 +144,6 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny shapes (CI, no TPU)")
+    main(smoke=ap.parse_args().smoke)

@@ -1,5 +1,11 @@
 from .ir import Graph, GraphBuilder, Node
-from .executor import ExecutionPlan, compile_plan, register_op, registered_ops
+from .executor import (
+    BatchedPlan,
+    ExecutionPlan,
+    compile_plan,
+    register_op,
+    registered_ops,
+)
 from .lowering import lower
 from .pass_manager import (
     DEFAULT_PIPELINE,
@@ -19,6 +25,7 @@ from .passes import (
     fold_norm,
     fuse_activation,
     fuse_elementwise,
+    fuse_epilogue,
     optimize,
     substitute_sparse,
 )

@@ -47,6 +47,7 @@ __all__ = [
     "Runtime",
     "Step",
     "ExecutionPlan",
+    "BatchedPlan",
     "compile_plan",
 ]
 
@@ -84,41 +85,127 @@ def registered_ops(backend: str = "kernel") -> List[str]:
 
 
 # --------------------------------------------------------------------------- #
+# epilogue programs (attached by the fuse_epilogue pass)                       #
+# --------------------------------------------------------------------------- #
+#
+# A GEMM/conv node may carry an ``epilogue`` attr: a tuple of steps run on its
+# output after bias + the fused ``activation`` attr.  Side-operand slots index
+# the *node's own inputs* (like fused_elementwise steps index its inputs), and
+# layer/instance-norm scale/bias live in the node's params under
+# ``{pkey}_scale`` / ``{pkey}_bias``:
+#
+#   ("activation", fn) | ("add", j) | ("mul", j)
+#   ("norm_layer", pkey, eps) | ("norm_instance", pkey, eps)
+
+
+def _steps_local(steps, xs, p):
+    """Resolve graph-form steps (side slots indexing the node's inputs, norm
+    scale/bias under ``{pkey}_scale``/``{pkey}_bias`` params) into the
+    kernel-local form shared with :func:`kref.apply_steps_ref` and the Pallas
+    kernels: ``(steps, sides, norm_params)`` with renumbered slots."""
+    out, sides, norms = [], [], []
+    for step in steps:
+        kind = step[0]
+        if kind == "activation":
+            out.append(step)
+        elif kind in ("add", "mul"):
+            sides.append(xs[step[1]])
+            out.append((kind, len(sides) - 1))
+        elif kind in ("norm_layer", "norm_instance"):
+            pkey, eps = step[1], step[2]
+            norms.append((p[f"{pkey}_scale"], p[f"{pkey}_bias"]))
+            out.append(
+                ("norm" if kind == "norm_layer" else kind, len(norms) - 1, eps)
+            )
+        else:
+            raise NotImplementedError(f"step {kind}")
+    return out, sides, norms
+
+
+def _apply_epilogue(y, epilogue, xs, p):
+    """jnp fallback applier -- delegates to the shared step interpreter
+    (identical math to the unfused op handlers, so reference-backend plans
+    stay bit-exact with their unfused counterparts)."""
+    if not epilogue:
+        return y
+    steps, sides, norms = _steps_local(epilogue, xs, p)
+    return kref.apply_steps_ref(y, steps, sides, norms)
+
+
+def _kernel_epilogue(epilogue, xs, out_shape):
+    """Translate an epilogue into the Pallas matmul's kernel-local form:
+    ``(steps, sides)`` with slots renumbered into ``sides``.  Returns
+    ``(None, None)`` when the program cannot run tiled in-kernel (norm steps
+    need whole rows; mismatched side shapes cannot be streamed per-tile) --
+    callers then fall back to :func:`_apply_epilogue` after the GEMM."""
+    steps, sides = [], []
+    for step in epilogue:
+        kind = step[0]
+        if kind == "activation":
+            steps.append(step)
+        elif kind in ("add", "mul"):
+            s = xs[step[1]]
+            if tuple(s.shape) != tuple(out_shape):
+                return None, None
+            sides.append(s)
+            steps.append((kind, len(sides) - 1))
+        else:  # norm_layer / norm_instance: need full rows / spatial planes
+            return None, None
+    return tuple(steps), tuple(sides)
+
+
+# --------------------------------------------------------------------------- #
 # handlers: GEMM family (kernel vs reference differ)                           #
 # --------------------------------------------------------------------------- #
 
 
 @register_op("linear", backends=("kernel",))
 def _linear_kernel(p, xs, a, rt):
+    epi = a.get("epilogue") or ()
+    out_shape = (*xs[0].shape[:-1], p["w"].shape[1])
+    steps, sides = _kernel_epilogue(epi, xs, out_shape)
+    if steps is None:  # not tile-fusable: run the GEMM, apply epilogue in jnp
+        y = kops.matmul(
+            xs[0], p["w"], p.get("b"), activation=a.get("activation"),
+            interpret=rt.interpret,
+        )
+        return _apply_epilogue(y, epi, xs, p)
     return kops.matmul(
-        xs[0], p["w"], p.get("b"), activation=a.get("activation"), interpret=rt.interpret
+        xs[0], p["w"], p.get("b"), activation=a.get("activation"),
+        epilogue=steps, epilogue_sides=sides, interpret=rt.interpret,
     )
 
 
 @register_op("linear", backends=("reference",))
 def _linear_ref(p, xs, a, rt):
-    return kref.matmul_ref(xs[0], p["w"], p.get("b"), activation=a.get("activation"))
+    y = kref.matmul_ref(xs[0], p["w"], p.get("b"), activation=a.get("activation"))
+    return _apply_epilogue(y, a.get("epilogue") or (), xs, p)
 
 
 @register_op("sparse_linear", backends=("kernel",))
 def _sparse_linear_kernel(p, xs, a, rt):
     fmt = a["format"]
-    if fmt == "colcompact":
-        return kops.col_matmul(
-            xs[0], p["values"], p["kept"], p.get("b"),
-            activation=a.get("activation"), interpret=rt.interpret,
-        )
-    if fmt == "channelcompact":
-        return kops.matmul(
-            xs[0], p["values"], p.get("b"),
-            activation=a.get("activation"), interpret=rt.interpret,
-        )
+    epi = a.get("epilogue") or ()
+    if fmt in ("colcompact", "channelcompact"):
+        values = p["values"]
+        out_shape = (*xs[0].shape[:-1], values.shape[1])
+        steps, sides = _kernel_epilogue(epi, xs, out_shape)
+        kw = dict(activation=a.get("activation"), interpret=rt.interpret)
+        if steps is not None:
+            kw.update(epilogue=steps, epilogue_sides=sides)
+        if fmt == "colcompact":
+            y = kops.col_matmul(xs[0], values, p["kept"], p.get("b"), **kw)
+        else:
+            y = kops.matmul(xs[0], values, p.get("b"), **kw)
+        return y if steps is not None else _apply_epilogue(y, epi, xs, p)
     if fmt == "pbcsr":
-        return kops.bsr_matmul(
+        # band-dispatched kernel: epilogue applied after the banded concat
+        y = kops.bsr_matmul(
             xs[0], p["values"], p["block_rows"], p.get("b"),
             activation=a.get("activation"), bands=a.get("bands"),
             interpret=rt.interpret,
         )
+        return _apply_epilogue(y, epi, xs, p)
     raise NotImplementedError(f"sparse format {fmt}")
 
 
@@ -126,21 +213,23 @@ def _sparse_linear_kernel(p, xs, a, rt):
 def _sparse_linear_ref(p, xs, a, rt):
     fmt = a["format"]
     if fmt == "colcompact":
-        return kref.matmul_ref(
+        y = kref.matmul_ref(
             jnp.take(xs[0], p["kept"], axis=-1), p["values"], p.get("b"),
             activation=a.get("activation"),
         )
-    if fmt == "channelcompact":
-        return kref.matmul_ref(
+    elif fmt == "channelcompact":
+        y = kref.matmul_ref(
             xs[0], p["values"], p.get("b"), activation=a.get("activation")
         )
-    if fmt == "pbcsr":
+    elif fmt == "pbcsr":
         x = xs[0]
-        return kref.bsr_matmul_ref(
+        y = kref.bsr_matmul_ref(
             x.reshape(-1, x.shape[-1]), p["values"], p["block_rows"], p.get("b"),
             activation=a.get("activation"),
         ).reshape(*x.shape[:-1], -1)
-    raise NotImplementedError(f"sparse format {fmt}")
+    else:
+        raise NotImplementedError(f"sparse format {fmt}")
+    return _apply_epilogue(y, a.get("epilogue") or (), xs, p)
 
 
 # --------------------------------------------------------------------------- #
@@ -163,7 +252,10 @@ def _conv2d(p, xs, a, rt):
     )
     if b is not None:
         y = y + b[None, :, None, None]
-    return _ACT[a.get("activation")](y)
+    y = _ACT[a.get("activation")](y)
+    # conv lowers through lax.conv on both backends (the MXU stays dense);
+    # the epilogue program still collapses follower nodes into this one step
+    return _apply_epilogue(y, a.get("epilogue") or (), xs, p)
 
 
 @register_op("norm")
@@ -203,25 +295,29 @@ def _mul(p, xs, a, rt):
     return xs[0] * xs[1]
 
 
-@register_op("fused_elementwise")
+@register_op("fused_elementwise", backends=("reference",))
 def _fused_elementwise(p, xs, a, rt):
-    y = xs[0]
-    for step in a["steps"]:
-        kind = step[0]
-        if kind == "activation":
-            y = _ACT[step[1]](y)
-        elif kind == "add":
-            y = y + xs[step[1]]
-        elif kind == "mul":
-            y = y * xs[step[1]]
-        elif kind == "norm_layer":
-            pkey, eps = step[1], step[2]
-            mu = y.mean(axis=-1, keepdims=True)
-            var = y.var(axis=-1, keepdims=True)
-            y = (y - mu) / jnp.sqrt(var + eps) * p[f"{pkey}_scale"] + p[f"{pkey}_bias"]
-        else:
-            raise NotImplementedError(f"fused step {kind}")
-    return y
+    """jnp step interpreter: the parity oracle for the Pallas kernel (and
+    the XLA-native baseline -- one HBM round-trip *per step*)."""
+    steps, sides, norms = _steps_local(a["steps"], xs, p)
+    return kref.apply_steps_ref(xs[0], steps, sides, norms)
+
+
+@register_op("fused_elementwise", backends=("kernel",))
+def _fused_elementwise_kernel(p, xs, a, rt):
+    """One VMEM-resident Pallas pass over the whole step program: one HBM
+    read + write total.  Falls back to the jnp interpreter when the tiled
+    kernel cannot express the node (broadcast sides, rank < 2, non-vector
+    norm params)."""
+    x = xs[0]
+    if x.ndim < 2 or any(s.shape != x.shape for s in xs[1:]):
+        return _fused_elementwise(p, xs, a, rt)
+    steps, sides, norms = _steps_local(a["steps"], xs, p)
+    if any(st[0] == "norm_instance" for st in steps) or any(
+        s.ndim != 1 or s.shape[-1] != x.shape[-1] for pair in norms for s in pair
+    ):
+        return _fused_elementwise(p, xs, a, rt)
+    return kops.fused_elementwise(x, sides, tuple(steps), norms, interpret=rt.interpret)
 
 
 @register_op("concat")
@@ -395,6 +491,78 @@ class ExecutionPlan:
             fr = f"  frees {s.frees}" if s.frees else ""
             lines.append(f"  {s.node.name:24s} {s.node.op:18s} <- {s.node.inputs}{fr}")
         return "\n".join(lines)
+
+    # -- batched serving ------------------------------------------------------ #
+    def batched(self, batch_size: int, *, via_vmap: bool = False) -> "BatchedPlan":
+        """Fixed-batch throughput wrapper: pads the caller's leading axis to a
+        ``batch_size`` multiple, executes one jitted chunk call per slice
+        (single compilation for every chunk), and slices the padding off.
+        ``via_vmap=True`` vmaps the plan over the chunk axis instead of
+        relying on the ops' native leading-batch polymorphism -- needed for
+        graphs whose input shapes carry no batch dim of their own."""
+        return BatchedPlan(self, batch_size, via_vmap=via_vmap)
+
+
+@dataclasses.dataclass(eq=False)
+class BatchedPlan:
+    """Serve arbitrary-size macro-batches through a fixed-shape compiled
+    plan.  Callable exactly like the plan: ``bp(params, *inputs)`` where every
+    input's leading axis is the request batch.  The remainder chunk is padded
+    (zeros) and the padding discarded, so the jitted chunk function compiles
+    once per plan, never per request count."""
+
+    plan: ExecutionPlan
+    batch_size: int
+    via_vmap: bool = False
+
+    def __post_init__(self):
+        if self.batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {self.batch_size}")
+        n_in = len(self.plan.graph.inputs)
+        call = (
+            jax.vmap(self.plan, in_axes=(None,) + (0,) * n_in)
+            if self.via_vmap
+            else self.plan
+        )
+        self._chunk = jax.jit(call)
+        #: stats of the most recent __call__ (padding overhead is the serving
+        #: cost of fixed-shape compilation; surfaced by PlanServer)
+        self.last_stats: Dict[str, int] = {}
+
+    def __call__(self, params: Dict[str, Dict[str, Any]], *inputs):
+        if not inputs:
+            raise TypeError("batched plan needs at least one input")
+        b = inputs[0].shape[0]
+        if b == 0:
+            raise ValueError("empty macro-batch (leading axis has length 0)")
+        for x in inputs[1:]:
+            if x.shape[0] != b:
+                raise ValueError(
+                    f"inconsistent leading batch: {x.shape[0]} vs {b}"
+                )
+        bs = self.batch_size
+        pad = (-b) % bs
+        chunks = []
+        for i in range(0, b, bs):
+            xs = tuple(x[i : i + bs] for x in inputs)
+            if xs[0].shape[0] < bs:  # tail chunk: pad just this slice
+                short = bs - xs[0].shape[0]
+                xs = tuple(
+                    jnp.concatenate([x, jnp.zeros((short,) + x.shape[1:], x.dtype)])
+                    for x in xs
+                )
+            chunks.append(self._chunk(params, *xs))
+        self.last_stats = {
+            "frames": int(b),
+            "batches": len(chunks),
+            "padded_frames": int(pad),
+        }
+        if isinstance(chunks[0], tuple):
+            return tuple(
+                jnp.concatenate([c[j] for c in chunks])[:b]
+                for j in range(len(chunks[0]))
+            )
+        return jnp.concatenate(chunks)[:b]
 
 
 def compile_plan(

@@ -13,10 +13,11 @@ Supported ops (enough for the paper's three apps + generic MLP stacks):
 op                 attrs / params
 =================  =====================================================
 input              shape, dtype
-linear             params w[K,N], b[N]?; attrs activation?
-sparse_linear      packed params (format-dependent); attrs format, bands…
+linear             params w[K,N], b[N]?; attrs activation?, epilogue?
+sparse_linear      packed params (format-dependent); attrs format, bands…,
+                   epilogue?
 conv2d             params w[Co,Ci,kh,kw], b?; attrs stride, padding,
-                   groups, activation?
+                   groups, activation?, epilogue?
 norm               attrs kind in {batch, instance, layer}; params
                    scale, bias (+ mean, var for batch)
 activation         attrs fn

@@ -186,7 +186,10 @@ def params_bound_to_nodes(g: Graph, ctx: PassContext) -> None:
 # --------------------------------------------------------------------------- #
 
 #: the deployment pipeline (paper's compiler, end to end).  cse runs before
-#: fuse_elementwise so duplicate chains collapse once, not twice.
+#: fuse_elementwise so duplicate chains collapse once, not twice;
+#: fuse_epilogue runs last-but-dce so it sees both surviving single
+#: elementwise nodes and fused_elementwise chains, folding them into their
+#: GEMM/conv producer's epilogue program.
 DEFAULT_PIPELINE: Tuple[str, ...] = (
     "fold_norm",
     "fuse_activation",
@@ -194,6 +197,7 @@ DEFAULT_PIPELINE: Tuple[str, ...] = (
     "fold_gathers",
     "cse",
     "fuse_elementwise",
+    "fuse_epilogue",
     "dce",
 )
 

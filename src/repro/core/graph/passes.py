@@ -33,6 +33,7 @@ __all__ = [
     "substitute_sparse",
     "fold_gathers",
     "fuse_elementwise",
+    "fuse_epilogue",
     "cse",
     "dce",
     "optimize",
@@ -425,6 +426,150 @@ def fuse_elementwise(g: Graph) -> Graph:
 
 
 # --------------------------------------------------------------------------- #
+# 5b. GEMM epilogue-program fusion                                             #
+# --------------------------------------------------------------------------- #
+
+#: producers whose handlers execute an ``epilogue`` attr (see executor.py)
+_EPI_PRODUCERS = ("linear", "sparse_linear", "conv2d")
+
+
+def _epilogue_candidate(g: Graph, n: Node):
+    """If ``n`` is an elementwise follower foldable into a GEMM/conv producer,
+    return ``(src_name, raw_steps)`` where raw steps carry side operands as
+    *names* (resolved to input slots by the caller) and norm params as
+    ``("param", scale, bias)`` markers.  Else return None."""
+    if n.op == "activation":
+        return n.inputs[0], [("activation", n.attrs["fn"])]
+    if n.op in ("add", "mul"):
+        if len(set(n.inputs)) != 2:
+            return None  # y+y consumes the producer twice; not a single edge
+        a_name, b_name = n.inputs
+
+        def foldable(name):
+            try:
+                nd = g.node(name)
+            except KeyError:
+                return False
+            return (
+                nd.op in _EPI_PRODUCERS
+                and len(g.consumers(name)) == 1
+                and name not in g.outputs
+            )
+
+        src = a_name if foldable(a_name) else (b_name if foldable(b_name) else None)
+        if src is None:
+            return None
+        side = b_name if src == a_name else a_name
+        return src, [(n.op, ("side", side))]
+    if n.op == "norm" and n.attrs.get("kind") in ("instance", "layer"):
+        p = g.params.get(n.name, {})
+        kind = "norm_instance" if n.attrs["kind"] == "instance" else "norm_layer"
+        return n.inputs[0], [
+            (kind, ("param", p["scale"], p["bias"]), n.attrs.get("eps", 1e-5))
+        ]
+    if n.op == "fused_elementwise":
+        if n.inputs.count(n.inputs[0]) != 1:
+            return None
+        steps = []
+        p = g.params.get(n.name, {})
+        for step in n.attrs["steps"]:
+            kind = step[0]
+            if kind == "activation":
+                steps.append(step)
+            elif kind in ("add", "mul"):
+                if step[1] == 0:
+                    return None  # references the producer's raw output
+                steps.append((kind, ("side", n.inputs[step[1]])))
+            elif kind == "norm_layer":
+                pkey, eps = step[1], step[2]
+                steps.append(
+                    ("norm_layer", ("param", p[f"{pkey}_scale"], p[f"{pkey}_bias"]), eps)
+                )
+            else:
+                return None
+        return n.inputs[0], steps
+    return None
+
+
+def fuse_epilogue(g: Graph) -> Graph:
+    """Fold an elementwise follower (``activation``/``add``/``mul``/
+    ``norm(instance|layer)``/``fused_elementwise``) into its GEMM/conv
+    producer's **epilogue program** -- a ``("epilogue", ...)`` attr executed
+    by the producer's handler: inside the Pallas matmul tile for
+    linear/colcompact/channelcompact (bias + activation + residual-add +
+    scale on the f32 accumulator in registers, no HBM round-trip), and as a
+    post-GEMM jnp tail for pbcsr/conv (still one plan step instead of two).
+
+    Generalizes ``fuse_activation`` (the single-``activation``-string special
+    case).  The fused node takes the *follower's* name, so consumers and
+    graph outputs are untouched.  Epilogue side slots index the fused node's
+    own ``inputs`` tuple; norm scale/bias move into its params under fresh
+    ``e{i}_scale`` / ``e{i}_bias`` keys.  Runs to fixpoint, so
+    conv -> IN -> relu -> add collapses into one node."""
+    changed = True
+    while changed:
+        changed = False
+        for n in list(g.nodes):
+            cand = _epilogue_candidate(g, n)
+            if cand is None:
+                continue
+            src_name, raw_steps = cand
+            if n.inputs.count(src_name) != 1 or src_name in g.outputs:
+                continue
+            try:
+                src = g.node(src_name)
+            except KeyError:
+                continue  # producer is a graph input
+            if src.op not in _EPI_PRODUCERS or len(g.consumers(src_name)) != 1:
+                continue
+            if any(
+                step[0] == "norm_instance" for step in raw_steps
+            ) and src.op != "conv2d":
+                continue  # instance norm is NCHW-only
+
+            params = dict(g.params)
+            new_params = dict(params.pop(src_name, {}))
+            epi = list(src.attrs.get("epilogue", ()))
+            n_norm = sum(s[0].startswith("norm") for s in epi)
+            new_inputs = list(src.inputs)
+            steps: List[Tuple[Any, ...]] = []
+            for step in raw_steps:
+                kind = step[0]
+                if kind == "activation":
+                    steps.append(step)
+                elif kind in ("add", "mul"):
+                    side = step[1][1]
+                    if side not in new_inputs:
+                        new_inputs.append(side)
+                    steps.append((kind, new_inputs.index(side)))
+                else:  # norm_layer / norm_instance
+                    _, scale, bias = step[1]
+                    pkey = f"e{n_norm}"
+                    n_norm += 1
+                    new_params[f"{pkey}_scale"] = scale
+                    new_params[f"{pkey}_bias"] = bias
+                    steps.append((kind, pkey, step[2]))
+            params.pop(n.name, None)  # follower params absorbed above
+            params[n.name] = new_params
+            fused = Node(
+                op=src.op,
+                name=n.name,
+                inputs=tuple(new_inputs),
+                attrs={**src.attrs, "epilogue": tuple(epi) + tuple(steps)},
+            )
+            nodes = []
+            for nd in g.nodes:
+                if nd.name == src_name:
+                    continue
+                nodes.append(fused if nd.name == n.name else nd)
+            g = dataclasses.replace(g, nodes=nodes, params=params)
+            changed = True
+            break  # node list changed: restart the scan
+    g.validate()
+    return g
+
+
+# --------------------------------------------------------------------------- #
 # 6. common-subexpression elimination                                          #
 # --------------------------------------------------------------------------- #
 
@@ -520,6 +665,9 @@ register_pass("fold_gathers", needs_masks=True, post=(params_bound_to_nodes,))(
 register_pass("cse", post=(params_bound_to_nodes,))(lambda g, ctx: cse(g))
 register_pass("fuse_elementwise", post=(params_bound_to_nodes,))(
     lambda g, ctx: fuse_elementwise(g)
+)
+register_pass("fuse_epilogue", post=(params_bound_to_nodes,))(
+    lambda g, ctx: fuse_epilogue(g)
 )
 register_pass("dce", post=(no_dead_nodes, params_bound_to_nodes))(lambda g, ctx: dce(g))
 

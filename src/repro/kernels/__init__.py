@@ -1,2 +1,10 @@
 from . import ref
-from .ops import attention, bsr_matmul, col_matmul, ffn_gateup, interpret_default, matmul
+from .ops import (
+    attention,
+    bsr_matmul,
+    col_matmul,
+    ffn_gateup,
+    fused_elementwise,
+    interpret_default,
+    matmul,
+)

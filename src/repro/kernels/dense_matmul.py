@@ -1,10 +1,15 @@
-"""Tiled dense matmul with fused bias+activation epilogue (Pallas TPU).
+"""Tiled dense matmul with a fused epilogue *program* (Pallas TPU).
 
 This is (a) the baseline against which the BSR kernel is compared and (b) the
 execution engine for column-/channel-compacted weights (a strictly smaller
 dense GEMM).  The fused epilogue is the TPU materialization of the paper's
-DSL fusion pass (Conv/Linear + BatchNorm + Activation in one kernel -- no
-HBM round-trip for the intermediate).
+DSL fusion passes: beyond the single ``activation`` string (Conv/Linear +
+BatchNorm + Activation in one kernel), the epilogue now accepts a step
+*program* -- ``("activation", fn)`` / ``("add", slot)`` / ``("mul", slot)``
+over per-tile side operands -- so bias + activation + residual-add + scale
+all run on the f32 accumulator in registers before the tile is written back
+(the ``fuse_epilogue`` pass's kernel half; no HBM round-trip for any
+intermediate).
 
 Grid: ``(M/bm, N/bn, K/bk)`` with a VMEM f32 accumulator; K innermost so the
 accumulator lives across the contraction.  Block shapes default to MXU-square
@@ -14,7 +19,7 @@ accumulator lives across the contraction.  Block shapes default to MXU-square
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,8 +40,22 @@ _ACTIVATIONS = {
 }
 
 
-def dense_matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, activation: Optional[str]):
-    """One (i, j, k) grid step: acc += x[i,k] @ w[k,j]; epilogue at last k."""
+def dense_matmul_kernel(
+    x_ref,
+    w_ref,
+    b_ref,
+    side_refs,
+    o_ref,
+    acc_ref,
+    *,
+    activation: Optional[str],
+    epilogue: Tuple[Tuple, ...] = (),
+):
+    """One (i, j, k) grid step: acc += x[i,k] @ w[k,j]; epilogue at last k.
+
+    ``epilogue`` steps run on the f32 accumulator after bias + ``activation``;
+    ``("add"|"mul", slot)`` streams side tile ``side_refs[slot]``.
+    """
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -52,26 +71,41 @@ def dense_matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, activation: Opti
         acc = acc_ref[...]
         if b_ref is not None:
             acc = acc + b_ref[...].astype(jnp.float32)
-        o_ref[...] = _ACTIVATIONS[activation](acc).astype(o_ref.dtype)
+        acc = _ACTIVATIONS[activation](acc)
+        for step in epilogue:
+            kind = step[0]
+            if kind == "activation":
+                acc = _ACTIVATIONS[step[1]](acc)
+            elif kind in ("add", "mul"):
+                s = side_refs[step[1]][...].astype(jnp.float32)
+                acc = acc + s if kind == "add" else acc * s
+            else:
+                raise NotImplementedError(f"epilogue step {kind}")
+        o_ref[...] = acc.astype(o_ref.dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("activation", "block_m", "block_n", "block_k", "interpret", "out_dtype"),
+    static_argnames=(
+        "activation", "epilogue", "block_m", "block_n", "block_k", "interpret", "out_dtype",
+    ),
 )
 def dense_matmul(
     x: jax.Array,
     w: jax.Array,
     bias: Optional[jax.Array] = None,
-    *,
+    *sides: jax.Array,
     activation: Optional[str] = None,
+    epilogue: Tuple[Tuple, ...] = (),
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 128,
     interpret: bool = False,
     out_dtype=None,
 ) -> jax.Array:
-    """``act(x @ w + bias)`` -- 2-D operands, shapes multiples of the blocks.
+    """``epilogue(act(x @ w + bias))`` -- 2-D operands, shapes multiples of
+    the blocks; ``sides`` are [M, N] arrays streamed per-tile for the
+    epilogue's add/mul slots.
 
     Use :func:`repro.kernels.ops.matmul` for the padded/raked public API.
     """
@@ -85,6 +119,13 @@ def dense_matmul(
     )
     if activation not in _ACTIVATIONS:
         raise ValueError(f"unknown activation {activation!r}")
+    for step in epilogue:
+        if step[0] == "activation" and step[1] not in _ACTIVATIONS:
+            raise ValueError(f"unknown epilogue activation {step[1]!r}")
+        if step[0] in ("add", "mul") and not (0 <= step[1] < len(sides)):
+            raise ValueError(f"epilogue slot {step[1]} out of range ({len(sides)} sides)")
+    for s in sides:
+        assert s.shape == (m, n), (s.shape, (m, n))
     out_dtype = out_dtype or x.dtype
     grid = (m // block_m, n // block_n, k // block_k)
 
@@ -93,22 +134,36 @@ def dense_matmul(
         pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
     ]
     args = [x, w]
-    if bias is not None:
+    has_bias = bias is not None
+    if has_bias:
         assert bias.shape == (n,), bias.shape
         in_specs.append(pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)))
         args.append(bias.reshape(1, n))
-        kern = functools.partial(dense_matmul_kernel, activation=activation)
-    else:
-        def kern(x_ref, w_ref, o_ref, acc_ref):
-            return dense_matmul_kernel(
-                x_ref, w_ref, None, o_ref, acc_ref, activation=activation
-            )
+    out_tile = pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j))
+    in_specs.extend([out_tile] * len(sides))
+    args.extend(sides)
+    n_sides = len(sides)
+
+    def kern(*refs):
+        # refs: x, w, [bias], *sides, o, acc
+        b_ref = refs[2] if has_bias else None
+        first_side = 2 + int(has_bias)
+        dense_matmul_kernel(
+            refs[0],
+            refs[1],
+            b_ref,
+            refs[first_side : first_side + n_sides],
+            refs[-2],
+            refs[-1],
+            activation=activation,
+            epilogue=epilogue,
+        )
 
     return pl.pallas_call(
         kern,
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_specs=out_tile,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         compiler_params=_tpu_compiler_params(

@@ -1,0 +1,131 @@
+"""Fused elementwise step-program kernel (Pallas TPU).
+
+Executes a ``fused_elementwise`` graph node's ``steps`` program in a single
+VMEM-resident pass over a 2-D ``[M, D]`` view of the tensor: the primary
+operand is read from HBM once, every step (activation / add / mul / layer
+norm) runs on the VMEM tile, and the result is written back once.  The jnp
+interpreter in ``core/graph/executor.py`` pays one HBM read+write *per step*;
+this kernel pays one total, which is the whole point of the fusion pass for
+memory-bound glue (paper section 3, "DSL related optimization").
+
+Step encoding (kernel-local, translated from graph steps by the executor):
+
+* ``("activation", fn)``      -- apply ``fn`` to the running value
+* ``("add", slot)``           -- add side operand ``slot`` (same [M, D] view)
+* ``("mul", slot)``           -- multiply by side operand ``slot``
+* ``("norm", slot, eps)``     -- layer norm over D with scale/bias pair
+  ``slot``; statistics mask out the lane padding (``d_true``), so odd
+  (non-128-multiple) feature dims normalize exactly.
+
+Grid: ``(M/block_m,)`` with the full (padded) D per tile -- layer norm needs
+whole rows resident.  The ``ops.fused_elementwise`` wrapper handles padding,
+flattening, and block-size resolution through the tuning cache.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import _ACT
+
+__all__ = ["fused_elementwise_kernel", "fused_elementwise"]
+
+
+def fused_elementwise_kernel(
+    x_ref,
+    side_refs,
+    norm_refs,  # flat (scale0, bias0, scale1, bias1, ...)
+    o_ref,
+    *,
+    steps: Tuple[Tuple, ...],
+    d_true: int,
+):
+    """One grid step: run the whole step program on a [block_m, D] tile."""
+    y = x_ref[...].astype(jnp.float32)
+    for step in steps:
+        kind = step[0]
+        if kind == "activation":
+            y = _ACT[step[1]](y)
+        elif kind in ("add", "mul"):
+            s = side_refs[step[1]][...].astype(jnp.float32)
+            y = y + s if kind == "add" else y * s
+        elif kind == "norm":
+            slot, eps = step[1], step[2]
+            scale = norm_refs[2 * slot][...].astype(jnp.float32)
+            bias = norm_refs[2 * slot + 1][...].astype(jnp.float32)
+            d_pad = y.shape[-1]
+            if d_pad == d_true:
+                mu = jnp.mean(y, axis=-1, keepdims=True)
+                var = jnp.mean((y - mu) ** 2, axis=-1, keepdims=True)
+            else:
+                # lane padding must not pollute the statistics
+                cols = jax.lax.broadcasted_iota(jnp.int32, y.shape, 1)
+                valid = cols < d_true
+                ym = jnp.where(valid, y, 0.0)
+                mu = jnp.sum(ym, axis=-1, keepdims=True) / d_true
+                dy = jnp.where(valid, y - mu, 0.0)
+                var = jnp.sum(dy * dy, axis=-1, keepdims=True) / d_true
+            y = (y - mu) / jnp.sqrt(var + eps) * scale + bias
+        else:
+            raise NotImplementedError(f"fused step {kind}")
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("steps", "n_norms", "d_true", "block_m", "interpret", "out_dtype"),
+)
+def fused_elementwise(
+    x: jax.Array,
+    *operands: jax.Array,
+    steps: Tuple[Tuple, ...],
+    n_norms: int,
+    d_true: int,
+    block_m: int = 128,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """Run ``steps`` over ``x [M, D]`` -- 2-D, M a block_m multiple, D a lane
+    multiple.  ``operands`` are the side arrays (same [M, D]) followed by
+    ``n_norms`` (scale, bias) pairs shaped [1, D].
+
+    Use :func:`repro.kernels.ops.fused_elementwise` for the padded public API.
+    """
+    m, d = x.shape
+    assert m % block_m == 0, (x.shape, block_m)
+    n_sides = len(operands) - 2 * n_norms
+    sides, norms = operands[:n_sides], operands[n_sides:]
+    for s in sides:
+        assert s.shape == x.shape, (s.shape, x.shape)
+    for nv in norms:
+        assert nv.shape == (1, d), (nv.shape, d)
+    out_dtype = out_dtype or x.dtype
+    grid = (m // block_m,)
+
+    row = pl.BlockSpec((block_m, d), lambda i: (i, 0))
+    vec = pl.BlockSpec((1, d), lambda i: (0, 0))
+    in_specs = [row] + [row] * n_sides + [vec] * (2 * n_norms)
+
+    def kern(*refs):
+        fused_elementwise_kernel(
+            refs[0],
+            refs[1 : 1 + n_sides],
+            refs[1 + n_sides : 1 + n_sides + 2 * n_norms],
+            refs[-1],
+            steps=steps,
+            d_true=d_true,
+        )
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=row,
+        out_shape=jax.ShapeDtypeStruct((m, d), out_dtype),
+        interpret=interpret,
+    )(x, *sides, *norms)

@@ -29,28 +29,22 @@ from . import ref as _ref
 from .bsr_matmul import bsr_matmul as _bsr_matmul
 from .dense_matmul import dense_matmul as _dense_matmul
 from .flash_attention import flash_attention as _flash_attention
+from .fused_elementwise import fused_elementwise as _fused_elementwise
 from .fused_ffn import ffn_gateup as _ffn_gateup
+from .pallas_compat import interpret_default
 
 __all__ = [
     "interpret_default",
     "matmul",
     "bsr_matmul",
     "col_matmul",
+    "fused_elementwise",
     "ffn_gateup",
     "attention",
     "TuningCache",
     "tuning_cache",
     "set_tuning",
 ]
-
-
-def interpret_default() -> bool:
-    """Pallas interpret mode: forced via REPRO_PALLAS_INTERPRET, else on
-    whenever we are not running on real TPU hardware."""
-    env = os.environ.get("REPRO_PALLAS_INTERPRET")
-    if env is not None:
-        return env not in ("0", "false", "False")
-    return jax.default_backend() != "tpu"
 
 
 def _flatten_batch(x: jax.Array) -> Tuple[jax.Array, Tuple[int, ...]]:
@@ -91,10 +85,12 @@ class TuningCache:
     """
 
     #: default blocks per op: matmul family is (block_m, block_n, block_k);
-    #: bsr_matmul tunes only block_m (block_n/k come from the packed format)
+    #: bsr_matmul tunes only block_m (block_n/k come from the packed format);
+    #: fused_elementwise tunes block_m (full feature dim is tile-resident)
     DEFAULTS: Dict[str, Tuple[int, ...]] = {
         "matmul": (128, 128, 128),
         "bsr_matmul": (128,),
+        "fused_elementwise": (128,),
     }
     #: small sweep grids; TPU lanes want the minor dims at 128 multiples
     #: (pallas_guide: f32 min tile 8x128, MXU 128x128)
@@ -107,6 +103,7 @@ class TuningCache:
             (128, 128, 256),
         ),
         "bsr_matmul": ((64,), (128,), (256,)),
+        "fused_elementwise": ((64,), (128,), (256,), (512,)),
     }
 
     def __init__(self, enabled: Optional[bool] = None, path: Optional[str] = None):
@@ -241,17 +238,23 @@ def _concrete(*arrays) -> bool:
     return not any(isinstance(a, jax.core.Tracer) for a in arrays)
 
 
-def _matmul_blocked(x2, w, bias, activation, block_m, block_n, block_k, interpret):
+def _matmul_blocked(
+    x2, w, bias, activation, block_m, block_n, block_k, interpret,
+    epilogue=(), sides=(),
+):
     m, k = x2.shape
     n = w.shape[1]
     xp = _pad_axis(_pad_axis(x2, block_m, 0), block_k, 1)
     wp = _pad_axis(_pad_axis(w, block_k, 0), block_n, 1)
     bp = None if bias is None else _pad_axis(bias, block_n, 0)
+    sp = [_pad_axis(_pad_axis(s, block_m, 0), block_n, 1) for s in sides]
     return _dense_matmul(
         xp,
         wp,
         bp,
+        *sp,
         activation=activation,
+        epilogue=tuple(epilogue),
         block_m=block_m,
         block_n=block_n,
         block_k=block_k,
@@ -265,14 +268,19 @@ def matmul(
     bias: Optional[jax.Array] = None,
     *,
     activation: Optional[str] = None,
+    epilogue: Sequence[Tuple] = (),
+    epilogue_sides: Sequence[jax.Array] = (),
     block_m: Optional[int] = None,
     block_n: Optional[int] = None,
     block_k: Optional[int] = None,
     interpret: Optional[bool] = None,
     _format: str = "dense",
 ) -> jax.Array:
-    """``act(x @ w + bias)`` for arbitrary leading batch dims via the fused
-    dense Pallas kernel; pads M/N/K to block multiples and slices back.
+    """``epilogue(act(x @ w + bias))`` for arbitrary leading batch dims via
+    the fused dense Pallas kernel; pads M/N/K to block multiples and slices
+    back.  ``epilogue`` is a step program (``("activation", fn)`` /
+    ``("add"|"mul", slot)`` into ``epilogue_sides``, each shaped like the
+    output) run on the f32 accumulator inside the kernel.
 
     Block sizes left as ``None`` are resolved through the tuning cache
     (cached winner for this shape if one exists, else the seeded default;
@@ -282,22 +290,94 @@ def matmul(
     x2, lead = _flatten_batch(x)
     m, k = x2.shape
     n = w.shape[1]
+    sides2 = []
+    for s in epilogue_sides:
+        assert s.shape == (*lead, n) or s.shape == (m, n), (s.shape, (*lead, n))
+        sides2.append(s.reshape(m, n))
     if block_m is None and block_n is None and block_k is None:
         runner = None
-        if _TUNING.enabled and _concrete(x2, w, bias):
+        if _TUNING.enabled and _concrete(x2, w, bias, *sides2):
             runner = lambda bm, bn, bk: _matmul_blocked(
-                x2, w, bias, activation, bm, bn, bk, interpret
+                x2, w, bias, activation, bm, bn, bk, interpret, epilogue, sides2
             )
+        # an epilogue'd GEMM streams extra per-tile sides (different VMEM
+        # pressure): never let its swept winner alias the plain GEMM's
+        fmt = (
+            f"{_format}+e{len(epilogue)}s{len(sides2)}" if epilogue else _format
+        )
         block_m, block_n, block_k = _TUNING.resolve(
-            "matmul", m, n, k, x2.dtype, _format, interpret, runner
+            "matmul", m, n, k, x2.dtype, fmt, interpret, runner
         )
     elif block_m is None or block_n is None or block_k is None:
         # partially pinned: fill from defaults, never from the cache -- a
         # swept winner for the free dims was timed with different pins
         dm, dn, dk = TuningCache.DEFAULTS["matmul"]
         block_m, block_n, block_k = block_m or dm, block_n or dn, block_k or dk
-    out = _matmul_blocked(x2, w, bias, activation, block_m, block_n, block_k, interpret)
+    out = _matmul_blocked(
+        x2, w, bias, activation, block_m, block_n, block_k, interpret,
+        epilogue, sides2,
+    )
     return out.reshape(*lead, n)
+
+
+def fused_elementwise(
+    x: jax.Array,
+    sides: Sequence[jax.Array] = (),
+    steps: Sequence[Tuple] = (),
+    norm_params: Sequence[Tuple[jax.Array, jax.Array]] = (),
+    *,
+    block_m: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Run a fused elementwise step program over ``x`` in one Pallas pass.
+
+    ``x`` has any leading batch dims; steps operate on the flattened
+    ``[M, D]`` view (D = last dim, the layer-norm axis).  ``sides`` must
+    match ``x``'s shape exactly (the tiled kernel streams them per-block);
+    ``norm_params`` is one (scale[D], bias[D]) pair per ``("norm", slot,
+    eps)`` step.  One HBM read + write total instead of one per step.
+
+    ``block_m=None`` consults the tuning cache under the
+    ``fused_elementwise`` op key (M x D x n_steps).
+    """
+    interpret = interpret_default() if interpret is None else interpret
+    d = x.shape[-1]
+    for s in sides:
+        assert s.shape == x.shape, (s.shape, x.shape)
+    x2, lead = _flatten_batch(x)
+    m = x2.shape[0]
+    steps = tuple(tuple(s) for s in steps)
+
+    def run(bm):
+        xp = _pad_axis(_pad_axis(x2, bm, 0), 128, 1)
+        sp = [_pad_axis(_pad_axis(s.reshape(m, d), bm, 0), 128, 1) for s in sides]
+        nps = []
+        for scale, bias in norm_params:
+            nps.append(_pad_axis(scale, 128, 0).reshape(1, -1))
+            nps.append(_pad_axis(bias, 128, 0).reshape(1, -1))
+        return _fused_elementwise(
+            xp,
+            *sp,
+            *nps,
+            steps=steps,
+            n_norms=len(norm_params),
+            d_true=d,
+            block_m=bm,
+            interpret=interpret,
+        )[:m, :d]
+
+    if block_m is None:
+        runner = None
+        flat_norms = [a for pair in norm_params for a in pair]
+        if _TUNING.enabled and _concrete(x2, *sides, *flat_norms):
+            runner = lambda bm: run(bm)
+        # side/norm counts change per-tile VMEM residency: same-shape
+        # programs with different operand counts must not share a winner
+        fmt = f"ew+s{len(sides)}n{len(norm_params)}"
+        (block_m,) = _TUNING.resolve(
+            "fused_elementwise", m, d, len(steps), x2.dtype, fmt, interpret, runner
+        )
+    return run(block_m).reshape(x.shape)
 
 
 def bsr_matmul(
@@ -381,15 +461,19 @@ def col_matmul(
     bias: Optional[jax.Array] = None,
     *,
     activation: Optional[str] = None,
+    epilogue: Sequence[Tuple] = (),
+    epilogue_sides: Sequence[jax.Array] = (),
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Column-pruned ``act(x @ W + bias)``: static input gather (XLA) + the
-    strictly smaller fused dense GEMM (Pallas).  ``values [K_kept, N]``.
+    strictly smaller fused dense GEMM (Pallas), with the same fused
+    ``epilogue`` program as :func:`matmul`.  ``values [K_kept, N]``.
     Tuned under its own ``colcompact`` cache key (the gathered K differs
     from the dense layer's)."""
     xg = jnp.take(x, kept, axis=-1)
     return matmul(
-        xg, values, bias, activation=activation, interpret=interpret,
+        xg, values, bias, activation=activation,
+        epilogue=epilogue, epilogue_sides=epilogue_sides, interpret=interpret,
         _format="colcompact",
     )
 

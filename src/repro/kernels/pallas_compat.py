@@ -1,12 +1,19 @@
-"""Version shim for Pallas TPU compiler params.
+"""Version/backend shims for Pallas TPU kernels.
 
-jax >= 0.5 exposes ``pltpu.CompilerParams``; 0.4.x (this container ships
-0.4.37) calls the same dataclass ``TPUCompilerParams``.  Kernels import the
-helper so they compile against either.
+* jax >= 0.5 exposes ``pltpu.CompilerParams``; 0.4.x (this container ships
+  0.4.37) calls the same dataclass ``TPUCompilerParams``.  Kernels import
+  :func:`tpu_compiler_params` so they compile against either.
+* :func:`interpret_default` is the CPU-CI guard shared by every kernel
+  wrapper: Pallas interpret mode is forced on whenever we are not on real
+  TPU hardware (overridable via ``REPRO_PALLAS_INTERPRET``), so the fused
+  kernels stay exercisable -- and parity-testable -- in CPU-only containers.
 """
 
 from __future__ import annotations
 
+import os
+
+import jax
 from jax.experimental.pallas import tpu as pltpu
 
 _CP = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
@@ -14,3 +21,12 @@ _CP = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 def tpu_compiler_params(**kw):
     return _CP(**kw)
+
+
+def interpret_default() -> bool:
+    """Pallas interpret mode: forced via REPRO_PALLAS_INTERPRET, else on
+    whenever we are not running on real TPU hardware."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"

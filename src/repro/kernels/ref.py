@@ -12,7 +12,15 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["matmul_ref", "bsr_matmul_ref", "ffn_gateup_ref", "pbcsr_to_dense_ref", "flash_attention_ref"]
+__all__ = [
+    "matmul_ref",
+    "bsr_matmul_ref",
+    "ffn_gateup_ref",
+    "pbcsr_to_dense_ref",
+    "flash_attention_ref",
+    "fused_elementwise_ref",
+    "apply_steps_ref",
+]
 
 _ACT = {
     None: lambda x: x,
@@ -21,6 +29,48 @@ _ACT = {
     "silu": jax.nn.silu,
     "tanh": jnp.tanh,
 }
+
+
+def apply_steps_ref(y, steps, sides=(), norm_params=()):
+    """Run a kernel-local step program with plain jnp: the fused-kernel
+    oracle *and* the single source of truth for step math (the executor's
+    epilogue/fused-node jnp paths delegate here).  ``("add"|"mul", slot)``
+    indexes ``sides``; ``("norm", slot, eps)`` (layer norm over the last
+    dim) and ``("norm_instance", slot, eps)`` (per-(N, C) over NCHW spatial
+    dims) index ``norm_params`` -- a sequence of (scale, bias) pairs."""
+    for step in steps:
+        kind = step[0]
+        if kind == "activation":
+            y = _ACT[step[1]](y)
+        elif kind == "add":
+            y = y + sides[step[1]]
+        elif kind == "mul":
+            y = y * sides[step[1]]
+        elif kind in ("norm", "norm_instance"):
+            scale, bias = norm_params[step[1]]
+            if kind == "norm":
+                mu = y.mean(axis=-1, keepdims=True)
+                var = y.var(axis=-1, keepdims=True)
+            else:
+                mu = y.mean(axis=(2, 3), keepdims=True)
+                var = y.var(axis=(2, 3), keepdims=True)
+                scale = scale[None, :, None, None]
+                bias = bias[None, :, None, None]
+            y = (y - mu) / jnp.sqrt(var + step[2]) * scale + bias
+        else:
+            raise NotImplementedError(f"step {kind}")
+    return y
+
+
+def fused_elementwise_ref(x, sides, steps, norm_params=(), *, out_dtype=None):
+    """f32 oracle for the fused elementwise Pallas kernel."""
+    y = apply_steps_ref(
+        x.astype(jnp.float32),
+        steps,
+        [s.astype(jnp.float32) for s in sides],
+        [(s.astype(jnp.float32), b.astype(jnp.float32)) for s, b in norm_params],
+    )
+    return y.astype(out_dtype or x.dtype)
 
 
 def matmul_ref(

@@ -6,6 +6,8 @@ Examples (CPU):
       --batch 4 --prompt-len 16 --new-tokens 12
   PYTHONPATH=src python -m repro.launch.serve --graph-app style_transfer \
       --size 64 --frames 3
+  PYTHONPATH=src python -m repro.launch.serve --graph-app coloring \
+      --size 64 --frames 10 --batch-size 4   # throughput mode (PlanServer)
 """
 
 from __future__ import annotations
@@ -48,9 +50,37 @@ def _serve_graph_app(args) -> None:
         f"peak_act={mem['peak_activation_bytes'] / 1e6:.2f}MB "
         f"params={mem['param_bytes'] / 1e6:.2f}MB"
     )
+    rng = np.random.default_rng(args.seed)
+
+    if args.batch_size is not None:
+        # throughput mode: a queue of single frames served in fixed-size
+        # compiled batches (tail batch padded, never re-compiled)
+        from ..serving.engine import PlanServer
+
+        server = PlanServer(plan, go.params, args.batch_size)
+        n_frames = args.frames * args.batch
+        # warm the chunk compilation before timing
+        server.submit(jnp.zeros((c_in, args.size, args.size), jnp.float32))
+        jax.block_until_ready(server.flush())
+        server.stats = {k: 0 for k in server.stats}
+        for _ in range(n_frames):
+            server.submit(
+                jnp.asarray(
+                    rng.standard_normal((c_in, args.size, args.size)), jnp.float32
+                )
+            )
+        t0 = time.time()
+        jax.block_until_ready(server.flush())
+        dt = time.time() - t0
+        s = server.stats
+        print(
+            f"{args.graph_app}: {s['frames']} frames in {dt:.3f}s "
+            f"({s['frames'] / dt:.1f} frames/s) over {s['batches']} batches "
+            f"of {args.batch_size} ({s['padded_frames']} padded)"
+        )
+        return
 
     f = jax.jit(plan)
-    rng = np.random.default_rng(args.seed)
     x = jnp.asarray(rng.standard_normal(shape), jnp.float32)
     jax.block_until_ready(f(go.params, x))  # compile
     times = []
@@ -81,6 +111,9 @@ def main() -> None:
     ap.add_argument("--size", type=int, default=64, help="graph-app frame size")
     ap.add_argument("--base", type=int, default=16, help="graph-app channel width")
     ap.add_argument("--frames", type=int, default=3)
+    ap.add_argument("--batch-size", type=int, default=None,
+                    help="graph-app throughput mode: serve frames*batch single "
+                         "frames through plan.batched(batch_size) (PlanServer)")
     args = ap.parse_args()
 
     if args.graph_app:

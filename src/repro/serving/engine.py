@@ -11,6 +11,11 @@ The engine wraps the uniform model API (models/registry.py):
 
 Pruned serving: pass a model whose params were processed by the compiler
 layer (``exec_mode='bsr'|'colpack'``) -- the engine is agnostic.
+
+Plan serving: :class:`PlanServer` runs the vision apps' execution plans
+(``core/graph/executor.py``) at throughput -- frames queue up and execute in
+fixed-size compiled batches via :meth:`ExecutionPlan.batched`, padding only
+the tail batch.
 """
 
 from __future__ import annotations
@@ -99,6 +104,59 @@ class Engine:
             tok = self._sample(logits)
             out.append(tok)
         return GenerationResult(tokens=np.stack([np.asarray(t) for t in out], axis=1))
+
+
+# --------------------------------------------------------------------------- #
+# plan serving (vision apps through the graph compiler)                        #
+# --------------------------------------------------------------------------- #
+
+
+class PlanServer:
+    """Throughput serving of a compiled :class:`ExecutionPlan`.
+
+    Submitted frames (single samples, no batch dim) accumulate in a queue;
+    :meth:`flush` stacks them into one macro-batch and pushes it through
+    ``plan.batched(batch_size)`` -- every chunk runs at the fixed compiled
+    batch shape, only the tail chunk carries padding.  Stats record the
+    padding overhead, the serving cost of never re-compiling.
+    """
+
+    def __init__(self, plan, params, batch_size: int, *, via_vmap: bool = False):
+        self.plan = plan
+        self.params = params
+        self.batch_size = batch_size
+        self.batched = plan.batched(batch_size, via_vmap=via_vmap)
+        self._pending: List[Tuple[Array, ...]] = []
+        self.stats: Dict[str, int] = {"frames": 0, "batches": 0, "padded_frames": 0}
+
+    def submit(self, *frame_inputs: Array) -> int:
+        """Queue one frame (one array per graph input, sans batch dim).
+        Returns its index within the next flush."""
+        if len(frame_inputs) != len(self.plan.graph.inputs):
+            raise TypeError(
+                f"plan expects {len(self.plan.graph.inputs)} inputs per frame, "
+                f"got {len(frame_inputs)}"
+            )
+        self._pending.append(tuple(jnp.asarray(f) for f in frame_inputs))
+        return len(self._pending) - 1
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def flush(self):
+        """Run all queued frames; returns outputs stacked over the frame
+        axis (a tuple when the plan has multiple outputs)."""
+        if not self._pending:
+            return None
+        frames, self._pending = self._pending, []
+        inputs = tuple(
+            jnp.stack([f[i] for f in frames]) for i in range(len(frames[0]))
+        )
+        out = self.batched(self.params, *inputs)
+        for k, v in self.batched.last_stats.items():
+            self.stats[k] = self.stats.get(k, 0) + v
+        return out
 
 
 # --------------------------------------------------------------------------- #
