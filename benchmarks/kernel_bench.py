@@ -17,6 +17,11 @@ algorithm, so this bench reports what is *portable* from this container:
    only) and ``fuse_epilogue`` plan-step reduction + parity on the three
    demo apps.  Results land in ``results/BENCH_fusion.json`` so the perf
    trajectory is recorded across PRs.
+6. quant: the INT8 qmatmul kernel (W8A8 + W8-only) vs the fp32 GEMM --
+   bytes-moved and parity in every mode, wall-clock speedup asserted on
+   real hardware only -- and the three demo apps end-to-end through the
+   ``quantize`` pass (fp32-vs-int8 plan ms, weight bytes, max-abs-error,
+   parity gated at 5e-2).  Results land in ``results/BENCH_quant.json``.
 
 ``--smoke`` shrinks every shape so CI can exercise the full path without a
 TPU (also reachable via ``make bench-smoke``).
@@ -237,6 +242,130 @@ def bench_fusion(smoke: bool = False, out_path: str | None = None) -> dict:
     return record
 
 
+# --------------------------------------------------------------------------- #
+# quant: INT8 kernels + quantized demo-app plans                               #
+# --------------------------------------------------------------------------- #
+
+
+def bench_quant(smoke: bool = False, out_path: str | None = None) -> dict:
+    from repro.core.graph import PassContext, PassManager, compile_plan, optimize
+    from repro.kernels import qmatmul
+    from repro.models.cnn import APP_QUANT_SKIP, APPS, app_masks
+    from repro.quant import QTensor, calibrate_plan
+
+    interpret = kops.interpret_default()
+    record: dict = {
+        "mode": "interpret" if interpret else "hw",
+        "smoke": smoke,
+        "kernels": [],
+        "apps": [],
+    }
+
+    # kernel-level: W8A8 / W8-only qmatmul vs the fp32 Pallas GEMM.
+    # interpret-mode wall-clock measures Python, so shapes stay modest there;
+    # bytes-moved is the portable story (weight stream shrinks 4x).
+    m, n, k = (64, 128, 128) if smoke else (256, 512, 512)
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k)) * 0.5
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.05
+    qt = QTensor.from_float(w, axis=1)
+    x_scale = float(jnp.max(jnp.abs(x))) / 127.0
+    f32 = jax.jit(lambda x, w: matmul(x, w))
+    t_f32 = _median_time(f32, x, w, reps=3 if smoke else 7)
+    want = ref.matmul_ref(x, w)
+    print("quant,scheme,MxNxK,ms_fp32,ms_int8,speedup,w_bytes_fp32,w_bytes_int8,max_err")
+    for scheme, kw in (("w8", {}), ("w8a8", {"x_scale": x_scale})):
+        fq = jax.jit(lambda x, v, s: qmatmul(x, v, s, **kw))
+        t_q = _median_time(fq, x, qt.values, qt.scale, reps=3 if smoke else 7)
+        err = float(jnp.abs(fq(x, qt.values, qt.scale) - want).max())
+        # parity vs fp32 gates the bench in every mode (quantization noise
+        # bounded by the per-channel scales); exactness vs the int8 oracle
+        # is covered in tests/test_quant.py
+        assert err <= 5e-2, (scheme, err)
+        speedup = t_f32 / t_q
+        if not interpret:  # interpret timings measure Python, not silicon
+            assert speedup > 1.0, (scheme, speedup)
+        row = {
+            "scheme": scheme, "shape": [m, n, k],
+            "ms_fp32": t_f32 * 1e3, "ms_int8": t_q * 1e3, "speedup": speedup,
+            "w_bytes_fp32": int(w.size) * 4, "w_bytes_int8": qt.nbytes,
+            "max_err": err,
+        }
+        record["kernels"].append(row)
+        print(
+            f"quant,{scheme},{m}x{n}x{k},{t_f32*1e3:.3f},{t_q*1e3:.3f},"
+            f"{speedup:.2f},{int(w.size)*4},{qt.nbytes},{err:.2e}"
+        )
+
+    # app-level: calibrate -> quantize pass -> quantized plan vs fp32 plan.
+    # CPU times the jnp reference executions of both (XLA-real); on TPU the
+    # quant backend runs the INT8 Pallas kernels.  This subsection is a
+    # *correctness* gate, so it runs at the fixed regression scale and on
+    # the canonical probe shared with tests/test_quant.py in every mode:
+    # max-abs error is the max over all output pixels (fat-tailed across
+    # probes and growing with frame area), so gating one pinned
+    # configuration keeps the 5e-2 contract a meaningful regression signal
+    # across PRs (full mode only adds timing reps).
+    shapes = {
+        "style_transfer": (1, 3, 16, 16),
+        "coloring": (1, 1, 16, 16),
+        "super_resolution": (1, 3, 8, 8),
+    }
+    key = jax.random.PRNGKey(0)
+    backend = "reference" if interpret else "quant"
+    f32_backend = "reference" if interpret else "kernel"
+    print("quant_app,app,backend,ms_fp32,ms_int8,w_bytes_fp32,w_bytes_int8,ratio,max_err")
+    for app in APPS:
+        g = APPS[app](key, base=8)
+        masks, structures = app_masks(g, app, sparsity=0.5)
+        go = optimize(g, masks, structures)
+        plan_f = compile_plan(go, backend=f32_backend)
+        batches = [
+            jax.random.normal(jax.random.fold_in(key, i), shapes[app])
+            for i in range(2)
+        ]
+        plan_ref = compile_plan(go, backend="reference")
+        table = calibrate_plan(plan_ref, go.params, batches)
+        gq = PassManager(("quantize",)).run(
+            go, PassContext(calibration=table, quant_skip=APP_QUANT_SKIP[app])
+        )
+        plan_q = compile_plan(gq, backend=backend)
+        x = jax.random.normal(jax.random.fold_in(key, 99), shapes[app])
+        err = float(jnp.abs(plan_q(gq.params, x) - plan_f(go.params, x)).max())
+        assert err <= 5e-2, (app, err)  # parity gates the bench in every mode
+        mem_f = plan_f.memory_estimate(x)
+        mem_q = plan_q.memory_estimate(x)
+        ratio = mem_f["param_bytes"] / mem_q["param_bytes"]
+        assert ratio >= 3.0, (app, ratio)
+        jf = jax.jit(lambda p, x: plan_f(p, x))
+        jq = jax.jit(lambda p, x: plan_q(p, x))
+        t_f = _median_time(jf, go.params, x, reps=3 if smoke else 7)
+        t_q = _median_time(jq, gq.params, x, reps=3 if smoke else 7)
+        row = {
+            "app": app, "backend": backend,
+            "ms_fp32": t_f * 1e3, "ms_int8": t_q * 1e3,
+            "w_bytes_fp32": mem_f["param_bytes"],
+            "w_bytes_int8": mem_q["param_bytes"],
+            "bytes_ratio": ratio,
+            "weight_bytes_saved": mem_q["weight_bytes_saved"],
+            "max_err": err,
+        }
+        record["apps"].append(row)
+        print(
+            f"quant_app,{app},{backend},{t_f*1e3:.2f},{t_q*1e3:.2f},"
+            f"{mem_f['param_bytes']},{mem_q['param_bytes']},{ratio:.2f},{err:.2e}"
+        )
+
+    # smoke numbers are CI plumbing, not perf data: never clobber the
+    # cross-PR trajectory artifact with them
+    default_name = "BENCH_quant_smoke.json" if smoke else "BENCH_quant.json"
+    out_path = out_path or os.path.join(RESULTS_DIR, default_name)
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"quant,saved,{os.path.abspath(out_path)}")
+    return record
+
+
 def main(smoke: bool = False):
     if smoke:
         bench_bsr_compute_scaling(k=256, n=256, m=128)
@@ -244,12 +373,14 @@ def main(smoke: bool = False):
         bench_storage(side=256)
         bench_tuned_blocks(shapes=[(8, 128, 128)])
         bench_fusion(smoke=True)
+        bench_quant(smoke=True)
     else:
         bench_bsr_compute_scaling()
         bench_colcompact_walltime()
         bench_storage()
         bench_tuned_blocks()
         bench_fusion()
+        bench_quant()
 
 
 if __name__ == "__main__":

@@ -1,8 +1,10 @@
 from .ir import Graph, GraphBuilder, Node
 from .executor import (
+    BACKENDS,
     BatchedPlan,
     ExecutionPlan,
     compile_plan,
+    handlers_for,
     register_op,
     registered_ops,
 )
@@ -27,5 +29,6 @@ from .passes import (
     fuse_elementwise,
     fuse_epilogue,
     optimize,
+    quantize,
     substitute_sparse,
 )

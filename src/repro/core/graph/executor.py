@@ -42,8 +42,10 @@ from ...kernels import ref as kref
 from .ir import Graph, Node
 
 __all__ = [
+    "BACKENDS",
     "register_op",
     "registered_ops",
+    "handlers_for",
     "Runtime",
     "Step",
     "ExecutionPlan",
@@ -53,10 +55,23 @@ __all__ = [
 
 _ACT = kref._ACT
 
-BACKENDS = ("kernel", "reference")
+#: ``kernel``: Pallas-backed GEMMs.  ``reference``: pure jnp (XLA baseline +
+#: parity oracle).  ``quant``: the kernel set *overlaid* with the INT8
+#: handlers -- the only backend that executes ``qlinear`` nodes with the
+#: quantized Pallas kernels (selection mode for post-``quantize``-pass
+#: plans); non-quantized ops fall through to their kernel handlers.
+BACKENDS = ("kernel", "reference", "quant")
 
 #: backend -> op -> handler(params, inputs, attrs, runtime) -> array
 _HANDLERS: Dict[str, Dict[str, Callable]] = {b: {} for b in BACKENDS}
+
+
+def handlers_for(backend: str) -> Dict[str, Callable]:
+    """The effective handler table for ``backend`` (``quant`` inherits every
+    kernel handler and overrides/extends with the quantized set)."""
+    if backend == "quant":
+        return {**_HANDLERS["kernel"], **_HANDLERS["quant"]}
+    return dict(_HANDLERS[backend])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,7 +96,7 @@ def register_op(op: str, backends: Sequence[str] = BACKENDS):
 
 
 def registered_ops(backend: str = "kernel") -> List[str]:
-    return sorted(_HANDLERS[backend])
+    return sorted(handlers_for(backend))
 
 
 # --------------------------------------------------------------------------- #
@@ -199,13 +214,20 @@ def _sparse_linear_kernel(p, xs, a, rt):
             y = kops.matmul(xs[0], values, p.get("b"), **kw)
         return y if steps is not None else _apply_epilogue(y, epi, xs, p)
     if fmt == "pbcsr":
-        # band-dispatched kernel: epilogue applied after the banded concat
-        y = kops.bsr_matmul(
-            xs[0], p["values"], p["block_rows"], p.get("b"),
+        # band-dispatched kernel: tile-fusable epilogues run on the f32
+        # accumulator inside each band's kernel (sides sliced per band);
+        # norm steps / broadcast sides fall back to the jnp tail
+        nb, _, _, bn = p["values"].shape
+        out_shape = (*xs[0].shape[:-1], nb * bn)
+        steps, sides = _kernel_epilogue(epi, xs, out_shape)
+        kw = dict(
             activation=a.get("activation"), bands=a.get("bands"),
             interpret=rt.interpret,
         )
-        return _apply_epilogue(y, epi, xs, p)
+        if steps is not None:
+            kw.update(epilogue=steps, epilogue_sides=sides)
+        y = kops.bsr_matmul(xs[0], p["values"], p["block_rows"], p.get("b"), **kw)
+        return y if steps is not None else _apply_epilogue(y, epi, xs, p)
     raise NotImplementedError(f"sparse format {fmt}")
 
 
@@ -230,6 +252,61 @@ def _sparse_linear_ref(p, xs, a, rt):
     else:
         raise NotImplementedError(f"sparse format {fmt}")
     return _apply_epilogue(y, a.get("epilogue") or (), xs, p)
+
+
+# --------------------------------------------------------------------------- #
+# handlers: quantized GEMM family (produced by the ``quantize`` pass)          #
+# --------------------------------------------------------------------------- #
+#
+# ``qlinear`` node contract -- params: ``values`` int8 [K', N] (+ ``kept``
+# for colcompact, ``b`` f32), ``w_scale`` f32 [N]; attrs: ``format`` in
+# {dense, colcompact, channelcompact}, ``scheme`` in {w8, w8a8} (+
+# ``x_scale`` float when w8a8), plus the usual activation/epilogue attrs and
+# a ``bytes_saved`` annotation from the pass.
+
+
+@register_op("qlinear", backends=("quant",))
+def _qlinear_quant(p, xs, a, rt):
+    """INT8 Pallas path: W8A8 (int32 MXU accumulation) when the node carries
+    a calibrated activation scale, else W8-only (per-tile VMEM dequant)."""
+    x = xs[0]
+    if a.get("format") == "colcompact":
+        x = jnp.take(x, p["kept"], axis=-1)
+    epi = a.get("epilogue") or ()
+    out_shape = (*xs[0].shape[:-1], p["values"].shape[1])
+    steps, sides = _kernel_epilogue(epi, xs, out_shape)
+    kw = dict(
+        x_scale=a.get("x_scale"), activation=a.get("activation"),
+        interpret=rt.interpret, _format=a.get("format", "dense"),
+    )
+    if steps is not None:
+        kw.update(epilogue=steps, epilogue_sides=sides)
+    y = kops.qmatmul(x, p["values"], p["w_scale"], p.get("b"), **kw)
+    return y if steps is not None else _apply_epilogue(y, epi, xs, p)
+
+
+@register_op("qlinear", backends=("reference",))
+def _qlinear_ref(p, xs, a, rt):
+    """jnp oracle: dequantized weights (and fake-quantized activations for
+    w8a8) through the f32 reference GEMM -- simulates the kernel's integer
+    math bit-closely, and gives memory_estimate an abstract-evalable body."""
+    x = xs[0]
+    if a.get("format") == "colcompact":
+        x = jnp.take(x, p["kept"], axis=-1)
+    y = kref.qmatmul_ref(
+        x, p["values"], p["w_scale"], p.get("b"),
+        x_scale=a.get("x_scale"), activation=a.get("activation"),
+    )
+    return _apply_epilogue(y, a.get("epilogue") or (), xs, p)
+
+
+@register_op("qconv2d")
+def _qconv2d(p, xs, a, rt):
+    """INT8-stored conv: weights dequantize per-call (storage shrinks 4x;
+    the MXU stays dense f32 -- same stance as pattern-pruned convs), then
+    the regular conv2d handler runs, epilogue included."""
+    w = p["values"].astype(jnp.float32) * p["w_scale"][:, None, None, None]
+    return _conv2d({**p, "w": w}, xs, a, rt)
 
 
 # --------------------------------------------------------------------------- #
@@ -419,20 +496,36 @@ class ExecutionPlan:
 
     def __post_init__(self):
         self._rt = Runtime(backend=self.backend, interpret=self.interpret)
-        self._handlers = _HANDLERS[self.backend]
+        self._handlers = handlers_for(self.backend)
 
     # -- execution ----------------------------------------------------------- #
     def __call__(self, params: Dict[str, Dict[str, Any]], *args):
+        return self.run_steps(params, *args)
+
+    def run_steps(
+        self,
+        params: Dict[str, Dict[str, Any]],
+        *args,
+        observer: Optional[Callable[[str, Any], None]] = None,
+    ):
+        """Execute the plan; ``observer(name, value)`` (if given) sees every
+        graph input and node output as it is produced -- the calibration hook
+        used by :func:`repro.quant.calibrate.calibrate_plan`."""
         if len(args) != len(self.graph.inputs):
             raise TypeError(
                 f"plan expects {len(self.graph.inputs)} inputs "
                 f"{self.graph.inputs}, got {len(args)}"
             )
         env: Dict[str, Any] = dict(zip(self.graph.inputs, args))
+        if observer is not None:
+            for name, v in env.items():
+                observer(name, v)
         for step in self.steps:
             n = step.node
             xs = [env[i] for i in n.inputs]
             env[n.name] = self._handlers[n.op](params.get(n.name, {}), xs, n.attrs, self._rt)
+            if observer is not None:
+                observer(n.name, env[n.name])
             for f in step.frees:  # dead intermediate: release our reference
                 del env[f]
         outs = tuple(env[o] for o in self.graph.outputs)
@@ -454,10 +547,19 @@ class ExecutionPlan:
         )
         nbytes = lambda s: int(np.prod(s.shape)) * np.dtype(s.dtype).itemsize if s.shape else np.dtype(s.dtype).itemsize
         param_bytes = sum(nbytes(v) for v in jax.tree.leaves(pstructs))
+        # per-dtype breakdown: quantized plans show their int8 payloads here
+        # (the storage win the quantize pass bought)
+        param_bytes_by_dtype: Dict[str, int] = {}
+        for v in jax.tree.leaves(pstructs):
+            key = np.dtype(v.dtype).name
+            param_bytes_by_dtype[key] = param_bytes_by_dtype.get(key, 0) + nbytes(v)
+        weight_bytes_saved = sum(
+            int(n.attrs.get("bytes_saved", 0)) for n in self.graph.nodes
+        )
         env: Dict[str, Any] = dict(zip(self.graph.inputs, structs))
         # prefer jnp reference handlers (abstract-eval anywhere), but fall
         # back to the plan's own backend for ops registered only there
-        handlers = {**_HANDLERS[self.backend], **_HANDLERS["reference"]}
+        handlers = {**handlers_for(self.backend), **_HANDLERS["reference"]}
         rt = Runtime(backend="reference", interpret=self.interpret)
         peak = live = sum(nbytes(s) for s in env.values())
         per_step = []
@@ -477,6 +579,8 @@ class ExecutionPlan:
         return {
             "peak_activation_bytes": int(peak),
             "param_bytes": int(param_bytes),
+            "param_bytes_by_dtype": param_bytes_by_dtype,
+            "weight_bytes_saved": int(weight_bytes_saved),
             "peak_total_bytes": int(peak + param_bytes),
             "per_step": per_step,
             "out_structs": tuple(env[o] for o in self.graph.outputs),
@@ -577,7 +681,7 @@ def compile_plan(
     order = _topo_schedule(g)
     g = dataclasses.replace(g, nodes=order)
     g.validate()
-    handlers = _HANDLERS[backend]
+    handlers = handlers_for(backend)
     missing = sorted({n.op for n in order if n.op not in handlers})
     if missing:
         raise NotImplementedError(

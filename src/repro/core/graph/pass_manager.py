@@ -53,6 +53,13 @@ class PassContext:
     masks: Dict[str, Any] = dataclasses.field(default_factory=dict)
     structures: Dict[str, Any] = dataclasses.field(default_factory=dict)
     max_bands: int = 4
+    #: activation-range table (repro.quant.calibrate.CalibrationTable) for
+    #: the ``quantize`` pass; None leaves the pipeline at full precision
+    #: (an *empty* table selects weight-only quantization)
+    calibration: Optional[Any] = None
+    #: node names the ``quantize`` pass leaves at f32 (the standard
+    #: keep-the-output-layer-full-precision accuracy practice)
+    quant_skip: Tuple[str, ...] = ()
     #: per-pass statistics, filled by PassManager.run in pipeline order
     stats: Dict[str, "PassStats"] = dataclasses.field(default_factory=dict)
 
@@ -88,6 +95,8 @@ class GraphPass:
     post: Tuple[Invariant, ...] = ()
     #: consumes ctx.masks/structures; skipped when the context has no masks
     needs_masks: bool = False
+    #: consumes ctx.calibration; skipped when the context carries none
+    needs_calibration: bool = False
 
 
 _PASS_REGISTRY: Dict[str, GraphPass] = {}
@@ -99,6 +108,7 @@ def register_pass(
     pre: Sequence[Invariant] = (),
     post: Sequence[Invariant] = (),
     needs_masks: bool = False,
+    needs_calibration: bool = False,
 ) -> Callable[[PassFn], PassFn]:
     """Decorator: register ``fn(graph, ctx) -> graph`` under ``name``."""
 
@@ -106,7 +116,8 @@ def register_pass(
         if name in _PASS_REGISTRY:
             raise ValueError(f"pass {name!r} already registered")
         _PASS_REGISTRY[name] = GraphPass(
-            name=name, fn=fn, pre=tuple(pre), post=tuple(post), needs_masks=needs_masks
+            name=name, fn=fn, pre=tuple(pre), post=tuple(post),
+            needs_masks=needs_masks, needs_calibration=needs_calibration,
         )
         return fn
 
@@ -189,7 +200,10 @@ def params_bound_to_nodes(g: Graph, ctx: PassContext) -> None:
 #: fuse_elementwise so duplicate chains collapse once, not twice;
 #: fuse_epilogue runs last-but-dce so it sees both surviving single
 #: elementwise nodes and fused_elementwise chains, folding them into their
-#: GEMM/conv producer's epilogue program.
+#: GEMM/conv producer's epilogue program.  quantize comes after
+#: fuse_epilogue (epilogue attrs must already be attached so qlinear nodes
+#: inherit them) and is skipped unless the context carries a calibration
+#: table -- full-precision pipelines are untouched.
 DEFAULT_PIPELINE: Tuple[str, ...] = (
     "fold_norm",
     "fuse_activation",
@@ -198,6 +212,7 @@ DEFAULT_PIPELINE: Tuple[str, ...] = (
     "cse",
     "fuse_elementwise",
     "fuse_epilogue",
+    "quantize",
     "dce",
 )
 
@@ -227,7 +242,9 @@ class PassManager:
     def run(self, g: Graph, ctx: Optional[PassContext] = None) -> Graph:
         ctx = ctx or PassContext()
         for p in self.passes:
-            if p.needs_masks and not ctx.masks:
+            if (p.needs_masks and not ctx.masks) or (
+                p.needs_calibration and ctx.calibration is None
+            ):
                 ctx.stats[p.name] = PassStats(p.name, len(g.nodes), len(g.nodes), False)
                 continue
             for inv in p.pre:

@@ -34,6 +34,7 @@ __all__ = [
     "fold_gathers",
     "fuse_elementwise",
     "fuse_epilogue",
+    "quantize",
     "cse",
     "dce",
     "optimize",
@@ -570,6 +571,99 @@ def fuse_epilogue(g: Graph) -> Graph:
 
 
 # --------------------------------------------------------------------------- #
+# 5c. weight quantization                                                      #
+# --------------------------------------------------------------------------- #
+
+#: sparse formats whose packed values are plain [K', N'] matrices -- these
+#: ride the W8 qmatmul path.  pbcsr values are 4-D packed blocks; per-tile
+#: dequant for that layout is future work, so pbcsr nodes stay f32.
+_QUANT_SPARSE_FORMATS = ("colcompact", "channelcompact")
+
+
+def quantize(g: Graph, calibration=None, *, skip: Tuple[str, ...] = ()) -> Graph:
+    """Rewrite GEMM/conv nodes to INT8-stored quantized ops (symmetric
+    per-output-channel absmax, :class:`repro.quant.qtensor.QTensor` layout).
+
+    * ``linear`` / ``sparse_linear(colcompact|channelcompact)`` ->
+      ``qlinear``: int8 ``values`` + f32 ``w_scale[N]``.  When
+      ``calibration`` (a :class:`~repro.quant.calibrate.CalibrationTable`)
+      has an activation range for the node's input, the node is tagged
+      ``scheme="w8a8"`` with the static ``x_scale`` -- the executor then
+      contracts int8 x int8 on the MXU; otherwise ``scheme="w8"`` keeps f32
+      activations and dequantizes weight tiles in VMEM.
+    * ``conv2d`` -> ``qconv2d``: int8 storage (4x smaller weight stream),
+      dequantized at execution -- the MXU stays dense, matching the repo's
+      stance on conv sparsity.
+    * ``sparse_linear(pbcsr)`` is left untouched (blocked payload), as is
+      any node named in ``skip`` (the classic keep-first/last-layer-f32
+      accuracy escape hatch).
+
+    Every rewritten node is annotated with ``bytes_saved`` (dense f32 bytes
+    minus int8 payload + scales), which
+    :meth:`ExecutionPlan.memory_estimate` aggregates as
+    ``weight_bytes_saved``.  Runs after ``fuse_epilogue`` so epilogue attrs
+    (and their ``e{i}_scale``/``e{i}_bias`` params, which are preserved)
+    are already attached.
+    """
+    from ...quant.qtensor import QTensor  # local: quant layer is optional
+
+    g = dataclasses.replace(g, nodes=list(g.nodes), params=dict(g.params))
+    nodes = []
+    for node in g.nodes:
+        if node.name in skip:
+            nodes.append(node)
+            continue
+        p = g.params.get(node.name, {})
+        is_qlinear = node.op == "linear" or (
+            node.op == "sparse_linear"
+            and node.attrs.get("format") in _QUANT_SPARSE_FORMATS
+        )
+        if is_qlinear:
+            wkey = "w" if node.op == "linear" else "values"
+            w = p[wkey]
+            qt = QTensor.from_float(w, axis=1)  # per output channel (N)
+            saved = int(w.size) * w.dtype.itemsize - qt.nbytes
+            # keep every non-weight param (bias, colcompact gather indices,
+            # epilogue norm scale/bias) alongside the packed payload
+            g.params[node.name] = {
+                **{k: v for k, v in p.items() if k != wkey},
+                "values": qt.values,
+                "w_scale": qt.scale,
+            }
+            attrs = {
+                **node.attrs,
+                "format": node.attrs.get("format", "dense"),
+                "scheme": "w8",
+                "bytes_saved": saved,
+            }
+            x_scale = (
+                calibration.get_scale(node.inputs[0])
+                if calibration is not None
+                else None
+            )
+            if x_scale is not None:
+                attrs.update(scheme="w8a8", x_scale=float(x_scale))
+            nodes.append(node.replace(op="qlinear", attrs=attrs))
+        elif node.op == "conv2d" and "w" in p:
+            w = p["w"]
+            qt = QTensor.from_float(w, axis=0)  # per output channel (Co)
+            saved = int(w.size) * w.dtype.itemsize - qt.nbytes
+            g.params[node.name] = {
+                **{k: v for k, v in p.items() if k != "w"},
+                "values": qt.values,
+                "w_scale": qt.scale,
+            }
+            nodes.append(
+                node.replace(op="qconv2d", attrs={**node.attrs, "bytes_saved": saved})
+            )
+        else:
+            nodes.append(node)
+    g = dataclasses.replace(g, nodes=nodes)
+    g.validate()
+    return g
+
+
+# --------------------------------------------------------------------------- #
 # 6. common-subexpression elimination                                          #
 # --------------------------------------------------------------------------- #
 
@@ -669,6 +763,9 @@ register_pass("fuse_elementwise", post=(params_bound_to_nodes,))(
 register_pass("fuse_epilogue", post=(params_bound_to_nodes,))(
     lambda g, ctx: fuse_epilogue(g)
 )
+register_pass("quantize", needs_calibration=True, post=(params_bound_to_nodes,))(
+    lambda g, ctx: quantize(g, ctx.calibration, skip=tuple(ctx.quant_skip))
+)
 register_pass("dce", post=(no_dead_nodes, params_bound_to_nodes))(lambda g, ctx: dce(g))
 
 
@@ -678,14 +775,20 @@ def optimize(
     structures: Optional[Dict[str, Structure]] = None,
     *,
     max_bands: int = 4,
+    calibration: Optional[Any] = None,
+    quant_skip: Tuple[str, ...] = (),
     pipeline: Optional[Tuple[str, ...]] = None,
 ) -> Graph:
     """The full deployment pipeline (paper's compiler, end to end).
 
     Thin wrapper over :class:`~.pass_manager.PassManager` -- pass ``pipeline``
-    to run a custom ordered subset of registered passes.
+    to run a custom ordered subset of registered passes.  ``calibration`` (a
+    :class:`~repro.quant.calibrate.CalibrationTable`; an empty one selects
+    weight-only quantization) arms the ``quantize`` pass, which is skipped
+    otherwise.
     """
     ctx = PassContext(
-        masks=masks or {}, structures=structures or {}, max_bands=max_bands
+        masks=masks or {}, structures=structures or {}, max_bands=max_bands,
+        calibration=calibration, quant_skip=tuple(quant_skip),
     )
     return PassManager(pipeline).run(g, ctx)

@@ -7,4 +7,5 @@ from .ops import (
     fused_elementwise,
     interpret_default,
     matmul,
+    qmatmul,
 )

@@ -40,6 +40,33 @@ _ACTIVATIONS = {
 }
 
 
+def apply_epilogue_steps(acc, epilogue, side_refs):
+    """Run an epilogue step program on the f32 accumulator tile -- the
+    single in-kernel step interpreter shared by the dense, PBCSR, and INT8
+    matmul kernels.  ``("add"|"mul", slot)`` streams ``side_refs[slot]``."""
+    for step in epilogue:
+        kind = step[0]
+        if kind == "activation":
+            acc = _ACTIVATIONS[step[1]](acc)
+        elif kind in ("add", "mul"):
+            s = side_refs[step[1]][...].astype(jnp.float32)
+            acc = acc + s if kind == "add" else acc * s
+        else:
+            raise NotImplementedError(f"epilogue step {kind}")
+    return acc
+
+
+def validate_epilogue(epilogue, n_sides: int) -> None:
+    """Wrapper-side validation shared by every epilogue-capable kernel."""
+    for step in epilogue:
+        if step[0] == "activation" and step[1] not in _ACTIVATIONS:
+            raise ValueError(f"unknown epilogue activation {step[1]!r}")
+        if step[0] in ("add", "mul") and not (0 <= step[1] < n_sides):
+            raise ValueError(
+                f"epilogue slot {step[1]} out of range ({n_sides} sides)"
+            )
+
+
 def dense_matmul_kernel(
     x_ref,
     w_ref,
@@ -72,15 +99,7 @@ def dense_matmul_kernel(
         if b_ref is not None:
             acc = acc + b_ref[...].astype(jnp.float32)
         acc = _ACTIVATIONS[activation](acc)
-        for step in epilogue:
-            kind = step[0]
-            if kind == "activation":
-                acc = _ACTIVATIONS[step[1]](acc)
-            elif kind in ("add", "mul"):
-                s = side_refs[step[1]][...].astype(jnp.float32)
-                acc = acc + s if kind == "add" else acc * s
-            else:
-                raise NotImplementedError(f"epilogue step {kind}")
+        acc = apply_epilogue_steps(acc, epilogue, side_refs)
         o_ref[...] = acc.astype(o_ref.dtype)
 
 
@@ -119,11 +138,7 @@ def dense_matmul(
     )
     if activation not in _ACTIVATIONS:
         raise ValueError(f"unknown activation {activation!r}")
-    for step in epilogue:
-        if step[0] == "activation" and step[1] not in _ACTIVATIONS:
-            raise ValueError(f"unknown epilogue activation {step[1]!r}")
-        if step[0] in ("add", "mul") and not (0 <= step[1] < len(sides)):
-            raise ValueError(f"epilogue slot {step[1]} out of range ({len(sides)} sides)")
+    validate_epilogue(epilogue, len(sides))
     for s in sides:
         assert s.shape == (m, n), (s.shape, (m, n))
     out_dtype = out_dtype or x.dtype

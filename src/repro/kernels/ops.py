@@ -32,6 +32,7 @@ from .flash_attention import flash_attention as _flash_attention
 from .fused_elementwise import fused_elementwise as _fused_elementwise
 from .fused_ffn import ffn_gateup as _ffn_gateup
 from .pallas_compat import interpret_default
+from .quant_matmul import quant_matmul as _quant_matmul
 
 __all__ = [
     "interpret_default",
@@ -40,6 +41,7 @@ __all__ = [
     "col_matmul",
     "fused_elementwise",
     "ffn_gateup",
+    "qmatmul",
     "attention",
     "TuningCache",
     "tuning_cache",
@@ -91,6 +93,7 @@ class TuningCache:
         "matmul": (128, 128, 128),
         "bsr_matmul": (128,),
         "fused_elementwise": (128,),
+        "qmatmul": (128, 128, 128),
     }
     #: small sweep grids; TPU lanes want the minor dims at 128 multiples
     #: (pallas_guide: f32 min tile 8x128, MXU 128x128)
@@ -104,6 +107,16 @@ class TuningCache:
         ),
         "bsr_matmul": ((64,), (128,), (256,)),
         "fused_elementwise": ((64,), (128,), (256,), (512,)),
+        # int8 tiles are (32, 128)-granular; larger K blocks amortize the
+        # rescale and exploit the 4x smaller weight stream
+        "qmatmul": (
+            (128, 128, 128),
+            (64, 128, 128),
+            (256, 128, 128),
+            (128, 256, 128),
+            (128, 128, 256),
+            (128, 128, 512),
+        ),
     }
 
     def __init__(self, enabled: Optional[bool] = None, path: Optional[str] = None):
@@ -320,6 +333,105 @@ def matmul(
     return out.reshape(*lead, n)
 
 
+def _qmatmul_blocked(
+    x2, w_q, w_scale, bias, activation, block_m, block_n, block_k, interpret,
+    epilogue=(), sides=(),
+):
+    m, k = x2.shape
+    n = w_q.shape[1]
+    xp = _pad_axis(_pad_axis(x2, block_m, 0), block_k, 1)
+    wp = _pad_axis(_pad_axis(w_q, block_k, 0), block_n, 1)
+    wsp = _pad_axis(w_scale, block_n, 0)
+    bp = None if bias is None else _pad_axis(bias, block_n, 0)
+    sp = [_pad_axis(_pad_axis(s, block_m, 0), block_n, 1) for s in sides]
+    return _quant_matmul(
+        xp,
+        wp,
+        wsp,
+        bp,
+        *sp,
+        activation=activation,
+        epilogue=tuple(epilogue),
+        block_m=block_m,
+        block_n=block_n,
+        block_k=block_k,
+        interpret=interpret,
+    )[:m, :n]
+
+
+def qmatmul(
+    x: jax.Array,
+    w_q: jax.Array,
+    w_scale: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    x_scale: Optional[float] = None,
+    activation: Optional[str] = None,
+    epilogue: Sequence[Tuple] = (),
+    epilogue_sides: Sequence[jax.Array] = (),
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    _format: str = "dense",
+) -> jax.Array:
+    """Quantized ``epilogue(act((x @ w_q) * scales + bias))`` for arbitrary
+    leading batch dims via the INT8 Pallas kernel.
+
+    ``w_q [K, N]`` int8 with per-output-channel ``w_scale [N]`` f32.  With
+    ``x_scale`` (the calibrated static activation scale, a Python float) the
+    f32 activations are quantized to int8 here and the kernel contracts
+    int8 x int8 into int32 (**W8A8**; the activation scale is folded into the
+    per-column rescale).  Without it, activations stay f32 and only the
+    weight stream is int8, dequantized per-tile in VMEM (**W8-only** -- the
+    scheme the colcompact/channelcompact pruned formats use).
+
+    Tuned under the ``qmatmul`` cache key family: the format string carries
+    the storage format *and* the scheme (``dense+w8a8``, ``colcompact+w8``,
+    ...) plus the usual ``+e{steps}s{sides}`` epilogue suffix -- int8 streams
+    change VMEM residency and arithmetic width, so a winner never aliases the
+    f32 ``matmul`` family.
+    """
+    from ..quant.qtensor import quantize_array  # local: quant layer is optional
+
+    interpret = interpret_default() if interpret is None else interpret
+    x2, lead = _flatten_batch(x)
+    m, k = x2.shape
+    n = w_q.shape[1]
+    sides2 = []
+    for s in epilogue_sides:
+        assert s.shape == (*lead, n) or s.shape == (m, n), (s.shape, (*lead, n))
+        sides2.append(s.reshape(m, n))
+    w_scale = w_scale.astype(jnp.float32)
+    if x_scale is not None:
+        # W8A8: statically-scaled int8 activations; kernel sees one combined
+        # per-column rescale (x_scale * w_scale[n])
+        x2 = quantize_array(x2, jnp.float32(x_scale))
+        w_scale = w_scale * jnp.float32(x_scale)
+    scheme = "w8" if x_scale is None else "w8a8"
+    if block_m is None and block_n is None and block_k is None:
+        runner = None
+        if _TUNING.enabled and _concrete(x2, w_q, w_scale, bias, *sides2):
+            runner = lambda bm, bn, bk: _qmatmul_blocked(
+                x2, w_q, w_scale, bias, activation, bm, bn, bk, interpret,
+                epilogue, sides2,
+            )
+        fmt = f"{_format}+{scheme}"
+        if epilogue:
+            fmt += f"+e{len(epilogue)}s{len(sides2)}"
+        block_m, block_n, block_k = _TUNING.resolve(
+            "qmatmul", m, n, k, x2.dtype, fmt, interpret, runner
+        )
+    elif block_m is None or block_n is None or block_k is None:
+        dm, dn, dk = TuningCache.DEFAULTS["qmatmul"]
+        block_m, block_n, block_k = block_m or dm, block_n or dn, block_k or dk
+    out = _qmatmul_blocked(
+        x2, w_q, w_scale, bias, activation, block_m, block_n, block_k,
+        interpret, epilogue, sides2,
+    )
+    return out.reshape(*lead, n)
+
+
 def fused_elementwise(
     x: jax.Array,
     sides: Sequence[jax.Array] = (),
@@ -387,68 +499,91 @@ def bsr_matmul(
     bias: Optional[jax.Array] = None,
     *,
     activation: Optional[str] = None,
+    epilogue: Sequence[Tuple] = (),
+    epilogue_sides: Sequence[jax.Array] = (),
     block_m: Optional[int] = None,
     bands: Optional[Sequence[Tuple[int, int, int]]] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Block-sparse ``act(x @ W + bias)`` over PBCSR-packed weights.
+    """Block-sparse ``epilogue(act(x @ W + bias))`` over PBCSR-packed weights.
 
     ``bands`` (from the reorder pass): sequence of ``(start, stop, count)``
     over output block-columns; one pallas_call per band with exact trip count
     ``count``.  Without bands, a single call pads every column to the global
-    max count.  ``block_m=None`` consults the tuning cache.
+    max count.  ``epilogue`` is the same step program as :func:`matmul`,
+    executed on the f32 accumulator inside each band's kernel (sides are
+    sliced per band and streamed per output tile).  ``block_m=None``
+    consults the tuning cache -- an epilogue'd call keys separately
+    (``pbcsr+e{steps}s{sides}``) since the extra side streams change VMEM
+    residency.
     """
     interpret = interpret_default() if interpret is None else interpret
     x2, lead = _flatten_batch(x)
     m, k = x2.shape
     nb, s, bm, bn = values.shape
     n = nb * bn
+    epilogue = tuple(tuple(st) for st in epilogue)
+    sides2 = []
+    for sv in epilogue_sides:
+        assert sv.shape == (*lead, n) or sv.shape == (m, n), (sv.shape, (*lead, n))
+        sides2.append(sv.reshape(m, n))
 
     def compute(block_m):
         xp = _pad_axis(x2, block_m, 0)
+        sp = [_pad_axis(sv, block_m, 0) for sv in sides2]
 
-        def run(vals, rows, bias_slice):
+        def run(vals, rows, bias_slice, side_slices):
             return _bsr_matmul(
                 xp,
                 vals,
                 rows,
                 bias_slice,
+                *side_slices,
                 activation=activation,
+                epilogue=epilogue,
                 block_m=block_m,
                 interpret=interpret,
             )
 
         if not bands:
-            return run(values, block_rows, bias)
+            return run(values, block_rows, bias, sp)
         pieces = []
         for start, stop, count in bands:
             if stop <= start:
                 continue
             cols = slice(start, stop)
+            side_slices = [sv[:, start * bn : stop * bn] for sv in sp]
             if count == 0:
                 # empty band: output is pure epilogue (bias/activation of 0)
-                z = jnp.zeros((xp.shape[0], (stop - start) * bn), x.dtype)
+                z = jnp.zeros((xp.shape[0], (stop - start) * bn), jnp.float32)
                 if bias is not None:
-                    z = z + bias[start * bn : stop * bn].astype(x.dtype)
-                if activation is not None:
-                    z = _ref._ACT[activation](z.astype(jnp.float32)).astype(x.dtype)
-                pieces.append(z)
+                    z = z + bias[start * bn : stop * bn].astype(jnp.float32)
+                z = _ref._ACT[activation](z)
+                if epilogue:
+                    z = _ref.apply_steps_ref(
+                        z, epilogue, [sl.astype(jnp.float32) for sl in side_slices]
+                    )
+                pieces.append(z.astype(x.dtype))
                 continue
             pieces.append(
                 run(
                     values[cols, :count],
                     block_rows[cols, :count],
                     None if bias is None else bias[start * bn : stop * bn],
+                    side_slices,
                 )
             )
         return jnp.concatenate(pieces, axis=-1)
 
     if block_m is None:
         runner = None
-        if _TUNING.enabled and _concrete(x2, values, block_rows, bias):
+        if _TUNING.enabled and _concrete(x2, values, block_rows, bias, *sides2):
             runner = compute
+        fmt = "pbcsr"
+        if epilogue:
+            fmt += f"+e{len(epilogue)}s{len(sides2)}"
         (block_m,) = _TUNING.resolve(
-            "bsr_matmul", m, n, k, x2.dtype, "pbcsr", interpret, runner
+            "bsr_matmul", m, n, k, x2.dtype, fmt, interpret, runner
         )
     out = compute(block_m)
     return out[:m].reshape(*lead, n)

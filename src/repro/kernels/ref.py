@@ -15,6 +15,7 @@ import jax.numpy as jnp
 __all__ = [
     "matmul_ref",
     "bsr_matmul_ref",
+    "qmatmul_ref",
     "ffn_gateup_ref",
     "pbcsr_to_dense_ref",
     "flash_attention_ref",
@@ -87,6 +88,37 @@ def matmul_ref(
     if bias is not None:
         acc = acc + bias.astype(jnp.float32)
     return _ACT[activation](acc).astype(out_dtype or x.dtype)
+
+
+def qmatmul_ref(
+    x: jax.Array,
+    w_q: jax.Array,
+    w_scale: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    x_scale: Optional[float] = None,
+    activation: Optional[str] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """f32 oracle for the quantized matmul kernel (both schemes).
+
+    ``x`` is always the *float* activation; ``x_scale`` (the calibrated
+    static activation scale) selects W8A8 -- the activation is fake-quantized
+    with the same round/clip the kernel applies, so
+    ``(q_x * sx) @ (q_w * sw)`` reproduces the kernel's
+    ``(q_x @ q_w) * sx * sw`` integer math up to f32 summation order.
+    Without ``x_scale`` this is the W8-only path: full-precision activations
+    against the dequantized int8 weight.
+    """
+    from ..quant.qtensor import fake_quant  # no cycle: quant is jnp-only
+
+    w = w_q.astype(jnp.float32) * w_scale.astype(jnp.float32)[None, :]
+    xf = x.astype(jnp.float32)
+    if x_scale is not None:
+        xf = fake_quant(xf, jnp.float32(x_scale))
+    return matmul_ref(
+        xf, w, bias, activation=activation, out_dtype=out_dtype or jnp.float32
+    )
 
 
 def pbcsr_to_dense_ref(

@@ -8,6 +8,8 @@ Examples (CPU):
       --size 64 --frames 3
   PYTHONPATH=src python -m repro.launch.serve --graph-app coloring \
       --size 64 --frames 10 --batch-size 4   # throughput mode (PlanServer)
+  PYTHONPATH=src python -m repro.launch.serve --graph-app style_transfer \
+      --quantize                             # INT8 weights + parity stats
 """
 
 from __future__ import annotations
@@ -28,7 +30,7 @@ def _serve_graph_app(args) -> None:
     """Compile one of the paper's demo apps through the full pipeline
     (PassManager -> execution plan) and serve frames through the plan."""
     from ..core.graph import PassContext, PassManager, compile_plan
-    from ..models.cnn import APPS, app_masks
+    from ..models.cnn import APP_QUANT_SKIP, APPS, app_masks
 
     build = APPS[args.graph_app]
     g = build(jax.random.PRNGKey(args.seed), base=args.base)
@@ -40,17 +42,54 @@ def _serve_graph_app(args) -> None:
 
     # kernel backend on real TPUs; jnp reference elsewhere (interpret-mode
     # Pallas on CPU would measure Python, not the model)
-    backend = "kernel" if jax.default_backend() == "tpu" else "reference"
-    plan = compile_plan(go, backend=backend)
+    on_tpu = jax.default_backend() == "tpu"
+    backend = "kernel" if on_tpu else "reference"
     c_in = 1 if args.graph_app == "coloring" else 3
     shape = (args.batch, c_in, args.size, args.size)
+    rng = np.random.default_rng(args.seed)
+
+    if args.quantize:
+        # calibrate on the fp32 reference plan, run the quantize pass, and
+        # serve the INT8 plan (the quant backend executes qlinear through the
+        # INT8 Pallas kernels; on CPU the jnp dequant reference serves)
+        from ..quant import calibrate_plan
+
+        plan_f32 = compile_plan(go, backend="reference")
+        batches = [
+            jnp.asarray(rng.standard_normal(shape), jnp.float32)
+            for _ in range(args.calib_batches)
+        ]
+        table = calibrate_plan(plan_f32, go.params, batches)
+        qctx = PassContext(
+            calibration=table, quant_skip=APP_QUANT_SKIP[args.graph_app]
+        )
+        gq = PassManager(("quantize",)).run(go, qctx)
+        backend = "quant" if on_tpu else "reference"
+        plan = compile_plan(gq, backend=backend)
+        # plan-level parity + storage stats vs the fp32 reference plan
+        probe = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+        err = jnp.max(jnp.abs(jnp.asarray(plan(gq.params, probe))
+                              - jnp.asarray(plan_f32(go.params, probe))))
+        mem_f = plan_f32.memory_estimate(jax.ShapeDtypeStruct(shape, jnp.float32))
+        mem_q = plan.memory_estimate(jax.ShapeDtypeStruct(shape, jnp.float32))
+        print(
+            f"quantize: calibrated {table.batches} batches over "
+            f"{len(table.ranges)} values; max_abs_err={float(err):.2e} "
+            f"weights {mem_f['param_bytes'] / 1e6:.2f}MB -> "
+            f"{mem_q['param_bytes'] / 1e6:.2f}MB "
+            f"({mem_f['param_bytes'] / mem_q['param_bytes']:.2f}x, "
+            f"{mem_q['weight_bytes_saved'] / 1e6:.2f}MB saved)"
+        )
+        go = gq
+    else:
+        plan = compile_plan(go, backend=backend)
+
     mem = plan.memory_estimate(jax.ShapeDtypeStruct(shape, jnp.float32))
     print(
         f"plan: backend={backend} steps={len(plan.steps)} "
         f"peak_act={mem['peak_activation_bytes'] / 1e6:.2f}MB "
         f"params={mem['param_bytes'] / 1e6:.2f}MB"
     )
-    rng = np.random.default_rng(args.seed)
 
     if args.batch_size is not None:
         # throughput mode: a queue of single frames served in fixed-size
@@ -114,6 +153,12 @@ def main() -> None:
     ap.add_argument("--batch-size", type=int, default=None,
                     help="graph-app throughput mode: serve frames*batch single "
                          "frames through plan.batched(batch_size) (PlanServer)")
+    ap.add_argument("--quantize", action="store_true",
+                    help="graph-app: calibrate + quantize the plan to INT8 "
+                         "weights (backend='quant' on TPU) and report parity "
+                         "vs the fp32 reference plan")
+    ap.add_argument("--calib-batches", type=int, default=2,
+                    help="sample batches for activation calibration")
     args = ap.parse_args()
 
     if args.graph_app:

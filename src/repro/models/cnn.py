@@ -180,6 +180,19 @@ PAPER_RECIPE = {
     "super_resolution": "pattern",
 }
 
+#: first/last layers kept at f32 by the ``quantize`` pass -- the standard
+#: mobile INT8 practice (PatDNN et al.): the stem conv sees raw image
+#: statistics and the output conv's weight noise lands directly on the
+#: output pixels, while noise in the body is washed by the following norms.
+#: Names that do not occur in a graph are ignored.  (fuse_epilogue renames a
+#: fused GEMM/conv to its follower, so both the builder name and the
+#: post-fusion name are listed where they differ.)
+APP_QUANT_SKIP = {
+    "style_transfer": ("conv_in", "act_in", "conv_out"),
+    "coloring": ("low1", "low1_act", "dec_out", "dec_tanh"),
+    "super_resolution": ("head", "tail"),
+}
+
 #: Table 1 of the paper (ms on Samsung Galaxy S10, Adreno 640)
 PAPER_TABLE1 = {
     "style_transfer": {"unpruned": 283.0, "pruned": 178.0, "pruned_compiler": 67.0},

@@ -1,0 +1,26 @@
+"""Quantization subsystem: INT8 storage, calibration, and the compiler
+entry points that rewrite GEMM/conv nodes to quantized ops.
+
+* :mod:`repro.quant.qtensor` -- symmetric per-tensor/per-channel int8
+  :class:`QTensor` with absmax quantize/dequantize helpers;
+* :mod:`repro.quant.calibrate` -- :func:`calibrate_plan` runs sample batches
+  through an ExecutionPlan and records per-value activation ranges
+  (:class:`CalibrationTable`, JSON-persistable);
+* the ``quantize`` pass lives in :mod:`repro.core.graph.passes` (it is a
+  graph rewrite like every other pass); the INT8 Pallas kernels in
+  :mod:`repro.kernels.quant_matmul`; the ``qlinear``/``qconv2d`` handlers and
+  the ``backend="quant"`` selection mode in
+  :mod:`repro.core.graph.executor`.
+"""
+
+from .calibrate import CalibrationTable, calibrate_plan
+from .qtensor import QMAX, QTensor, fake_quant, quantize_array
+
+__all__ = [
+    "QTensor",
+    "QMAX",
+    "quantize_array",
+    "fake_quant",
+    "CalibrationTable",
+    "calibrate_plan",
+]

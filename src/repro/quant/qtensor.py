@@ -1,0 +1,119 @@
+"""Quantized-tensor core: symmetric INT8 storage with f32 scales.
+
+A :class:`QTensor` is the storage format produced by the ``quantize``
+compiler pass (PatDNN/GRIM pair their pruned mobile runtimes with compressed
+low-precision weight storage; this is our TPU-side equivalent): an int8
+``values`` array plus a float32 ``scale`` -- a scalar for per-tensor
+quantization, or a vector along ``axis`` for per-channel (one scale per
+output channel, the scheme that keeps GEMM/conv accuracy at 8 bits).
+
+Symmetric absmax quantization::
+
+    scale  = absmax(x) / 127          (per tensor or per channel)
+    q      = clip(round(x / scale), -127, 127)  as int8
+    dequant(q) = q * scale
+
+The value ``-128`` is never produced (symmetric range), so ``-q`` is always
+representable and the format is negation-safe.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["QTensor", "quantize_array", "fake_quant", "QMAX"]
+
+#: symmetric int8 range: [-127, 127] (never -128)
+QMAX = 127.0
+
+#: scales below this are clamped so all-zero channels dequantize to zeros
+#: instead of NaNs
+_EPS = 1e-12
+
+
+def _absmax(x: jax.Array, axis: Optional[int]) -> jax.Array:
+    """absmax over all dims (per-tensor) or all-but-``axis`` (per-channel)."""
+    if axis is None:
+        return jnp.max(jnp.abs(x))
+    reduce_axes = tuple(i for i in range(x.ndim) if i != (axis % x.ndim))
+    return jnp.max(jnp.abs(x), axis=reduce_axes)
+
+
+def quantize_array(
+    x: jax.Array, scale: jax.Array, axis: Optional[int] = None
+) -> jax.Array:
+    """``clip(round(x / scale), -127, 127)`` as int8; ``scale`` broadcasts
+    along ``axis`` (or is a scalar)."""
+    s = scale
+    if axis is not None and jnp.ndim(scale) == 1:
+        shape = [1] * x.ndim
+        shape[axis % x.ndim] = -1
+        s = scale.reshape(shape)
+    q = jnp.round(x.astype(jnp.float32) / s)
+    return jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
+
+
+def fake_quant(x: jax.Array, scale: jax.Array, axis: Optional[int] = None) -> jax.Array:
+    """Quantize-then-dequantize in f32: the reference-side simulation of the
+    kernel's int8 activation path (bit-compatible rounding/clipping)."""
+    q = quantize_array(x, scale, axis)
+    s = scale
+    if axis is not None and jnp.ndim(scale) == 1:
+        shape = [1] * x.ndim
+        shape[axis % x.ndim] = -1
+        s = scale.reshape(shape)
+    return q.astype(jnp.float32) * s
+
+
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    """Symmetric int8 tensor: ``dequantize() == values * scale``.
+
+    ``axis=None`` -> per-tensor (``scale`` a scalar); ``axis=i`` ->
+    per-channel along dim ``i`` (``scale`` a vector of ``shape[i]``).
+    """
+
+    values: jax.Array  # int8
+    scale: jax.Array  # f32, () or [shape[axis]]
+    axis: Optional[int] = None
+
+    # -- construction -------------------------------------------------------- #
+    @classmethod
+    def from_float(cls, x: jax.Array, axis: Optional[int] = None) -> "QTensor":
+        """Absmax-calibrated symmetric quantization of ``x``."""
+        scale = jnp.maximum(_absmax(x, axis), _EPS).astype(jnp.float32) / QMAX
+        return cls(values=quantize_array(x, scale, axis), scale=scale, axis=axis)
+
+    # -- views --------------------------------------------------------------- #
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(self.values.shape)
+
+    @property
+    def nbytes(self) -> int:
+        """Stored bytes: int8 payload + f32 scales."""
+        return int(self.values.size) + int(np.size(self.scale)) * 4
+
+    def compression_ratio(self, orig_dtype=jnp.float32) -> float:
+        dense = int(self.values.size) * np.dtype(orig_dtype).itemsize
+        return dense / max(self.nbytes, 1)
+
+    def scale_broadcast(self) -> jax.Array:
+        """``scale`` shaped to broadcast against ``values``."""
+        if self.axis is None or jnp.ndim(self.scale) == 0:
+            return self.scale
+        shape = [1] * self.values.ndim
+        shape[self.axis % self.values.ndim] = -1
+        return self.scale.reshape(shape)
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        return (self.values.astype(jnp.float32) * self.scale_broadcast()).astype(dtype)
+
+    def max_abs_error(self, x: jax.Array) -> float:
+        """Worst-case reconstruction error against the original ``x``."""
+        return float(jnp.max(jnp.abs(self.dequantize() - x.astype(jnp.float32))))

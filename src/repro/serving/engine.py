@@ -127,11 +127,14 @@ class PlanServer:
         self.batch_size = batch_size
         self.batched = plan.batched(batch_size, via_vmap=via_vmap)
         self._pending: List[Tuple[Array, ...]] = []
+        self.closed = False
         self.stats: Dict[str, int] = {"frames": 0, "batches": 0, "padded_frames": 0}
 
     def submit(self, *frame_inputs: Array) -> int:
         """Queue one frame (one array per graph input, sans batch dim).
         Returns its index within the next flush."""
+        if self.closed:
+            raise RuntimeError("PlanServer is closed; no further frames accepted")
         if len(frame_inputs) != len(self.plan.graph.inputs):
             raise TypeError(
                 f"plan expects {len(self.plan.graph.inputs)} inputs per frame, "
@@ -145,8 +148,10 @@ class PlanServer:
         return len(self._pending)
 
     def flush(self):
-        """Run all queued frames; returns outputs stacked over the frame
-        axis (a tuple when the plan has multiple outputs)."""
+        """Run all queued frames -- *including* a partial tail batch (the
+        batched plan pads it to the compiled shape; no frame is ever
+        dropped).  Returns outputs stacked over the frame axis (a tuple when
+        the plan has multiple outputs), or None when the queue is empty."""
         if not self._pending:
             return None
         frames, self._pending = self._pending, []
@@ -157,6 +162,24 @@ class PlanServer:
         for k, v in self.batched.last_stats.items():
             self.stats[k] = self.stats.get(k, 0) + v
         return out
+
+    def close(self):
+        """Drain the queue (flushing any partial batch -- queued frames must
+        never be dropped) and refuse further submits.  Returns the final
+        flush's outputs (None if nothing was queued).  Idempotent; also runs
+        on ``with PlanServer(...) as server:`` exit.  The server is marked
+        closed even when the final flush raises, so a failing frame can
+        never leave a half-closed server accepting new work."""
+        try:
+            return self.flush()
+        finally:
+            self.closed = True
+
+    def __enter__(self) -> "PlanServer":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
 
 
 # --------------------------------------------------------------------------- #

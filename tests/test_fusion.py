@@ -317,3 +317,151 @@ def test_plan_server_queue_and_stats():
     assert server.flush() is None  # empty queue is a no-op
     with pytest.raises(TypeError, match="inputs per frame"):
         server.submit(frames[0], frames[0])
+
+
+def test_plan_server_close_flushes_partial_batch():
+    """Queued frames must never be dropped: close() drains a partial tail
+    batch (smaller than batch_size) and refuses further submits."""
+    go, plan = _small_app_plan()
+    server = PlanServer(plan, go.params, batch_size=4)
+    frames = [jax.random.normal(jax.random.PRNGKey(i), (3, 8, 8)) for i in range(3)]
+    for f in frames:
+        server.submit(f)
+    assert server.pending == 3  # strictly less than one full batch
+    out = server.close()
+    assert server.pending == 0 and server.closed
+    assert out.shape[0] == 3
+    want = plan(go.params, jnp.stack(frames))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+    assert server.stats["frames"] == 3 and server.stats["padded_frames"] == 1
+    with pytest.raises(RuntimeError, match="closed"):
+        server.submit(frames[0])
+    assert server.close() is None  # idempotent
+
+
+def test_plan_server_context_manager_drains_queue():
+    go, plan = _small_app_plan()
+    with PlanServer(plan, go.params, batch_size=4) as server:
+        server.submit(jax.random.normal(KEY, (3, 8, 8)))
+        assert server.pending == 1
+    assert server.closed and server.pending == 0
+    assert server.stats["frames"] == 1  # the exit flush ran it
+
+
+# --------------------------------------------------------------------------- #
+# PBCSR band kernel: epilogue step programs in-tile                            #
+# --------------------------------------------------------------------------- #
+
+
+def _pbcsr_setup(key, k=256, n=384, m=64, sparsity=0.5, balanced=True):
+    from repro.core.pruning import Block, project
+    from repro.core.sparse import PBCSR
+
+    w = jax.random.normal(key, (k, n)) * 0.05
+    wp, mask = project(w, Block(sparsity, bm=128, bn=128, balanced=balanced))
+    fmt = PBCSR.from_dense(wp, mask, 128, 128)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (m, k))
+    return wp, fmt, x
+
+
+def test_bsr_epilogue_program_matches_jnp_tail():
+    wp, fmt, x = _pbcsr_setup(jax.random.PRNGKey(7))
+    n = wp.shape[1]
+    b = jax.random.normal(jax.random.PRNGKey(8), (n,))
+    side = jax.random.normal(jax.random.PRNGKey(9), (x.shape[0], n))
+    steps = (("add", 0), ("activation", "gelu"), ("mul", 0))
+    got = kops.bsr_matmul(
+        x, fmt.values, fmt.block_rows, b, activation="relu",
+        epilogue=steps, epilogue_sides=(side,),
+    )
+    tail = kops.bsr_matmul(x, fmt.values, fmt.block_rows, b, activation="relu")
+    want = kref.apply_steps_ref(tail, steps, [side])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_bsr_epilogue_banded_with_empty_band():
+    """Band dispatch slices the epilogue sides per band; a zero-count band
+    (pure bias/activation/epilogue of zeros) must honor the program too."""
+    from repro.core.sparse import PBCSR, block_mask, plan_reorder, apply_column_perm
+    from repro.core.pruning import Block, project
+
+    k, n, m = 512, 768, 64
+    w = jax.random.normal(jax.random.PRNGKey(3), (k, n)) * 0.05
+    wp, mask = project(w, Block(0.6, bm=128, bn=128, balanced=False))
+    # force one fully-dead block column so a zero-count band exists
+    mask = mask.at[:, :128].set(0)
+    wp = wp * mask
+    bm_ = np.asarray(block_mask(mask, 128, 128))
+    plan = plan_reorder(bm_, max_bands=3)
+    w_perm = apply_column_perm(wp, plan.order, 128)
+    m_perm = apply_column_perm(mask, plan.order, 128)
+    fmt = PBCSR.from_dense(w_perm, m_perm, 128, 128)
+    bands = [(b.start, b.stop, b.count) for b in plan.bands]
+    assert any(c == 0 for _, _, c in bands)
+    x = jax.random.normal(KEY, (m, k))
+    b = jax.random.normal(jax.random.PRNGKey(8), (n,))
+    side = jax.random.normal(jax.random.PRNGKey(9), (m, n))
+    steps = (("add", 0), ("activation", "tanh"))
+    got = kops.bsr_matmul(
+        x, fmt.values, fmt.block_rows, b, bands=bands,
+        epilogue=steps, epilogue_sides=(side,),
+    )
+    want = kref.apply_steps_ref(kref.matmul_ref(x, w_perm, b), steps, [side])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_bsr_epilogue_tunes_under_its_own_key():
+    wp, fmt, x = _pbcsr_setup(jax.random.PRNGKey(11))
+    n = wp.shape[1]
+    side = jax.random.normal(jax.random.PRNGKey(9), (x.shape[0], n))
+    cache = kops.tuning_cache()
+    prev = dict(cache.entries)
+    try:
+        kops.bsr_matmul(x, fmt.values, fmt.block_rows)
+        kops.bsr_matmul(
+            x, fmt.values, fmt.block_rows,
+            epilogue=(("add", 0),), epilogue_sides=(side,),
+        )
+        keys = [k_ for k_ in cache.entries if k_.startswith("bsr_matmul|")]
+        fmts = {k_.split("|")[3] for k_ in keys}
+        assert "pbcsr" in fmts and "pbcsr+e1s1" in fmts
+    finally:
+        cache.entries = prev
+
+
+def test_pbcsr_plan_executes_epilogue_in_kernel(monkeypatch):
+    """A sparse_linear(pbcsr) node with a tile-fusable epilogue must reach
+    the Pallas kernel as a step program, not the jnp tail."""
+    from repro.core.pruning import Block, project
+    from repro.core.sparse import PBCSR
+
+    k, n = 256, 256
+    w = jax.random.normal(KEY, (k, n)) * 0.05
+    wp, mask = project(w, Block(0.5, bm=128, bn=128))
+    fmt = PBCSR.from_dense(wp, mask, 128, 128)
+    nodes = [
+        Node("sparse_linear", "sp", ("x",), {"format": "pbcsr"}),
+        Node("add", "res", ("sp", "skip")),
+        Node("activation", "act", ("res",), {"fn": "relu"}),
+    ]
+    g = Graph(
+        nodes=nodes, inputs=("x", "skip"), outputs=("act",),
+        params={"sp": {"values": fmt.values, "block_rows": fmt.block_rows}},
+    )
+    gf = fuse_epilogue(g)
+    (node,) = [nd for nd in gf.nodes if nd.op == "sparse_linear"]
+    assert node.attrs["epilogue"] == (("add", 1), ("activation", "relu"))
+    seen = {}
+    real = kops.bsr_matmul
+
+    def spy(*a, **kw):
+        seen.update(kw)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(kops, "bsr_matmul", spy)
+    x = jax.random.normal(jax.random.PRNGKey(2), (64, k))
+    skip = jax.random.normal(jax.random.PRNGKey(3), (64, n))
+    got = compile_plan(gf, backend="kernel")(gf.params, x, skip)
+    assert seen.get("epilogue"), "epilogue did not reach the Pallas kernel"
+    want = compile_plan(g, backend="reference")(g.params, x, skip)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,369 @@
+"""Quantization subsystem: QTensor round-trips, INT8 qmatmul kernel parity,
+calibration, the ``quantize`` pass, the ``quant`` executor backend, and the
+end-to-end acceptance gates (demo apps at <= 5e-2 vs fp32 with >= 3x weight
+compression)."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import (
+    DEFAULT_PIPELINE,
+    Graph,
+    Node,
+    PassContext,
+    PassManager,
+    compile_plan,
+    optimize,
+    registered_ops,
+)
+from repro.core.graph.passes import fuse_epilogue, quantize
+from repro.kernels import ops as kops
+from repro.kernels import qmatmul, ref
+from repro.models.cnn import APP_QUANT_SKIP, APPS, app_masks
+from repro.quant import CalibrationTable, QTensor, calibrate_plan, fake_quant
+
+KEY = jax.random.PRNGKey(0)
+
+APP_INPUTS = {
+    "style_transfer": (1, 3, 16, 16),
+    "coloring": (1, 1, 16, 16),
+    "super_resolution": (1, 3, 8, 8),
+}
+
+
+# --------------------------------------------------------------------------- #
+# QTensor                                                                      #
+# --------------------------------------------------------------------------- #
+
+
+def test_qtensor_per_tensor_roundtrip():
+    x = jax.random.normal(KEY, (33, 47)) * 3.0
+    qt = QTensor.from_float(x)
+    assert qt.values.dtype == jnp.int8
+    assert qt.axis is None and jnp.ndim(qt.scale) == 0
+    # symmetric absmax: reconstruction error bounded by half a step
+    assert qt.max_abs_error(x) <= float(qt.scale) * 0.5 + 1e-6
+    # -128 never appears (negation-safe symmetric range)
+    assert int(jnp.min(qt.values)) >= -127
+
+
+def test_qtensor_per_channel_beats_per_tensor():
+    # channels at wildly different magnitudes: one shared scale wrecks the
+    # small channel, per-channel scales track it
+    w = jnp.concatenate(
+        [jax.random.normal(KEY, (64, 8)) * 10.0, jax.random.normal(KEY, (64, 8)) * 0.01],
+        axis=1,
+    )
+    per_t = QTensor.from_float(w)
+    per_c = QTensor.from_float(w, axis=1)
+    assert per_c.scale.shape == (16,)
+    small = w[:, 8:]
+    err_t = float(jnp.abs(per_t.dequantize()[:, 8:] - small).max())
+    err_c = float(jnp.abs(per_c.dequantize()[:, 8:] - small).max())
+    assert err_c < err_t / 10
+
+
+def test_qtensor_bytes_and_zero_channel():
+    w = jnp.zeros((16, 4)).at[:, :2].set(1.0)
+    qt = QTensor.from_float(w, axis=1)
+    # all-zero channels dequantize to zeros, never NaN
+    assert not bool(jnp.isnan(qt.dequantize()).any())
+    assert qt.nbytes == 16 * 4 + 4 * 4  # int8 payload + f32 scales
+    assert qt.compression_ratio() > 3.0
+
+
+def test_fake_quant_matches_dequantized_quantize():
+    x = jax.random.normal(KEY, (8, 8))
+    scale = float(jnp.max(jnp.abs(x))) / 127.0
+    qt_vals = jnp.clip(jnp.round(x / scale), -127, 127) * scale
+    np.testing.assert_allclose(np.asarray(fake_quant(x, jnp.float32(scale))),
+                               np.asarray(qt_vals), rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# qmatmul kernel vs oracle                                                     #
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("shape", [(16, 64, 32), (37, 70, 50), (5, 130, 129)])
+@pytest.mark.parametrize("scheme", ["w8", "w8a8"])
+def test_qmatmul_kernel_matches_ref(shape, scheme):
+    m, k, n = shape
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(2), (k, n)) * 0.1
+    b = jax.random.normal(jax.random.PRNGKey(3), (n,))
+    qt = QTensor.from_float(w, axis=1)
+    x_scale = float(jnp.max(jnp.abs(x))) / 127.0 if scheme == "w8a8" else None
+    got = qmatmul(x, qt.values, qt.scale, b, x_scale=x_scale, activation="relu")
+    want = ref.qmatmul_ref(x, qt.values, qt.scale, b, x_scale=x_scale, activation="relu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+    # and the whole scheme stays close to fp32
+    f32 = ref.matmul_ref(x, w, b, activation="relu")
+    assert float(jnp.abs(got - f32).max()) <= 5e-2
+
+
+def test_qmatmul_leading_batch_dims():
+    x = jax.random.normal(KEY, (2, 3, 40))
+    w = jax.random.normal(jax.random.PRNGKey(2), (40, 24)) * 0.1
+    qt = QTensor.from_float(w, axis=1)
+    got = qmatmul(x, qt.values, qt.scale)
+    assert got.shape == (2, 3, 24)
+    want = ref.qmatmul_ref(x.reshape(6, 40), qt.values, qt.scale).reshape(2, 3, 24)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("scheme", ["w8", "w8a8"])
+def test_qmatmul_epilogue_program(scheme):
+    m, k, n = 20, 48, 40
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(2), (k, n)) * 0.1
+    side = jax.random.normal(jax.random.PRNGKey(3), (m, n))
+    qt = QTensor.from_float(w, axis=1)
+    x_scale = float(jnp.max(jnp.abs(x))) / 127.0 if scheme == "w8a8" else None
+    steps = (("add", 0), ("activation", "gelu"), ("mul", 0))
+    got = qmatmul(
+        x, qt.values, qt.scale, x_scale=x_scale,
+        epilogue=steps, epilogue_sides=(side,),
+    )
+    want = ref.apply_steps_ref(
+        ref.qmatmul_ref(x, qt.values, qt.scale, x_scale=x_scale), steps, [side]
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_qmatmul_tunes_under_its_own_key_family():
+    cache = kops.tuning_cache()
+    prev = dict(cache.entries)
+    try:
+        x = jax.random.normal(KEY, (16, 64))
+        w = jax.random.normal(jax.random.PRNGKey(2), (64, 32)) * 0.1
+        qt = QTensor.from_float(w, axis=1)
+        qmatmul(x, qt.values, qt.scale)
+        qmatmul(x, qt.values, qt.scale, x_scale=0.01)
+        k_w8 = kops.TuningCache.key("qmatmul", 16, 32, 64, jnp.float32, "dense+w8", True)
+        k_a8 = kops.TuningCache.key("qmatmul", 16, 32, 64, jnp.int8, "dense+w8a8", True)
+        assert k_w8 in cache.entries and k_a8 in cache.entries
+        # never aliases the fp32 matmul family
+        assert kops.TuningCache.key("matmul", 16, 32, 64, jnp.float32, "dense", True) not in (
+            k_w8, k_a8,
+        )
+    finally:
+        cache.entries = prev
+
+
+# --------------------------------------------------------------------------- #
+# calibration                                                                  #
+# --------------------------------------------------------------------------- #
+
+
+def _mlp_graph(key, k=48, h=64, n_out=32):
+    k1, k2 = jax.random.split(key)
+    nodes = [
+        Node("linear", "fc1", ("x",)),
+        Node("activation", "act1", ("fc1",), {"fn": "relu"}),
+        Node("linear", "fc2", ("act1",)),
+    ]
+    params = {
+        "fc1": {"w": jax.random.normal(k1, (k, h)) * 0.1, "b": jnp.zeros((h,))},
+        "fc2": {"w": jax.random.normal(k2, (h, n_out)) * 0.1, "b": jnp.zeros((n_out,))},
+    }
+    return Graph(nodes=nodes, inputs=("x",), outputs=("fc2",), params=params)
+
+
+def test_calibration_table_running_max_and_json(tmp_path):
+    t = CalibrationTable()
+    t.observe("x", jnp.asarray([1.0, -3.0]))
+    t.observe("x", jnp.asarray([2.0]))
+    assert t.ranges["x"] == 3.0
+    assert "x" in t and "y" not in t
+    assert t.scale("x") == pytest.approx(3.0 / 127.0)
+    assert t.get_scale("y") is None
+    p = tmp_path / "calib.json"
+    t.batches = 2
+    t.save(str(p))
+    t2 = CalibrationTable.load(str(p))
+    assert t2.ranges == t.ranges and t2.batches == 2
+    assert json.loads(p.read_text())["version"] == 1
+
+
+def test_calibrate_plan_records_inputs_and_every_node():
+    g = _mlp_graph(KEY)
+    plan = compile_plan(g, backend="reference")
+    xs = [jax.random.normal(jax.random.PRNGKey(i), (4, 48)) for i in range(3)]
+    table = calibrate_plan(plan, g.params, xs)
+    assert set(table.ranges) == {"x", "fc1", "act1", "fc2"}
+    assert table.batches == 3
+    want = max(float(jnp.max(jnp.abs(x))) for x in xs)
+    assert table.ranges["x"] == pytest.approx(want)
+
+
+# --------------------------------------------------------------------------- #
+# the quantize pass                                                            #
+# --------------------------------------------------------------------------- #
+
+
+def test_quantize_pass_linear_w8a8_and_w8():
+    g = _mlp_graph(KEY)
+    plan = compile_plan(g, backend="reference")
+    x = jax.random.normal(KEY, (4, 48))
+    table = calibrate_plan(plan, g.params, [x])
+    gq = quantize(g, table)
+    fc1 = gq.node("fc1")
+    assert fc1.op == "qlinear" and fc1.attrs["scheme"] == "w8a8"
+    assert fc1.attrs["x_scale"] == pytest.approx(table.scale("x"))
+    assert fc1.attrs["bytes_saved"] > 0
+    assert gq.params["fc1"]["values"].dtype == jnp.int8
+    assert gq.params["fc1"]["w_scale"].shape == (64,)
+    assert "b" in gq.params["fc1"]  # bias survives f32
+    # empty table -> weight-only: no activation ranges, scheme w8
+    gw = quantize(g, CalibrationTable())
+    assert gw.node("fc1").attrs["scheme"] == "w8"
+    assert "x_scale" not in gw.node("fc1").attrs
+
+
+def test_quantize_pass_skip_and_pbcsr_untouched():
+    g = _mlp_graph(KEY)
+    gq = quantize(g, CalibrationTable(), skip=("fc1",))
+    assert gq.node("fc1").op == "linear"
+    assert gq.node("fc2").op == "qlinear"
+    # pbcsr sparse_linear stays f32 (blocked payload)
+    n = Node("sparse_linear", "sp", ("x",), {"format": "pbcsr"})
+    g2 = Graph(
+        nodes=[n], inputs=("x",), outputs=("sp",),
+        params={"sp": {"values": jnp.zeros((2, 1, 8, 8)), "block_rows": jnp.zeros((2, 1), jnp.int32)}},
+    )
+    assert quantize(g2, CalibrationTable()).node("sp").op == "sparse_linear"
+
+
+def test_quantize_preserves_epilogue_and_its_params():
+    # linear -> layer-norm follower: fuse_epilogue folds the norm (moving
+    # scale/bias into e0_* params), quantize must carry both through
+    k1, _ = jax.random.split(KEY)
+    nodes = [
+        Node("linear", "fc", ("x",)),
+        Node("norm", "ln", ("fc",), {"kind": "layer"}),
+    ]
+    params = {
+        "fc": {"w": jax.random.normal(k1, (32, 24)) * 0.1},
+        "ln": {"scale": jnp.ones((24,)) * 1.1, "bias": jnp.zeros((24,)) + 0.1},
+    }
+    g = Graph(nodes=nodes, inputs=("x",), outputs=("ln",), params=params)
+    gf = fuse_epilogue(g)
+    gq = quantize(gf, CalibrationTable())
+    node = gq.node("ln")
+    assert node.op == "qlinear" and node.attrs["epilogue"]
+    assert "e0_scale" in gq.params["ln"] and "e0_bias" in gq.params["ln"]
+    x = jax.random.normal(KEY, (6, 32))
+    got = compile_plan(gq, backend="quant")(gq.params, x)
+    want = compile_plan(gf, backend="reference")(gf.params, x)
+    assert float(jnp.abs(got - want).max()) <= 5e-2
+
+
+def test_quantize_in_default_pipeline_after_fuse_epilogue_and_gated():
+    i_epi = DEFAULT_PIPELINE.index("fuse_epilogue")
+    i_q = DEFAULT_PIPELINE.index("quantize")
+    assert i_q == i_epi + 1
+    # no calibration in the context -> the pass is skipped entirely
+    g = _mlp_graph(KEY)
+    ctx = PassContext()
+    go = PassManager().run(g, ctx)
+    assert all(n.op != "qlinear" for n in go.nodes)
+    assert not ctx.stats["quantize"].changed
+
+
+# --------------------------------------------------------------------------- #
+# the quant executor backend                                                   #
+# --------------------------------------------------------------------------- #
+
+
+def test_quant_backend_parity_and_kernel_backend_rejects_qlinear():
+    g = _mlp_graph(KEY)
+    x = jax.random.normal(KEY, (8, 48))
+    table = calibrate_plan(compile_plan(g, backend="reference"), g.params, [x])
+    gq = quantize(g, table)
+    got = compile_plan(gq, backend="quant")(gq.params, x)
+    oracle = compile_plan(gq, backend="reference")(gq.params, x)
+    # Pallas int8 kernels vs the jnp dequant oracle: near-exact
+    np.testing.assert_allclose(np.asarray(got), np.asarray(oracle), rtol=1e-4, atol=1e-5)
+    # vs the full-precision plan: bounded quantization noise
+    f32 = compile_plan(g, backend="reference")(g.params, x)
+    assert float(jnp.abs(got - f32).max()) <= 5e-2
+    # qlinear is a quant-backend op; plain kernel plans refuse it
+    assert "qlinear" in registered_ops("quant")
+    with pytest.raises(NotImplementedError, match="qlinear"):
+        compile_plan(gq, backend="kernel")
+
+
+def test_quant_backend_inherits_kernel_handlers():
+    ops = registered_ops("quant")
+    for op in ("linear", "sparse_linear", "conv2d", "fused_elementwise", "qlinear", "qconv2d"):
+        assert op in ops, op
+
+
+def test_colcompact_qlinear_roundtrip():
+    # sparse_linear(colcompact) -> qlinear keeps the gather indices
+    w = jax.random.normal(KEY, (64, 24)) * 0.1
+    kept = jnp.asarray(np.arange(0, 64, 2), jnp.int32)
+    n = Node("sparse_linear", "sp", ("x",), {"format": "colcompact", "k_full": 64})
+    g = Graph(
+        nodes=[n], inputs=("x",), outputs=("sp",),
+        params={"sp": {"values": w[::2], "kept": kept}},
+    )
+    gq = quantize(g, CalibrationTable())
+    assert gq.node("sp").op == "qlinear"
+    assert gq.node("sp").attrs["format"] == "colcompact"
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 64))
+    got = compile_plan(gq, backend="quant")(gq.params, x)
+    oracle = compile_plan(gq, backend="reference")(gq.params, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(oracle), rtol=1e-4, atol=1e-5)
+    f32 = ref.matmul_ref(jnp.take(x, kept, axis=-1), w[::2])
+    assert float(jnp.abs(got - f32).max()) <= 5e-2
+
+
+# --------------------------------------------------------------------------- #
+# end-to-end acceptance: the three demo apps                                   #
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("app", list(APPS))
+def test_app_quant_backend_parity_and_compression(app):
+    g = APPS[app](KEY, base=8)
+    masks, structures = app_masks(g, app, sparsity=0.5)
+    go = optimize(g, masks, structures)
+    plan_f32 = compile_plan(go, backend="reference")
+    shape = APP_INPUTS[app]
+    batches = [
+        jax.random.normal(jax.random.fold_in(KEY, i), shape) for i in range(2)
+    ]
+    table = calibrate_plan(plan_f32, go.params, batches)
+    gq = optimize(
+        g, masks, structures, calibration=table, quant_skip=APP_QUANT_SKIP[app]
+    )
+    assert any(n.op in ("qlinear", "qconv2d") for n in gq.nodes)
+    plan_q = compile_plan(gq, backend="quant")
+    x = jax.random.normal(jax.random.fold_in(KEY, 99), shape)
+    err = float(jnp.abs(plan_q(gq.params, x) - plan_f32(go.params, x)).max())
+    assert err <= 5e-2, (app, err)
+    mem_f = plan_f32.memory_estimate(x)
+    mem_q = plan_q.memory_estimate(x)
+    ratio = mem_f["param_bytes"] / mem_q["param_bytes"]
+    assert ratio >= 3.0, (app, ratio)
+    # int8 payloads dominate the quantized plan's storage
+    assert mem_q["param_bytes_by_dtype"]["int8"] > mem_q["param_bytes_by_dtype"]["float32"]
+    assert mem_q["weight_bytes_saved"] == mem_f["param_bytes"] - mem_q["param_bytes"]
+
+
+def test_batched_plan_serves_quantized_graph():
+    g = _mlp_graph(KEY)
+    gq = quantize(g, CalibrationTable())
+    plan = compile_plan(gq, backend="quant")
+    bp = plan.batched(4)
+    x = jax.random.normal(KEY, (6, 48))
+    out = bp(gq.params, x)
+    assert out.shape == (6, 32)
+    want = plan(gq.params, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)

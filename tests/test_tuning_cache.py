@@ -1,0 +1,146 @@
+"""TuningCache persistence: JSON round-trips, corrupt/partial cache files
+falling back to seeded defaults (never raising), and key-collision behavior
+across the ``mode`` (interpret vs hw) and format/scheme axes."""
+
+import json
+import warnings
+
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops as kops
+from repro.kernels.ops import TuneEntry, TuningCache
+
+
+@pytest.fixture
+def fresh_cache():
+    cache = kops.tuning_cache()
+    prev_enabled, prev_entries, prev_sweeps = (
+        cache.enabled, dict(cache.entries), cache.sweeps,
+    )
+    cache.clear()
+    yield cache
+    cache.enabled = prev_enabled
+    cache.entries = prev_entries
+    cache.sweeps = prev_sweeps
+
+
+# --------------------------------------------------------------------------- #
+# round-trip                                                                   #
+# --------------------------------------------------------------------------- #
+
+
+def test_roundtrip_preserves_blocks_ms_and_marks_loaded(tmp_path):
+    c = TuningCache(enabled=False)
+    k1 = TuningCache.key("matmul", 64, 128, 256, jnp.float32, "dense", False)
+    k2 = TuningCache.key("qmatmul", 64, 128, 256, jnp.int8, "dense+w8a8", False)
+    c.entries[k1] = TuneEntry((256, 128, 128), "swept", 0.42)
+    c.entries[k2] = TuneEntry((128, 128, 512), "swept", 0.17)
+    p = str(tmp_path / "tune.json")
+    c.save(p)
+    c2 = TuningCache(enabled=False).load(p)
+    assert c2.entries[k1].blocks == (256, 128, 128)
+    assert c2.entries[k1].ms == pytest.approx(0.42)
+    assert c2.entries[k2].blocks == (128, 128, 512)
+    assert all(e.source == "loaded" for e in c2.entries.values())
+
+
+def test_roundtrip_drops_default_placeholders(tmp_path):
+    """Seeded defaults were never measured: persisting them would block
+    future sweeps of those shapes in other processes."""
+    c = TuningCache(enabled=False)
+    c.resolve("matmul", 8, 8, 8, jnp.float32, "dense", True)  # records a default
+    c.entries[TuningCache.key("matmul", 16, 16, 16, jnp.float32, "dense", True)] = (
+        TuneEntry((64, 128, 128), "swept", 1.0)
+    )
+    p = str(tmp_path / "tune.json")
+    c.save(p)
+    entries = json.loads(open(p).read())["entries"]
+    assert len(entries) == 1
+    assert next(iter(entries.values()))["source"] == "swept"
+
+
+def test_save_without_path_raises():
+    c = TuningCache(enabled=False, path=None)
+    with pytest.raises(ValueError, match="no cache path"):
+        c.save()
+
+
+# --------------------------------------------------------------------------- #
+# corrupt / partial cache files fall back to seeded defaults                   #
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize(
+    "payload",
+    [
+        "{ not json at all",                                  # syntactically broken
+        json.dumps({"version": 1}),                           # missing entries
+        json.dumps({"version": 1, "entries": {"k": {}}}),     # entry missing blocks
+        json.dumps({"version": 1, "entries": {"k": None}}),   # entry wrong type
+    ],
+)
+def test_corrupt_cache_file_warns_and_uses_defaults(tmp_path, payload):
+    p = tmp_path / "tune.json"
+    p.write_text(payload)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        c = TuningCache(enabled=False, path=str(p))
+    assert any("ignoring unreadable tuning cache" in str(x.message) for x in w)
+    # the cache still works: unknown keys resolve to the seeded defaults
+    assert c.resolve("matmul", 8, 8, 8, jnp.float32, "dense", True) == (128, 128, 128)
+    assert c.resolve("qmatmul", 8, 8, 8, jnp.int8, "dense+w8a8", True) == (128, 128, 128)
+
+
+def test_missing_cache_file_is_silently_fresh(tmp_path):
+    c = TuningCache(enabled=False, path=str(tmp_path / "nope.json"))
+    assert c.entries == {}
+
+
+# --------------------------------------------------------------------------- #
+# key collisions                                                               #
+# --------------------------------------------------------------------------- #
+
+
+def test_interpret_and_hw_modes_never_share_a_winner(fresh_cache):
+    """Interpret-mode sweeps time Python, not silicon: an interpret winner
+    must never shadow (or be returned for) a real-hardware lookup."""
+    shape = ("matmul", 64, 128, 256, jnp.float32, "dense")
+    k_int = TuningCache.key(*shape, True)
+    k_hw = TuningCache.key(*shape, False)
+    assert k_int != k_hw
+    fresh_cache.entries[k_int] = TuneEntry((64, 128, 128), "swept", 9.9)
+    assert fresh_cache.lookup(*shape, False) is None
+    # hw resolve falls back to the seeded default, not the interpret winner
+    assert fresh_cache.resolve(*shape, False) == TuningCache.DEFAULTS["matmul"]
+    # and the interpret entry is untouched
+    assert fresh_cache.entries[k_int].blocks == (64, 128, 128)
+
+
+def test_format_and_scheme_axes_key_separately():
+    keys = {
+        TuningCache.key("matmul", 8, 8, 8, jnp.float32, "dense", True),
+        TuningCache.key("matmul", 8, 8, 8, jnp.float32, "dense+e2s1", True),
+        TuningCache.key("matmul", 8, 8, 8, jnp.float32, "colcompact", True),
+        TuningCache.key("qmatmul", 8, 8, 8, jnp.float32, "dense+w8", True),
+        TuningCache.key("qmatmul", 8, 8, 8, jnp.int8, "dense+w8a8", True),
+        TuningCache.key("bsr_matmul", 8, 8, 8, jnp.float32, "pbcsr", True),
+        TuningCache.key("bsr_matmul", 8, 8, 8, jnp.float32, "pbcsr+e1s1", True),
+    }
+    assert len(keys) == 7  # no two collapse
+
+
+def test_loaded_entries_survive_resolve_and_block_sweeps(fresh_cache):
+    """A loaded winner is authoritative: resolve returns it without
+    sweeping even when tuning is enabled."""
+    shape = ("matmul", 64, 128, 256, jnp.float32, "dense")
+    key = TuningCache.key(*shape, True)
+    fresh_cache.entries[key] = TuneEntry((256, 128, 128), "loaded", 0.5)
+    fresh_cache.enabled = True
+    called = []
+
+    def runner(*blocks):
+        called.append(blocks)
+
+    assert fresh_cache.resolve(*shape, True, runner=runner) == (256, 128, 128)
+    assert not called and fresh_cache.sweeps == 0
