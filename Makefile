@@ -1,7 +1,10 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast bench bench-smoke deps deps-dev
+.PHONY: test test-fast lint bench bench-smoke deps deps-dev
+
+lint:  ## ruff bug-tier rules (config in pyproject.toml); CI runs this
+	ruff check src tests
 
 test:  ## tier-1 verify
 	python -m pytest -x -q

@@ -22,6 +22,11 @@ algorithm, so this bench reports what is *portable* from this container:
    real hardware only -- and the three demo apps end-to-end through the
    ``quantize`` pass (fp32-vs-int8 plan ms, weight bytes, max-abs-error,
    parity gated at 5e-2).  Results land in ``results/BENCH_quant.json``.
+7. conv: the implicit-GEMM Pallas conv2d (dense f32, channel-pruned, W8,
+   W8A8 schemes) vs the lax.conv baseline, plus the three demo apps through
+   kernel-backend plans -- every conv must lower through the Pallas kernel
+   (zero fallbacks) at parity with the jnp reference plan, step counts at or
+   below the PR 2 baseline.  Results land in ``results/BENCH_conv.json``.
 
 ``--smoke`` shrinks every shape so CI can exercise the full path without a
 TPU (also reachable via ``make bench-smoke``).
@@ -250,7 +255,7 @@ def bench_fusion(smoke: bool = False, out_path: str | None = None) -> dict:
 def bench_quant(smoke: bool = False, out_path: str | None = None) -> dict:
     from repro.core.graph import PassContext, PassManager, compile_plan, optimize
     from repro.kernels import qmatmul
-    from repro.models.cnn import APP_QUANT_SKIP, APPS, app_masks
+    from repro.models.cnn import APP_ACT_SKIP, APP_QUANT_SKIP, APPS, app_masks
     from repro.quant import QTensor, calibrate_plan
 
     interpret = kops.interpret_default()
@@ -326,7 +331,11 @@ def bench_quant(smoke: bool = False, out_path: str | None = None) -> dict:
         plan_ref = compile_plan(go, backend="reference")
         table = calibrate_plan(plan_ref, go.params, batches)
         gq = PassManager(("quantize",)).run(
-            go, PassContext(calibration=table, quant_skip=APP_QUANT_SKIP[app])
+            go,
+            PassContext(
+                calibration=table, quant_skip=APP_QUANT_SKIP[app],
+                act_quant_skip=APP_ACT_SKIP[app],
+            ),
         )
         plan_q = compile_plan(gq, backend=backend)
         x = jax.random.normal(jax.random.fold_in(key, 99), shapes[app])
@@ -366,6 +375,125 @@ def bench_quant(smoke: bool = False, out_path: str | None = None) -> dict:
     return record
 
 
+# --------------------------------------------------------------------------- #
+# conv: implicit-GEMM Pallas kernel + kernel-backend demo-app plans            #
+# --------------------------------------------------------------------------- #
+
+
+def bench_conv(smoke: bool = False, out_path: str | None = None) -> dict:
+    from repro.core.graph import compile_plan, optimize
+    from repro.models.cnn import APPS, app_masks
+    from repro.quant import QTensor
+
+    interpret = kops.interpret_default()
+    record: dict = {
+        "mode": "interpret" if interpret else "hw",
+        "smoke": smoke,
+        "kernels": [],
+        "apps": [],
+    }
+
+    # kernel-level: the implicit-GEMM Pallas conv (all three schemes) vs the
+    # XLA lax.conv baseline.  interpret-mode wall-clock measures Python, so
+    # shapes stay modest there; parity gates the bench in every mode, the
+    # speedup is asserted on real hardware only.
+    n, c, h, wdt, o = (1, 8, 16, 16, 16) if smoke else (1, 32, 32, 32, 64)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, c, h, wdt)) * 0.5
+    w = jax.random.normal(jax.random.PRNGKey(1), (o, c, 3, 3)) * 0.05
+    b = jax.random.normal(jax.random.PRNGKey(2), (o,)) * 0.1
+    qt = QTensor.from_float(w, axis=0)
+    kept = jnp.asarray(np.arange(0, c, 2), jnp.int32)  # half the channels live
+    x_scale = float(jnp.max(jnp.abs(x))) / 127.0
+    reps = 3 if smoke else 7
+    base = jax.jit(lambda x, w, b: ref.conv2d_ref(x, w, b, stride=1, padding="SAME"))
+    t_lax = _median_time(base, x, w, b, reps=reps)
+    want = base(x, w, b)
+    print("conv,scheme,NxCxHxW->O,ms_lax,ms_kernel,speedup,max_err")
+    f_dense = jax.jit(lambda x, w, b: kops.conv2d(x, w, b))
+    f_chan = jax.jit(lambda x, w, b: kops.conv2d(x, w[:, ::2], b, kept=kept))
+    f_w8 = jax.jit(lambda x, v, s, b: kops.conv2d(x, v, b, w_scale=s))
+    f_w8a8 = jax.jit(
+        lambda x, v, s, b: kops.conv2d(x, v, b, w_scale=s, x_scale=x_scale)
+    )
+    want_chan = ref.conv2d_ref(jnp.take(x, kept, axis=1), w[:, ::2], b)
+    cases = (
+        ("dense+f32", lambda: f_dense(x, w, b), want, 1e-4),
+        ("chanprune+f32", lambda: f_chan(x, w, b), want_chan, 1e-4),
+        ("dense+w8", lambda: f_w8(x, qt.values, qt.scale, b), want, 5e-2),
+        ("dense+w8a8", lambda: f_w8a8(x, qt.values, qt.scale, b), want, 5e-2),
+    )
+    for scheme, fn, target, tol in cases:
+        t_k = _median_time(fn, reps=reps)
+        err = float(jnp.abs(fn() - target).max())
+        # parity gates the bench in every mode (int8 schemes against the
+        # fp32 baseline carry bounded quantization noise)
+        assert err <= tol, (scheme, err, tol)
+        speedup = t_lax / t_k
+        if not interpret:  # interpret timings measure Python, not silicon
+            assert speedup > 1.0, (scheme, speedup)
+        row = {
+            "scheme": scheme, "shape": [n, c, h, wdt, o],
+            "ms_lax": t_lax * 1e3, "ms_kernel": t_k * 1e3, "speedup": speedup,
+            "max_err": err,
+        }
+        record["kernels"].append(row)
+        print(
+            f"conv,{scheme},{n}x{c}x{h}x{wdt}->{o},{t_lax*1e3:.3f},"
+            f"{t_k*1e3:.3f},{speedup:.2f},{err:.2e}"
+        )
+
+    # app-level acceptance: every conv of the three demo apps lowers through
+    # the Pallas kernel (zero fallbacks), at parity with the jnp reference
+    # plan, with plan step counts at or below the PR 2 baseline.
+    step_caps = {"style_transfer": 33, "coloring": 30, "super_resolution": 37}
+    shapes = {
+        "style_transfer": (1, 3, 16, 16),
+        "coloring": (1, 1, 16, 16),
+        "super_resolution": (1, 3, 8, 8),
+    }
+    print("conv_app,app,steps,convs,fallbacks,ms_reference,ms_kernel,max_err")
+    for app in APPS:
+        g = APPS[app](key, base=8 if smoke else 16)
+        masks, structures = app_masks(g, app, sparsity=0.5)
+        go = optimize(g, masks, structures)
+        plan_k = compile_plan(go, backend="kernel")
+        plan_r = compile_plan(go, backend="reference")
+        assert len(plan_k.steps) <= step_caps[app], (app, len(plan_k.steps))
+        xa = jax.random.normal(jax.random.PRNGKey(3), shapes[app])
+        kops.reset_conv_fallbacks()
+        yk = plan_k(go.params, xa)  # eager: fallback counters see every call
+        fallbacks = kops.conv_fallback_counts()
+        assert not fallbacks, (app, fallbacks)
+        err = float(jnp.abs(yk - plan_r(go.params, xa)).max())
+        assert err <= 1e-4, (app, err)  # parity gates the bench in every mode
+        n_conv = sum(1 for s in plan_k.steps if s.node.op == "conv2d")
+        jk = jax.jit(lambda p, x: plan_k(p, x))
+        jr = jax.jit(lambda p, x: plan_r(p, x))
+        t_r = _median_time(jr, go.params, xa, reps=reps)
+        t_k = _median_time(jk, go.params, xa, reps=reps)
+        row = {
+            "app": app, "plan_steps": len(plan_k.steps), "conv_steps": n_conv,
+            "fallbacks": fallbacks, "ms_reference": t_r * 1e3,
+            "ms_kernel": t_k * 1e3, "max_err": err,
+        }
+        record["apps"].append(row)
+        print(
+            f"conv_app,{app},{len(plan_k.steps)},{n_conv},{fallbacks},"
+            f"{t_r*1e3:.2f},{t_k*1e3:.2f},{err:.2e}"
+        )
+
+    # smoke numbers are CI plumbing, not perf data: never clobber the
+    # cross-PR trajectory artifact with them
+    default_name = "BENCH_conv_smoke.json" if smoke else "BENCH_conv.json"
+    out_path = out_path or os.path.join(RESULTS_DIR, default_name)
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"conv,saved,{os.path.abspath(out_path)}")
+    return record
+
+
 def main(smoke: bool = False):
     if smoke:
         bench_bsr_compute_scaling(k=256, n=256, m=128)
@@ -374,6 +502,7 @@ def main(smoke: bool = False):
         bench_tuned_blocks(shapes=[(8, 128, 128)])
         bench_fusion(smoke=True)
         bench_quant(smoke=True)
+        bench_conv(smoke=True)
     else:
         bench_bsr_compute_scaling()
         bench_colcompact_walltime()
@@ -381,6 +510,7 @@ def main(smoke: bool = False):
         bench_tuned_blocks()
         bench_fusion()
         bench_quant()
+        bench_conv()
 
 
 if __name__ == "__main__":

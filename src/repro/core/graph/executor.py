@@ -35,7 +35,6 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import lax
 
 from ...kernels import ops as kops
 from ...kernels import ref as kref
@@ -300,39 +299,93 @@ def _qlinear_ref(p, xs, a, rt):
     return _apply_epilogue(y, a.get("epilogue") or (), xs, p)
 
 
-@register_op("qconv2d")
-def _qconv2d(p, xs, a, rt):
-    """INT8-stored conv: weights dequantize per-call (storage shrinks 4x;
-    the MXU stays dense f32 -- same stance as pattern-pruned convs), then
-    the regular conv2d handler runs, epilogue included."""
-    w = p["values"].astype(jnp.float32) * p["w_scale"][:, None, None, None]
-    return _conv2d({**p, "w": w}, xs, a, rt)
+def _conv_call_kwargs(p, a, rt):
+    """Shared kwarg plumbing for the conv kernel handlers."""
+    return dict(
+        stride=a.get("stride", 1), padding=a.get("padding", "SAME"),
+        groups=a.get("groups", 1), dilation=a.get("dilation", 1),
+        kept=p.get("kept"), activation=a.get("activation"),
+        interpret=rt.interpret, _format=a.get("format", "dense"),
+    )
+
+
+def _conv_out_shape(p, xs, a, wkey="w"):
+    x, w = xs[0], p[wkey]
+    oh, ow = kops.conv_out_hw(
+        x.shape[2], x.shape[3], w.shape[2], w.shape[3],
+        a.get("stride", 1), a.get("padding", "SAME"),
+    )
+    return (x.shape[0], w.shape[0], oh, ow)
+
+
+@register_op("conv2d", backends=("kernel",))
+def _conv2d_kernel(p, xs, a, rt):
+    """Pallas implicit-GEMM path: tile-fusable epilogue steps (activation /
+    add / mul with output-shaped sides) run on the f32 accumulator inside
+    the kernel; norm steps and broadcast sides keep the jnp tail.  Channel-
+    pruned convs (``format="channelcompact"``, ``kept`` param) contract only
+    the surviving input channels.  Unsupported configs (groups, dilation,
+    VMEM overflow) auto-fall back to lax.conv inside the wrapper."""
+    epi = a.get("epilogue") or ()
+    steps, sides = _kernel_epilogue(epi, xs, _conv_out_shape(p, xs, a))
+    kw = _conv_call_kwargs(p, a, rt)
+    if steps is not None:
+        kw.update(epilogue=steps, epilogue_sides=sides)
+    y = kops.conv2d(xs[0], p["w"], p.get("b"), **kw)
+    return y if steps is not None else _apply_epilogue(y, epi, xs, p)
+
+
+@register_op("conv2d", backends=("reference",))
+def _conv2d_ref(p, xs, a, rt):
+    """jnp oracle: lax.conv at f32 accumulation (+ the channel gather for
+    pruned convs), epilogue as a jnp tail."""
+    x = xs[0]
+    if p.get("kept") is not None:
+        x = jnp.take(x, p["kept"], axis=1)
+    y = kref.conv2d_ref(
+        x, p["w"], p.get("b"), stride=a.get("stride", 1),
+        padding=a.get("padding", "SAME"), groups=a.get("groups", 1),
+        dilation=a.get("dilation", 1), activation=a.get("activation"),
+    )
+    return _apply_epilogue(y, a.get("epilogue") or (), xs, p)
+
+
+@register_op("qconv2d", backends=("quant",))
+def _qconv2d_quant(p, xs, a, rt):
+    """INT8 Pallas conv: W8A8 (int8 patches x int8 filters -> int32 MXU
+    accumulation) when the node carries a calibrated activation scale, else
+    W8-only (filter tiles dequantized in VMEM) -- replacing the old
+    dequant-to-f32-then-lax.conv path, so the f32 weight copy never
+    materializes in HBM."""
+    epi = a.get("epilogue") or ()
+    steps, sides = _kernel_epilogue(epi, xs, _conv_out_shape(p, xs, a, "values"))
+    kw = _conv_call_kwargs(p, a, rt)
+    kw.update(w_scale=p["w_scale"], x_scale=a.get("x_scale"))
+    if steps is not None:
+        kw.update(epilogue=steps, epilogue_sides=sides)
+    y = kops.conv2d(xs[0], p["values"], p.get("b"), **kw)
+    return y if steps is not None else _apply_epilogue(y, epi, xs, p)
+
+
+@register_op("qconv2d", backends=("reference",))
+def _qconv2d_ref(p, xs, a, rt):
+    """jnp oracle: dequantized filters (and fake-quantized activations for
+    w8a8) through the f32 reference conv."""
+    x = xs[0]
+    if p.get("kept") is not None:
+        x = jnp.take(x, p["kept"], axis=1)
+    y = kref.qconv2d_ref(
+        x, p["values"], p["w_scale"], p.get("b"), x_scale=a.get("x_scale"),
+        stride=a.get("stride", 1), padding=a.get("padding", "SAME"),
+        groups=a.get("groups", 1), dilation=a.get("dilation", 1),
+        activation=a.get("activation"),
+    )
+    return _apply_epilogue(y, a.get("epilogue") or (), xs, p)
 
 
 # --------------------------------------------------------------------------- #
 # handlers: shared ops (same implementation on both backends)                  #
 # --------------------------------------------------------------------------- #
-
-
-@register_op("conv2d")
-def _conv2d(p, xs, a, rt):
-    x, w, b = xs[0], p["w"], p.get("b")
-    dn = lax.conv_dimension_numbers(x.shape, w.shape, ("NCHW", "OIHW", "NCHW"))
-    stride = a.get("stride", 1)
-    y = lax.conv_general_dilated(
-        x,
-        w,
-        window_strides=(stride, stride),
-        padding=a.get("padding", "SAME"),
-        dimension_numbers=dn,
-        feature_group_count=a.get("groups", 1),
-    )
-    if b is not None:
-        y = y + b[None, :, None, None]
-    y = _ACT[a.get("activation")](y)
-    # conv lowers through lax.conv on both backends (the MXU stays dense);
-    # the epilogue program still collapses follower nodes into this one step
-    return _apply_epilogue(y, a.get("epilogue") or (), xs, p)
 
 
 @register_op("norm")
@@ -563,6 +616,9 @@ class ExecutionPlan:
         rt = Runtime(backend="reference", interpret=self.interpret)
         peak = live = sum(nbytes(s) for s in env.values())
         per_step = []
+        # conv steps do their im2col in VMEM, never in HBM: account that
+        # scratch as per-step VMEM-side working memory, not activation bytes
+        vmem_workspace_by_step: Dict[str, int] = {}
         for step in self.steps:
             n = step.node
             out = jax.eval_shape(
@@ -570,6 +626,10 @@ class ExecutionPlan:
                 pstructs.get(n.name, {}),
                 [env[i] for i in n.inputs],
             )
+            if n.op in ("conv2d", "qconv2d"):
+                ws = self._conv_workspace(n, pstructs.get(n.name, {}), env[n.inputs[0]])
+                if ws:
+                    vmem_workspace_by_step[n.name] = ws
             env[n.name] = out
             live += nbytes(out)
             peak = max(peak, live)
@@ -583,8 +643,63 @@ class ExecutionPlan:
             "weight_bytes_saved": int(weight_bytes_saved),
             "peak_total_bytes": int(peak + param_bytes),
             "per_step": per_step,
+            "peak_vmem_workspace_bytes": max(vmem_workspace_by_step.values(), default=0),
+            "vmem_workspace_by_step": vmem_workspace_by_step,
             "out_structs": tuple(env[o] for o in self.graph.outputs),
         }
+
+    def _conv_workspace(self, n: Node, pstruct, x_struct) -> int:
+        """Per-grid-step VMEM working set of one conv step through the
+        implicit-GEMM kernel (resident image + filter tile + im2col patch +
+        accumulator), at the tuned blocks when known, else the defaults."""
+        wkey = "w" if n.op == "conv2d" else "values"
+        if wkey not in pstruct or getattr(x_struct, "ndim", 0) != 4:
+            return 0
+        w = pstruct[wkey]
+        a = n.attrs
+        c = int(pstruct["kept"].shape[0]) if "kept" in pstruct else int(x_struct.shape[1])
+        stride, padding = a.get("stride", 1), a.get("padding", "SAME")
+        kh, kw = int(w.shape[2]), int(w.shape[3])
+        nb, o = int(x_struct.shape[0]), int(w.shape[0])
+        w8a8 = a.get("scheme") == "w8a8" or a.get("x_scale") is not None
+        x_item = 1 if w8a8 else np.dtype(x_struct.dtype).itemsize
+        w_item = np.dtype(w.dtype).itemsize
+        interp = (
+            kops.interpret_default() if self.interpret is None else self.interpret
+        )
+        # a step outside the kernel's matrix executes through lax.conv and
+        # owns no Pallas VMEM workspace
+        if kops.conv_fallback_reason(
+            c, int(x_struct.shape[2]), int(x_struct.shape[3]), kh, kw, stride,
+            padding, groups=a.get("groups", 1), dilation=a.get("dilation", 1),
+            interpret=interp, x_itemsize=x_item, w_itemsize=w_item,
+        ) is not None:
+            return 0
+        cache = kops.tuning_cache()
+        fmt = f"{a.get('format', 'dense')}+" + (
+            "f32" if n.op == "conv2d" else ("w8a8" if w8a8 else "w8")
+        ) + kops.conv_padding_token(padding)
+        # the executing handler appends the epilogue suffix only when the
+        # program runs in-tile (norm steps / broadcast sides lower without
+        # it), which this shape-only walk cannot decide -- probe both keys
+        fmts = [fmt]
+        epi = a.get("epilogue") or ()
+        if epi:
+            n_sides = sum(s[0] in ("add", "mul") for s in epi)
+            fmts.insert(0, fmt + f"+e{len(epi)}s{n_sides}")
+        shape = (nb, c, x_struct.shape[2], x_struct.shape[3], o, kh, kw, stride)
+        dtype = jnp.int8 if w8a8 else x_struct.dtype
+        blocks = next(
+            (
+                b for f in fmts
+                if (b := cache.lookup_nd("conv2d", shape, dtype, f, interp))
+            ),
+            kops.TuningCache.DEFAULTS["conv2d"],
+        )
+        return kops.conv_vmem_workspace(
+            c, int(x_struct.shape[2]), int(x_struct.shape[3]), kh, kw, stride,
+            padding, *blocks, x_itemsize=x_item, w_itemsize=w_item,
+        )["total"]
 
     def summary(self) -> str:
         lines = [

@@ -16,8 +16,10 @@ input              shape, dtype
 linear             params w[K,N], b[N]?; attrs activation?, epilogue?
 sparse_linear      packed params (format-dependent); attrs format, bands…,
                    epilogue?
-conv2d             params w[Co,Ci,kh,kw], b?; attrs stride, padding,
-                   groups, activation?, epilogue?
+conv2d             params w[Co,Ci,kh,kw], b?, kept? (channelcompact: live
+                   input-channel indices, Ci already compacted); attrs
+                   stride, padding, groups, dilation, format?,
+                   activation?, epilogue?
 norm               attrs kind in {batch, instance, layer}; params
                    scale, bias (+ mean, var for batch)
 activation         attrs fn

@@ -60,6 +60,11 @@ class PassContext:
     #: node names the ``quantize`` pass leaves at f32 (the standard
     #: keep-the-output-layer-full-precision accuracy practice)
     quant_skip: Tuple[str, ...] = ()
+    #: node names whose *activations* stay f32 (weights still quantize to
+    #: int8, scheme pinned to w8): the mixed-precision escape hatch for
+    #: residual trunks, where static activation quantization noise
+    #: accumulates across blocks (see models/cnn.py:APP_ACT_SKIP)
+    act_quant_skip: Tuple[str, ...] = ()
     #: per-pass statistics, filled by PassManager.run in pipeline order
     stats: Dict[str, "PassStats"] = dataclasses.field(default_factory=dict)
 

@@ -235,7 +235,11 @@ def substitute_sparse(
             # any conv structure (pattern / column-as-channel): apply the mask,
             # then *compact away* input channels that died across all filters
             # (pattern-connectivity or column pruning at channel granularity --
-            # the only conv sparsity the MXU can exploit, DESIGN.md section 2)
+            # the only conv sparsity the MXU can exploit, DESIGN.md section 2).
+            # The compaction folds into the conv node itself
+            # (format="channelcompact" + a ``kept`` param): the conv kernel
+            # gathers the live channels and contracts a K shrunk by the
+            # pruned ratio -- no glue node, no extra plan step.
             w = p["w"] * mask.astype(p["w"].dtype)
             g.params[node.name] = {**p, "w": w}
             dead_in = np.asarray(jnp.all(mask == 0, axis=(0, 2, 3)))
@@ -244,14 +248,14 @@ def substitute_sparse(
                 g.params[node.name] = {
                     **g.params[node.name],
                     "w": g.params[node.name]["w"][:, kept],
+                    "kept": jnp.asarray(kept, jnp.int32),
                 }
-                glue = Node(
-                    op="gather_channels",
-                    name=node.name + "_ingather",
-                    inputs=node.inputs,
-                    attrs={"mode": "gather", "idx": kept, "n": int(mask.shape[1]), "axis": 1},
+                g = g.replace_node(
+                    node.name,
+                    node.replace(
+                        attrs={**node.attrs, "format": "channelcompact"}
+                    ),
                 )
-                g = _insert_before(g, node.name, glue)
         else:
             w = p["w"] * mask.astype(p["w"].dtype)
             g.params[node.name] = {**p, "w": w}
@@ -580,7 +584,13 @@ def fuse_epilogue(g: Graph) -> Graph:
 _QUANT_SPARSE_FORMATS = ("colcompact", "channelcompact")
 
 
-def quantize(g: Graph, calibration=None, *, skip: Tuple[str, ...] = ()) -> Graph:
+def quantize(
+    g: Graph,
+    calibration=None,
+    *,
+    skip: Tuple[str, ...] = (),
+    act_skip: Tuple[str, ...] = (),
+) -> Graph:
     """Rewrite GEMM/conv nodes to INT8-stored quantized ops (symmetric
     per-output-channel absmax, :class:`repro.quant.qtensor.QTensor` layout).
 
@@ -591,12 +601,20 @@ def quantize(g: Graph, calibration=None, *, skip: Tuple[str, ...] = ()) -> Graph
       ``scheme="w8a8"`` with the static ``x_scale`` -- the executor then
       contracts int8 x int8 on the MXU; otherwise ``scheme="w8"`` keeps f32
       activations and dequantizes weight tiles in VMEM.
-    * ``conv2d`` -> ``qconv2d``: int8 storage (4x smaller weight stream),
-      dequantized at execution -- the MXU stays dense, matching the repo's
-      stance on conv sparsity.
+    * ``conv2d`` -> ``qconv2d``: int8 storage (4x smaller weight stream)
+      executed by the INT8 implicit-GEMM conv kernel -- ``scheme="w8a8"``
+      (+ ``x_scale``) when the input's range is calibrated (int8 x int8 on
+      the MXU), else ``scheme="w8"`` (filter tiles dequantized in VMEM).
+      Channelcompact convs keep their ``kept`` indices.
     * ``sparse_linear(pbcsr)`` is left untouched (blocked payload), as is
       any node named in ``skip`` (the classic keep-first/last-layer-f32
-      accuracy escape hatch).
+      accuracy escape hatch).  Nodes named in ``act_skip`` still quantize
+      their weights but are pinned to ``scheme="w8"`` even when calibrated
+      -- the mixed-precision knob for residual trunks, where static
+      activation quantization noise accumulates across blocks (measured on
+      the demo apps: all-W8A8 breaches the 5e-2 parity contract on the two
+      residual-trunk apps while the BN-normalized coloring stack holds it
+      with every conv at W8A8; see ``models/cnn.py:APP_ACT_SKIP``).
 
     Every rewritten node is annotated with ``bytes_saved`` (dense f32 bytes
     minus int8 payload + scales), which
@@ -608,6 +626,20 @@ def quantize(g: Graph, calibration=None, *, skip: Tuple[str, ...] = ()) -> Graph
     from ...quant.qtensor import QTensor  # local: quant layer is optional
 
     g = dataclasses.replace(g, nodes=list(g.nodes), params=dict(g.params))
+
+    def elect_scheme(node) -> Dict[str, Any]:
+        """The one W8A8-vs-W8 policy shared by linear and conv rewrites:
+        upgrade iff the node's input range is calibrated and its activations
+        are not pinned to f32 by ``act_skip``."""
+        x_scale = (
+            calibration.get_scale(node.inputs[0])
+            if calibration is not None and node.name not in act_skip
+            else None
+        )
+        if x_scale is None:
+            return {"scheme": "w8"}
+        return {"scheme": "w8a8", "x_scale": float(x_scale)}
+
     nodes = []
     for node in g.nodes:
         if node.name in skip:
@@ -633,29 +665,26 @@ def quantize(g: Graph, calibration=None, *, skip: Tuple[str, ...] = ()) -> Graph
             attrs = {
                 **node.attrs,
                 "format": node.attrs.get("format", "dense"),
-                "scheme": "w8",
                 "bytes_saved": saved,
+                **elect_scheme(node),
             }
-            x_scale = (
-                calibration.get_scale(node.inputs[0])
-                if calibration is not None
-                else None
-            )
-            if x_scale is not None:
-                attrs.update(scheme="w8a8", x_scale=float(x_scale))
             nodes.append(node.replace(op="qlinear", attrs=attrs))
         elif node.op == "conv2d" and "w" in p:
             w = p["w"]
             qt = QTensor.from_float(w, axis=0)  # per output channel (Co)
             saved = int(w.size) * w.dtype.itemsize - qt.nbytes
+            # the ``kept`` channel indices of a channelcompact conv (and any
+            # epilogue norm params) ride along untouched
             g.params[node.name] = {
                 **{k: v for k, v in p.items() if k != "w"},
                 "values": qt.values,
                 "w_scale": qt.scale,
             }
-            nodes.append(
-                node.replace(op="qconv2d", attrs={**node.attrs, "bytes_saved": saved})
-            )
+            # w8a8 conv contracts int8 x int8 on the MXU (the channel gather
+            # preserves values, so the input's scale applies to the gathered
+            # activations too)
+            attrs = {**node.attrs, "bytes_saved": saved, **elect_scheme(node)}
+            nodes.append(node.replace(op="qconv2d", attrs=attrs))
         else:
             nodes.append(node)
     g = dataclasses.replace(g, nodes=nodes)
@@ -764,7 +793,10 @@ register_pass("fuse_epilogue", post=(params_bound_to_nodes,))(
     lambda g, ctx: fuse_epilogue(g)
 )
 register_pass("quantize", needs_calibration=True, post=(params_bound_to_nodes,))(
-    lambda g, ctx: quantize(g, ctx.calibration, skip=tuple(ctx.quant_skip))
+    lambda g, ctx: quantize(
+        g, ctx.calibration, skip=tuple(ctx.quant_skip),
+        act_skip=tuple(ctx.act_quant_skip),
+    )
 )
 register_pass("dce", post=(no_dead_nodes, params_bound_to_nodes))(lambda g, ctx: dce(g))
 
@@ -777,6 +809,7 @@ def optimize(
     max_bands: int = 4,
     calibration: Optional[Any] = None,
     quant_skip: Tuple[str, ...] = (),
+    act_quant_skip: Tuple[str, ...] = (),
     pipeline: Optional[Tuple[str, ...]] = None,
 ) -> Graph:
     """The full deployment pipeline (paper's compiler, end to end).
@@ -790,5 +823,6 @@ def optimize(
     ctx = PassContext(
         masks=masks or {}, structures=structures or {}, max_bands=max_bands,
         calibration=calibration, quant_skip=tuple(quant_skip),
+        act_quant_skip=tuple(act_quant_skip),
     )
     return PassManager(pipeline).run(g, ctx)

@@ -3,6 +3,7 @@ from .ops import (
     attention,
     bsr_matmul,
     col_matmul,
+    conv2d,
     ffn_gateup,
     fused_elementwise,
     interpret_default,

@@ -27,6 +27,13 @@ import numpy as np
 
 from . import ref as _ref
 from .bsr_matmul import bsr_matmul as _bsr_matmul
+from .conv2d import conv2d_gemm as _conv2d_gemm
+from .conv2d import (
+    conv_out_hw,
+    conv_pad_hw,
+    conv_padding_token,
+    conv_vmem_workspace,
+)
 from .dense_matmul import dense_matmul as _dense_matmul
 from .flash_attention import flash_attention as _flash_attention
 from .fused_elementwise import fused_elementwise as _fused_elementwise
@@ -39,6 +46,13 @@ __all__ = [
     "matmul",
     "bsr_matmul",
     "col_matmul",
+    "conv2d",
+    "conv_out_hw",
+    "conv_padding_token",
+    "conv_vmem_workspace",
+    "conv_fallback_counts",
+    "conv_fallback_reason",
+    "reset_conv_fallbacks",
     "fused_elementwise",
     "ffn_gateup",
     "qmatmul",
@@ -94,6 +108,9 @@ class TuningCache:
         "bsr_matmul": (128,),
         "fused_elementwise": (128,),
         "qmatmul": (128, 128, 128),
+        # conv2d tunes (block_h, block_o): output-row rows per tile (the GEMM
+        # M block is block_h * OW) and output-channel lanes per tile
+        "conv2d": (8, 128),
     }
     #: small sweep grids; TPU lanes want the minor dims at 128 multiples
     #: (pallas_guide: f32 min tile 8x128, MXU 128x128)
@@ -117,6 +134,17 @@ class TuningCache:
             (128, 128, 256),
             (128, 128, 512),
         ),
+        # more rows per tile amortizes the per-tap patch slicing; larger
+        # block_o amortizes image residency across output channels
+        "conv2d": (
+            (1, 128),
+            (2, 128),
+            (4, 128),
+            (8, 128),
+            (16, 128),
+            (4, 256),
+            (8, 256),
+        ),
     }
 
     def __init__(self, enabled: Optional[bool] = None, path: Optional[str] = None):
@@ -137,15 +165,26 @@ class TuningCache:
 
     # -- keying -------------------------------------------------------------- #
     @staticmethod
-    def key(op: str, m: int, n: int, k: int, dtype: Any, fmt: str, interpret: bool) -> str:
-        # interpret-mode timings measure Python, not silicon: never let them
-        # masquerade as (or shadow) real-hardware winners
+    def key_nd(op: str, shape: Sequence[int], dtype: Any, fmt: str, interpret: bool) -> str:
+        """Key over an arbitrary-rank shape signature: the GEMM family keys
+        on ``MxNxK``, ``conv2d`` on ``NxCxHxWxOxKHxKWxS`` (batch, contracted
+        input channels, spatial dims, output channels, filter taps, stride).
+        interpret-mode timings measure Python, not silicon: never let them
+        masquerade as (or shadow) real-hardware winners."""
         mode = "interpret" if interpret else "hw"
-        return f"{op}|{int(m)}x{int(n)}x{int(k)}|{jnp.dtype(dtype).name}|{fmt}|{mode}"
+        dims = "x".join(str(int(d)) for d in shape)
+        return f"{op}|{dims}|{jnp.dtype(dtype).name}|{fmt}|{mode}"
+
+    @staticmethod
+    def key(op: str, m: int, n: int, k: int, dtype: Any, fmt: str, interpret: bool) -> str:
+        return TuningCache.key_nd(op, (m, n, k), dtype, fmt, interpret)
 
     # -- lookup / sweep ------------------------------------------------------ #
     def lookup(self, op, m, n, k, dtype, fmt, interpret) -> Optional[Tuple[int, ...]]:
-        e = self.entries.get(self.key(op, m, n, k, dtype, fmt, interpret))
+        return self.lookup_nd(op, (m, n, k), dtype, fmt, interpret)
+
+    def lookup_nd(self, op, shape, dtype, fmt, interpret) -> Optional[Tuple[int, ...]]:
+        e = self.entries.get(self.key_nd(op, shape, dtype, fmt, interpret))
         return None if e is None else e.blocks
 
     def resolve(
@@ -160,7 +199,19 @@ class TuningCache:
         runner: Optional[Callable[..., Any]] = None,
         reps: int = 3,
     ) -> Tuple[int, ...]:
-        key = self.key(op, m, n, k, dtype, fmt, interpret)
+        return self.resolve_nd(op, (m, n, k), dtype, fmt, interpret, runner, reps)
+
+    def resolve_nd(
+        self,
+        op: str,
+        shape: Sequence[int],
+        dtype: Any,
+        fmt: str,
+        interpret: bool,
+        runner: Optional[Callable[..., Any]] = None,
+        reps: int = 3,
+    ) -> Tuple[int, ...]:
+        key = self.key_nd(op, shape, dtype, fmt, interpret)
         hit = self.entries.get(key)
         can_sweep = self.enabled and runner is not None
         # seeded-default entries are placeholders, not measurements: re-tune
@@ -430,6 +481,272 @@ def qmatmul(
         interpret, epilogue, sides2,
     )
     return out.reshape(*lead, n)
+
+
+# --------------------------------------------------------------------------- #
+# implicit-GEMM conv2d                                                          #
+# --------------------------------------------------------------------------- #
+
+#: per-grid-step VMEM working-set ceiling for the implicit-GEMM conv on real
+#: hardware (the whole padded image is tile-resident); interpret mode has no
+#: VMEM, so the guard only arms on TPUs
+_CONV_VMEM_LIMIT = 12 * 2**20
+
+#: reason -> count of conv2d calls that lowered through lax.conv instead of
+#: the Pallas kernel (the documented fallback matrix: groups / dilation /
+#: degenerate output / VMEM overflow).  Counted at trace time under jit.
+_CONV_FALLBACKS: Dict[str, int] = {}
+
+
+def conv_fallback_counts() -> Dict[str, int]:
+    """Copy of the conv2d fallback counters (reason -> count) -- the
+    "no lax.conv except documented fallbacks" acceptance probe."""
+    return dict(_CONV_FALLBACKS)
+
+
+def reset_conv_fallbacks() -> None:
+    _CONV_FALLBACKS.clear()
+
+
+def conv_fallback_reason(
+    c: int,
+    h: int,
+    w: int,
+    kh: int,
+    kw: int,
+    stride: int,
+    padding,
+    *,
+    groups: int = 1,
+    dilation: int = 1,
+    interpret: bool,
+    x_itemsize: int = 4,
+    w_itemsize: int = 4,
+    block_h: Optional[int] = None,
+    block_o: Optional[int] = None,
+) -> Optional[str]:
+    """The conv2d fallback matrix, shared by the :func:`conv2d` wrapper and
+    :meth:`ExecutionPlan.memory_estimate` (a step that lowers through
+    lax.conv has no Pallas VMEM workspace).  ``c`` is the *contracted*
+    channel count.  The VMEM guard evaluates the largest blocks the tuning
+    cache could resolve (pinned values, else the biggest sweep candidate):
+    a swept winner must never overshoot the limit the guard enforces."""
+    if groups != 1:
+        return "groups"
+    if dilation != 1:
+        return "dilation"
+    if not isinstance(padding, str):
+        try:
+            (a, b), (c2, d) = padding
+            if min(int(a), int(b), int(c2), int(d)) < 0:
+                return "padding"  # lax allows negative (cropping) pads; we don't
+        except (TypeError, ValueError):
+            return "padding"
+    try:
+        oh, ow = conv_out_hw(h, w, kh, kw, stride, padding)
+    except (TypeError, ValueError):
+        return "padding"
+    if oh < 1 or ow < 1:
+        return "degenerate"
+    if not interpret:
+        bh = block_h or max(cand[0] for cand in TuningCache.CANDIDATES["conv2d"])
+        bo = block_o or max(cand[1] for cand in TuningCache.CANDIDATES["conv2d"])
+        wsb = conv_vmem_workspace(
+            c, h, w, kh, kw, stride, padding, bh, bo,
+            x_itemsize=x_itemsize, w_itemsize=w_itemsize,
+        )
+        if wsb["total"] > _CONV_VMEM_LIMIT:
+            return "vmem"
+    return None
+
+
+def _conv2d_fallback(
+    x, w, bias, *, stride, padding, kept, w_scale, x_scale, groups, dilation,
+    activation, epilogue, sides,
+):
+    """lax.conv path for configs outside the kernel's matrix -- same math as
+    the reference handlers (dequant / fake-quant / channel gather / jnp
+    epilogue), so a fallback never changes results, only the engine."""
+    if kept is not None:
+        x = jnp.take(x, kept, axis=1)
+    if w.dtype == jnp.int8:
+        w = w.astype(jnp.float32) * w_scale.astype(jnp.float32)[:, None, None, None]
+        if x_scale is not None:
+            from ..quant.qtensor import fake_quant  # local: quant is optional
+
+            x = fake_quant(x.astype(jnp.float32), jnp.float32(x_scale))
+    y = _ref.conv2d_ref(
+        x, w, bias, stride=stride, padding=padding, groups=groups,
+        dilation=dilation, activation=activation, out_dtype=jnp.float32,
+    )
+    if epilogue:
+        y = _ref.apply_steps_ref(y, epilogue, [s.astype(jnp.float32) for s in sides])
+    return y.astype(x.dtype)
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    kept: Optional[jax.Array] = None,
+    w_scale: Optional[jax.Array] = None,
+    x_scale: Optional[float] = None,
+    groups: int = 1,
+    dilation: int = 1,
+    activation: Optional[str] = None,
+    epilogue: Sequence[Tuple] = (),
+    epilogue_sides: Sequence[jax.Array] = (),
+    block_h: Optional[int] = None,
+    block_o: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    _format: Optional[str] = None,
+) -> jax.Array:
+    """``epilogue(act(conv2d(x, w) + bias))`` through the tiled Pallas
+    implicit-GEMM kernel.  ``x [N, C, H, W]`` NCHW, ``w [O, C', kh, kw]``
+    OIHW, SAME/VALID ``padding``, square ``stride``.
+
+    Scheme selection (at lowering time, reflected in the tuning key):
+
+    * f32 ``w`` -> **dense** f32 accumulation.
+    * ``kept`` (surviving-input-channel indices from channel/column pruning)
+      -> **channel-pruned**: ``x`` is gathered to the live channels first, so
+      the implicit GEMM contracts only ``C' = len(kept)`` of K.
+    * int8 ``w`` + ``w_scale[O]`` -> **INT8**: with ``x_scale`` (calibrated
+      static activation scale) activations quantize to int8 and the MXU
+      contracts int8 x int8 into int32 (**W8A8**); without it the weight
+      tiles dequantize in VMEM against f32 activations (**W8-only**).
+
+    ``epilogue`` is the usual step program (``("activation", fn)`` /
+    ``("add"|"mul", slot)`` into ``epilogue_sides``, each shaped like the
+    NCHW output), run on the f32 accumulator inside the kernel.
+
+    Fallback matrix (auto-routed through ``lax.conv``, bit-identical math,
+    counted in :func:`conv_fallback_counts`): ``groups != 1``,
+    ``dilation != 1``, malformed/negative explicit padding, degenerate
+    output (``OH*OW < 1``), or -- on real hardware only -- a per-step VMEM
+    working set above ~12 MB (the padded image is tile-resident) at the
+    largest blocks the tuning cache could resolve.
+
+    Block sizes left as ``None`` resolve through the tuning cache under the
+    ``conv2d|NxCxHxWxOxKHxKWxS|{dtype}|{fmt}+{scheme}[+valid|+p..][+e..s..]|{mode}``
+    key family (``(block_h, block_o)``: output rows x output channels per
+    tile; SAME -- the canonical geometry -- keys without a padding suffix).
+    """
+    interpret = interpret_default() if interpret is None else interpret
+    epilogue = tuple(tuple(s) for s in epilogue)
+    sides = tuple(epilogue_sides)
+    nb, c_in, h, w_in = x.shape
+    o, cw, kh, kw_ = w.shape
+    is_q = w.dtype == jnp.int8
+    if is_q and w_scale is None:
+        raise ValueError("int8 conv weights need w_scale")
+    if x_scale is not None and not is_q:
+        raise ValueError("x_scale (W8A8) requires int8 weights")
+    scheme = "f32" if not is_q else ("w8a8" if x_scale is not None else "w8")
+    fmt = _format or ("channelcompact" if kept is not None else "dense")
+    reason = conv_fallback_reason(
+        int(kept.shape[0]) if kept is not None else c_in,
+        h, w_in, kh, kw_, stride, padding,
+        groups=groups, dilation=dilation, interpret=interpret,
+        x_itemsize=1 if scheme == "w8a8" else x.dtype.itemsize,
+        w_itemsize=w.dtype.itemsize, block_h=block_h, block_o=block_o,
+    )
+    if reason is not None:
+        _CONV_FALLBACKS[reason] = _CONV_FALLBACKS.get(reason, 0) + 1
+        return _conv2d_fallback(
+            x, w, bias, stride=stride, padding=padding, kept=kept,
+            w_scale=w_scale, x_scale=x_scale, groups=groups, dilation=dilation,
+            activation=activation, epilogue=epilogue, sides=sides,
+        )
+
+    oh, ow = conv_out_hw(h, w_in, kh, kw_, stride, padding)
+    for s in sides:
+        assert s.shape == (nb, o, oh, ow), (s.shape, (nb, o, oh, ow))
+    if kept is not None:
+        x = jnp.take(x, kept, axis=1)
+    c = x.shape[1]
+    assert c == cw, (x.shape, w.shape)
+    if c == 0:
+        # every input channel pruned away: the output is pure epilogue math
+        # over the bias (the empty contraction contributes zeros)
+        y = jnp.zeros((nb, o, oh, ow), jnp.float32)
+        if bias is not None:
+            y = y + bias.astype(jnp.float32)[None, :, None, None]
+        y = _ref._ACT[activation](y)
+        if epilogue:
+            y = _ref.apply_steps_ref(y, epilogue, [s.astype(jnp.float32) for s in sides])
+        return y.astype(x.dtype)
+
+    x2 = x
+    out_dtype = x.dtype
+    if scheme == "w8a8":
+        from ..quant.qtensor import quantize_array  # local: quant is optional
+
+        x2 = quantize_array(x2.astype(jnp.float32), jnp.float32(x_scale))
+        out_dtype = jnp.float32
+    ws_vec = None
+    if is_q:
+        ws_vec = w_scale.astype(jnp.float32)
+        if scheme == "w8a8":
+            ws_vec = ws_vec * jnp.float32(x_scale)
+        out_dtype = jnp.float32
+    pt, pl_ = conv_pad_hw(h, w_in, kh, kw_, stride, padding)
+
+    def run(bh, bo):
+        ohp = -(-oh // bh) * bh
+        hpad = (ohp - 1) * stride + kh
+        wpad = (ow - 1) * stride + kw_
+        # one HBM layout pass: NCHW -> NHWC + crop/zero-pad to the exact
+        # span the taps touch (this is *padding*, never the im2col matrix --
+        # patches materialize in VMEM only).  A VALID conv may leave an
+        # unconsumed input tail, so crop before padding.
+        h_used = min(h, hpad - pt)
+        w_used = min(w_in, wpad - pl_)
+        xt = jnp.pad(
+            x2.transpose(0, 2, 3, 1)[:, :h_used, :w_used],
+            ((0, 0), (pt, hpad - pt - h_used), (pl_, wpad - pl_ - w_used), (0, 0)),
+        )
+        wt = _pad_axis(w.transpose(2, 3, 1, 0).reshape(kh * kw_, c, o), bo, 2)
+        op_ = wt.shape[2]
+        wsp = None if ws_vec is None else _pad_axis(ws_vec, bo, 0)
+        bp = None if bias is None else _pad_axis(bias, bo, 0)
+        sp = []
+        for s in sides:
+            st = jnp.pad(
+                s.transpose(0, 2, 3, 1),
+                ((0, 0), (0, ohp - oh), (0, 0), (0, op_ - o)),
+            )
+            sp.append(st.reshape(nb * ohp * ow, op_))
+        out2 = _conv2d_gemm(
+            xt, wt, wsp, bp, *sp,
+            stride=stride, kh=kh, kw=kw_,
+            activation=activation, epilogue=epilogue,
+            block_h=bh, block_o=bo, interpret=interpret, out_dtype=out_dtype,
+        )
+        return (
+            out2.reshape(nb, ohp, ow, op_)[:, :oh, :, :o].transpose(0, 3, 1, 2)
+        )
+
+    if block_h is None and block_o is None:
+        runner = None
+        if _TUNING.enabled and _concrete(x2, w, bias, w_scale, *sides):
+            runner = run
+        # SAME (canonical) keys bare; VALID / explicit pads suffix the fmt --
+        # same dims, different output geometry must never share a winner
+        fmtkey = f"{fmt}+{scheme}" + conv_padding_token(padding)
+        if epilogue:
+            fmtkey += f"+e{len(epilogue)}s{len(sides)}"
+        block_h, block_o = _TUNING.resolve_nd(
+            "conv2d", (nb, c, h, w_in, o, kh, kw_, stride), x2.dtype, fmtkey,
+            interpret, runner,
+        )
+    elif block_h is None or block_o is None:
+        dh, do_ = TuningCache.DEFAULTS["conv2d"]
+        block_h, block_o = block_h or dh, block_o or do_
+    return run(block_h, block_o)
 
 
 def fused_elementwise(

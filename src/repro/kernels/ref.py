@@ -16,6 +16,8 @@ __all__ = [
     "matmul_ref",
     "bsr_matmul_ref",
     "qmatmul_ref",
+    "conv2d_ref",
+    "qconv2d_ref",
     "ffn_gateup_ref",
     "pbcsr_to_dense_ref",
     "flash_attention_ref",
@@ -118,6 +120,69 @@ def qmatmul_ref(
         xf = fake_quant(xf, jnp.float32(x_scale))
     return matmul_ref(
         xf, w, bias, activation=activation, out_dtype=out_dtype or jnp.float32
+    )
+
+
+def conv2d_ref(
+    x: jax.Array,
+    w: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    groups: int = 1,
+    dilation: int = 1,
+    activation: Optional[str] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """f32 oracle for the implicit-GEMM conv kernel: ``x [N, C, H, W]``
+    NCHW, ``w [O, C/groups, kh, kw]`` OIHW, XLA conv semantics."""
+    from jax import lax
+
+    dn = lax.conv_dimension_numbers(x.shape, w.shape, ("NCHW", "OIHW", "NCHW"))
+    y = lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding,
+        rhs_dilation=(dilation, dilation),
+        dimension_numbers=dn,
+        feature_group_count=groups,
+    )
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)[None, :, None, None]
+    return _ACT[activation](y).astype(out_dtype or x.dtype)
+
+
+def qconv2d_ref(
+    x: jax.Array,
+    w_q: jax.Array,
+    w_scale: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    x_scale: Optional[float] = None,
+    stride: int = 1,
+    padding: str = "SAME",
+    groups: int = 1,
+    dilation: int = 1,
+    activation: Optional[str] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """f32 oracle for the quantized conv kernel (both schemes), mirroring
+    :func:`qmatmul_ref`: ``w_q [O, C, kh, kw]`` int8 with per-output-channel
+    ``w_scale [O]``; ``x_scale`` selects W8A8 (activations fake-quantized
+    with the kernel's round/clip), else W8-only (f32 activations against the
+    dequantized weight)."""
+    from ..quant.qtensor import fake_quant  # no cycle: quant is jnp-only
+
+    w = w_q.astype(jnp.float32) * w_scale.astype(jnp.float32)[:, None, None, None]
+    xf = x.astype(jnp.float32)
+    if x_scale is not None:
+        xf = fake_quant(xf, jnp.float32(x_scale))
+    return conv2d_ref(
+        xf, w, bias, stride=stride, padding=padding, groups=groups,
+        dilation=dilation, activation=activation,
+        out_dtype=out_dtype or jnp.float32,
     )
 
 

@@ -30,7 +30,7 @@ def _serve_graph_app(args) -> None:
     """Compile one of the paper's demo apps through the full pipeline
     (PassManager -> execution plan) and serve frames through the plan."""
     from ..core.graph import PassContext, PassManager, compile_plan
-    from ..models.cnn import APP_QUANT_SKIP, APPS, app_masks
+    from ..models.cnn import APP_ACT_SKIP, APP_QUANT_SKIP, APPS, app_masks
 
     build = APPS[args.graph_app]
     g = build(jax.random.PRNGKey(args.seed), base=args.base)
@@ -61,7 +61,8 @@ def _serve_graph_app(args) -> None:
         ]
         table = calibrate_plan(plan_f32, go.params, batches)
         qctx = PassContext(
-            calibration=table, quant_skip=APP_QUANT_SKIP[args.graph_app]
+            calibration=table, quant_skip=APP_QUANT_SKIP[args.graph_app],
+            act_quant_skip=APP_ACT_SKIP[args.graph_app],
         )
         gq = PassManager(("quantize",)).run(go, qctx)
         backend = "quant" if on_tpu else "reference"

@@ -21,6 +21,7 @@ the tail batch.
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -119,20 +120,50 @@ class PlanServer:
     ``plan.batched(batch_size)`` -- every chunk runs at the fixed compiled
     batch shape, only the tail chunk carries padding.  Stats record the
     padding overhead, the serving cost of never re-compiling.
+
+    ``flush_after`` (seconds) is the latency deadline for low-traffic
+    serving: once the *oldest* queued frame has waited that long, the next
+    :meth:`submit` or :meth:`poll` auto-flushes the partial batch instead of
+    blocking on batch fill.  :meth:`poll` hands its flush output straight
+    back; only *submit-triggered* flushes (whose caller receives a frame
+    index, not outputs) buffer into ``completed`` -- drain it with
+    :meth:`drain_completed` regularly, or the retained device arrays grow
+    with server lifetime.  Manual :meth:`flush`/:meth:`close` return their
+    outputs directly.  ``clock`` is injectable for tests.
     """
 
-    def __init__(self, plan, params, batch_size: int, *, via_vmap: bool = False):
+    def __init__(
+        self,
+        plan,
+        params,
+        batch_size: int,
+        *,
+        via_vmap: bool = False,
+        flush_after: Optional[float] = None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
         self.plan = plan
         self.params = params
         self.batch_size = batch_size
         self.batched = plan.batched(batch_size, via_vmap=via_vmap)
         self._pending: List[Tuple[Array, ...]] = []
         self.closed = False
-        self.stats: Dict[str, int] = {"frames": 0, "batches": 0, "padded_frames": 0}
+        self.flush_after = flush_after
+        self._clock = clock
+        self._oldest: Optional[float] = None
+        #: outputs of *submit*-triggered deadline flushes, in flush order
+        #: (poll-triggered flushes return their output to the caller
+        #: instead); drain via :meth:`drain_completed`
+        self.completed: List[Any] = []
+        self.stats: Dict[str, int] = {
+            "frames": 0, "batches": 0, "padded_frames": 0, "deadline_flushes": 0,
+        }
 
     def submit(self, *frame_inputs: Array) -> int:
         """Queue one frame (one array per graph input, sans batch dim).
-        Returns its index within the next flush."""
+        Returns its index within the next flush.  With a ``flush_after``
+        deadline, a queue whose oldest frame has exceeded it is flushed
+        (output appended to ``completed``) right after this frame joins."""
         if self.closed:
             raise RuntimeError("PlanServer is closed; no further frames accepted")
         if len(frame_inputs) != len(self.plan.graph.inputs):
@@ -140,12 +171,46 @@ class PlanServer:
                 f"plan expects {len(self.plan.graph.inputs)} inputs per frame, "
                 f"got {len(frame_inputs)}"
             )
+        if not self._pending:
+            self._oldest = self._clock()
         self._pending.append(tuple(jnp.asarray(f) for f in frame_inputs))
-        return len(self._pending) - 1
+        idx = len(self._pending) - 1
+        out = self._deadline_flush()
+        if out is not None:
+            # submit's caller only sees a frame index: buffer the outputs
+            self.completed.append(out)
+        return idx
 
     @property
     def pending(self) -> int:
         return len(self._pending)
+
+    def _deadline_flush(self):
+        if (
+            self.closed
+            or self.flush_after is None
+            or self._oldest is None
+            or not self._pending
+            or self._clock() - self._oldest < self.flush_after
+        ):
+            return None
+        out = self.flush()
+        self.stats["deadline_flushes"] += 1
+        return out
+
+    def poll(self):
+        """Deadline check: flush iff the oldest queued frame has waited at
+        least ``flush_after`` seconds, returning the flushed outputs (or
+        None).  No-op without a deadline, an empty queue, or a closed server
+        -- call this from a serving loop's idle ticks so a lone frame is
+        never stranded behind batch fill."""
+        return self._deadline_flush()
+
+    def drain_completed(self) -> List[Any]:
+        """Hand over (and clear) the buffered submit-triggered flush
+        outputs, oldest first."""
+        done, self.completed = self.completed, []
+        return done
 
     def flush(self):
         """Run all queued frames -- *including* a partial tail batch (the
@@ -155,6 +220,7 @@ class PlanServer:
         if not self._pending:
             return None
         frames, self._pending = self._pending, []
+        self._oldest = None
         inputs = tuple(
             jnp.stack([f[i] for f in frames]) for i in range(len(frames[0]))
         )

@@ -311,7 +311,9 @@ def test_plan_server_queue_and_stats():
     out = server.flush()
     assert server.pending == 0
     assert out.shape[0] == 6
-    assert server.stats == {"frames": 6, "batches": 2, "padded_frames": 2}
+    assert server.stats == {
+        "frames": 6, "batches": 2, "padded_frames": 2, "deadline_flushes": 0,
+    }
     want = plan(go.params, jnp.stack(frames))
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
     assert server.flush() is None  # empty queue is a no-op
@@ -346,6 +348,75 @@ def test_plan_server_context_manager_drains_queue():
         assert server.pending == 1
     assert server.closed and server.pending == 0
     assert server.stats["frames"] == 1  # the exit flush ran it
+
+
+def test_plan_server_flush_after_deadline_flushes_partial_batch():
+    """Low-traffic serving: once the oldest queued frame has waited past the
+    deadline, the next submit auto-flushes the partial batch instead of
+    blocking on batch fill."""
+    go, plan = _small_app_plan()
+    now = [0.0]
+    server = PlanServer(
+        plan, go.params, batch_size=4, flush_after=1.0, clock=lambda: now[0]
+    )
+    f0 = jax.random.normal(jax.random.PRNGKey(0), (3, 8, 8))
+    f1 = jax.random.normal(jax.random.PRNGKey(1), (3, 8, 8))
+    server.submit(f0)
+    assert server.pending == 1 and not server.completed  # under deadline
+    now[0] = 0.5
+    assert server.poll() is None  # still under deadline
+    now[0] = 1.2  # the *oldest* frame is now past the deadline
+    server.submit(f1)  # joins the flush triggered by its own submit
+    assert server.pending == 0
+    assert len(server.completed) == 1
+    (out,) = server.drain_completed()  # hand over + clear the buffer
+    assert not server.completed
+    assert out.shape[0] == 2
+    want = plan(go.params, jnp.stack([f0, f1]))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+    assert server.stats["deadline_flushes"] == 1
+    assert server.stats["frames"] == 2 and server.stats["padded_frames"] == 2
+
+
+def test_plan_server_flush_after_poll_without_submit():
+    """A lone frame must never be stranded: an idle-loop poll() flushes it
+    once the deadline passes, and the timer re-arms for the next frame."""
+    go, plan = _small_app_plan()
+    now = [0.0]
+    server = PlanServer(
+        plan, go.params, batch_size=4, flush_after=0.5, clock=lambda: now[0]
+    )
+    assert server.poll() is None  # empty queue: no-op
+    server.submit(jax.random.normal(KEY, (3, 8, 8)))
+    now[0] = 0.6
+    out = server.poll()
+    assert out is not None and out.shape[0] == 1
+    assert server.completed == []  # poll hands outputs back, never buffers
+    assert server.poll() is None  # queue drained; deadline timer reset
+    # a fresh frame restarts the deadline from its own submit time
+    server.submit(jax.random.normal(KEY, (3, 8, 8)))
+    assert server.poll() is None
+    now[0] = 1.2
+    assert server.poll() is not None
+    assert server.stats["deadline_flushes"] == 2
+
+
+def test_plan_server_flush_after_close_interaction():
+    """close() drains regardless of the deadline (queued frames are never
+    dropped), and a closed server's poll() is a no-op."""
+    go, plan = _small_app_plan()
+    now = [0.0]
+    server = PlanServer(
+        plan, go.params, batch_size=4, flush_after=10.0, clock=lambda: now[0]
+    )
+    f0 = jax.random.normal(KEY, (3, 8, 8))
+    server.submit(f0)
+    out = server.close()  # deadline nowhere near expired: close still drains
+    assert out is not None and out.shape[0] == 1 and server.closed
+    assert server.stats["deadline_flushes"] == 0  # manual close, not deadline
+    assert server.poll() is None  # closed server: no-op
+    with pytest.raises(RuntimeError, match="closed"):
+        server.submit(f0)
 
 
 # --------------------------------------------------------------------------- #

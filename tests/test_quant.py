@@ -23,7 +23,7 @@ from repro.core.graph import (
 from repro.core.graph.passes import fuse_epilogue, quantize
 from repro.kernels import ops as kops
 from repro.kernels import qmatmul, ref
-from repro.models.cnn import APP_QUANT_SKIP, APPS, app_masks
+from repro.models.cnn import APP_ACT_SKIP, APP_QUANT_SKIP, APPS, app_masks
 from repro.quant import CalibrationTable, QTensor, calibrate_plan, fake_quant
 
 KEY = jax.random.PRNGKey(0)
@@ -341,9 +341,17 @@ def test_app_quant_backend_parity_and_compression(app):
     ]
     table = calibrate_plan(plan_f32, go.params, batches)
     gq = optimize(
-        g, masks, structures, calibration=table, quant_skip=APP_QUANT_SKIP[app]
+        g, masks, structures, calibration=table, quant_skip=APP_QUANT_SKIP[app],
+        act_quant_skip=APP_ACT_SKIP[app],
     )
     assert any(n.op in ("qlinear", "qconv2d") for n in gq.nodes)
+    if app == "coloring":
+        # the BN-normalized stack holds the parity contract with every conv
+        # at W8A8 -- int8 x int8 contractions end to end
+        assert all(
+            n.attrs.get("scheme") == "w8a8"
+            for n in gq.nodes if n.op == "qconv2d"
+        )
     plan_q = compile_plan(gq, backend="quant")
     x = jax.random.normal(jax.random.fold_in(KEY, 99), shape)
     err = float(jnp.abs(plan_q(gq.params, x) - plan_f32(go.params, x)).max())
