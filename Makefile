@@ -1,13 +1,22 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-fast lint bench bench-smoke deps deps-dev
+.PHONY: test test-cov test-fast lint bench bench-smoke deps deps-dev
+
+# committed coverage floor over the serving + kernel layers (a ratchet:
+# raise it as coverage grows, never lower it to make a PR pass)
+COV_FLOOR := 60
 
 lint:  ## ruff bug-tier rules (config in pyproject.toml); CI runs this
 	ruff check src tests
 
-test:  ## tier-1 verify
+test:  ## tier-1 verify (no plugins needed; works in minimal containers)
 	python -m pytest -x -q
+
+test-cov:  ## CI variant: parallel via pytest-xdist, coverage-gated on serving/ + kernels/
+	python -m pytest -x -q -n auto \
+	    --cov=repro.serving --cov=repro.kernels \
+	    --cov-report=term --cov-fail-under=$(COV_FLOOR)
 
 test-fast:  ## compiler + kernel subset (quick signal while iterating)
 	python -m pytest -x -q tests/test_graph_compiler.py tests/test_execution_plan.py tests/test_kernels.py
@@ -15,9 +24,10 @@ test-fast:  ## compiler + kernel subset (quick signal while iterating)
 bench:
 	python -m benchmarks.run
 
-bench-smoke:  ## tiny-shape benchmark pass (CI-sized, no TPU; writes results/BENCH_fusion_smoke.json)
+bench-smoke:  ## tiny-shape benchmark pass (CI-sized, no TPU; writes results/BENCH_*_smoke.json)
 	python -m benchmarks.kernel_bench --smoke
 	python -m benchmarks.table1_apps --smoke
+	python -m benchmarks.serving_bench --smoke
 
 deps:
 	pip install -r requirements.txt

@@ -30,6 +30,7 @@ node's output array.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -747,8 +748,14 @@ class BatchedPlan:
         #: stats of the most recent __call__ (padding overhead is the serving
         #: cost of fixed-shape compilation; surfaced by PlanServer)
         self.last_stats: Dict[str, int] = {}
+        #: cumulative over every chunk ever executed (all callers, all
+        #: threads) -- the async scheduler reads this; guarded by _lock
+        self.total_stats: Dict[str, int] = {
+            "frames": 0, "batches": 0, "padded_frames": 0,
+        }
+        self._lock = threading.Lock()
 
-    def __call__(self, params: Dict[str, Dict[str, Any]], *inputs):
+    def _validate(self, inputs) -> int:
         if not inputs:
             raise TypeError("batched plan needs at least one input")
         b = inputs[0].shape[0]
@@ -759,29 +766,54 @@ class BatchedPlan:
                 raise ValueError(
                     f"inconsistent leading batch: {x.shape[0]} vs {b}"
                 )
+        return int(b)
+
+    def run_chunk(self, params: Dict[str, Dict[str, Any]], *inputs):
+        """Execute exactly ONE compiled chunk: the leading axis must be at
+        most ``batch_size`` (a short chunk is zero-padded to the compiled
+        shape and the padding sliced off the outputs).  This is the
+        scheduler's entry point -- stats accumulate into ``total_stats``
+        under a lock, so concurrent scheduler threads never corrupt them."""
+        b = self._validate(inputs)
         bs = self.batch_size
-        pad = (-b) % bs
-        chunks = []
-        for i in range(0, b, bs):
-            xs = tuple(x[i : i + bs] for x in inputs)
-            if xs[0].shape[0] < bs:  # tail chunk: pad just this slice
-                short = bs - xs[0].shape[0]
-                xs = tuple(
-                    jnp.concatenate([x, jnp.zeros((short,) + x.shape[1:], x.dtype)])
-                    for x in xs
-                )
-            chunks.append(self._chunk(params, *xs))
+        if b > bs:
+            raise ValueError(
+                f"run_chunk takes at most batch_size={bs} frames, got {b}"
+            )
+        xs = inputs
+        if b < bs:
+            short = bs - b
+            xs = tuple(
+                jnp.concatenate([x, jnp.zeros((short,) + x.shape[1:], x.dtype)])
+                for x in xs
+            )
+        out = self._chunk(params, *xs)
+        with self._lock:
+            self.total_stats["frames"] += b
+            self.total_stats["batches"] += 1
+            self.total_stats["padded_frames"] += bs - b
+        if isinstance(out, tuple):
+            return tuple(o[:b] for o in out)
+        return out[:b]
+
+    def __call__(self, params: Dict[str, Dict[str, Any]], *inputs):
+        b = self._validate(inputs)
+        bs = self.batch_size
+        chunks = [
+            self.run_chunk(params, *(x[i : i + bs] for x in inputs))
+            for i in range(0, b, bs)
+        ]
         self.last_stats = {
             "frames": int(b),
             "batches": len(chunks),
-            "padded_frames": int(pad),
+            "padded_frames": int((-b) % bs),
         }
         if isinstance(chunks[0], tuple):
             return tuple(
-                jnp.concatenate([c[j] for c in chunks])[:b]
+                jnp.concatenate([c[j] for c in chunks])
                 for j in range(len(chunks[0]))
             )
-        return jnp.concatenate(chunks)[:b]
+        return jnp.concatenate(chunks)
 
 
 def compile_plan(

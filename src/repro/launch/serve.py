@@ -10,6 +10,8 @@ Examples (CPU):
       --size 64 --frames 10 --batch-size 4   # throughput mode (PlanServer)
   PYTHONPATH=src python -m repro.launch.serve --graph-app style_transfer \
       --quantize                             # INT8 weights + parity stats
+  PYTHONPATH=src python -m repro.launch.serve --async --frames 8 \
+      --batch-size 4 --flush-after 0.01      # all three apps, one process
 """
 
 from __future__ import annotations
@@ -133,6 +135,92 @@ def _serve_graph_app(args) -> None:
           f"({shape[0]}x{shape[2]}x{shape[3]}, sparsity {args.sparsity})")
 
 
+def _serve_async(args) -> None:
+    """One AsyncPlanServer process hosting every demo app (or just
+    ``--graph-app``): compile each app's plan, start the tick-driven
+    scheduler thread, drive mixed traffic with per-request deadlines, and
+    report throughput, p50/p95 latency, deadline-miss and padding stats --
+    with a per-app parity probe vs direct plan execution."""
+    from ..core.graph import PassContext, PassManager, compile_plan
+    from ..models.cnn import APPS, app_masks
+    from ..serving import AsyncPlanServer
+
+    if args.quantize:
+        raise SystemExit(
+            "--async serves f32 plans only (for INT8 serving use "
+            "--graph-app <app> --quantize); refusing to silently ignore "
+            "--quantize"
+        )
+    apps = [args.graph_app] if args.graph_app else list(APPS)
+    on_tpu = jax.default_backend() == "tpu"
+    backend = "kernel" if on_tpu else "reference"
+    batch_size = args.batch_size or 4
+    rng = np.random.default_rng(args.seed)
+
+    server = AsyncPlanServer(
+        flush_after=args.flush_after, max_queue=args.max_queue,
+        overload=args.overload,
+    )
+    plans, shapes = {}, {}
+    for app in apps:
+        g = APPS[app](jax.random.PRNGKey(args.seed), base=args.base)
+        masks, structures = app_masks(g, app, sparsity=args.sparsity)
+        go = PassManager().run(g, PassContext(masks=masks, structures=structures))
+        plan = compile_plan(go, backend=backend)
+        plans[app] = (plan, go.params)
+        c_in = 1 if app == "coloring" else 3
+        shapes[app] = (c_in, args.size, args.size)
+        server.add_plan(app, plan, go.params, batch_size)
+        print(f"async: {app}: backend={backend} steps={len(plan.steps)} "
+              f"batch_size={batch_size}")
+
+    with server:
+        server.start()
+        # warm each app's chunk compilation before timing; snapshot the
+        # counters after it so the report covers the traffic window only
+        for app in apps:
+            server.submit(app, jnp.zeros(shapes[app], jnp.float32)).result()
+        warm = server.stats
+        n = args.frames * args.batch
+        handles, probes = [], {}
+        t0 = time.time()
+        for i in range(n):
+            app = apps[i % len(apps)]
+            x = jnp.asarray(rng.standard_normal(shapes[app]), jnp.float32)
+            h = server.submit(
+                app, x, priority=i % 2, deadline=args.deadline,
+            )
+            handles.append(h)
+            probes.setdefault(app, (x, h))  # first frame per app: parity probe
+        for h in handles:
+            h.result()
+        dt = time.time() - t0
+        for app, (x, h) in probes.items():
+            plan, params = plans[app]
+            err = float(jnp.max(jnp.abs(jnp.asarray(h.result())
+                                        - jnp.asarray(plan(params, x[None]))[0])))
+            assert err <= 1e-5, (app, err)  # async path == direct execution
+        s = server.stats
+        print(f"async: {len(handles)} requests over {len(apps)} plans in "
+              f"{dt:.3f}s ({len(handles) / dt:.1f} req/s), "
+              f"{s['batches'] - warm['batches']} batches "
+              f"({s['padded_frames'] - warm['padded_frames']} padded frames, "
+              f"{s['deadline_flushes'] - warm['deadline_flushes']} deadline "
+              f"flushes, {s['deadline_misses'] - warm['deadline_misses']} "
+              f"deadline misses, parity ok)")
+        for app in apps:
+            # percentiles over the traffic handles only: the per-plan
+            # reservoirs also hold the warmup request, whose latency is the
+            # jit compile, not serving
+            lats = np.asarray([h.latency for h in handles if h.plan == app])
+            if not lats.size:  # fewer requests than apps: no traffic here
+                print(f"async: {app}: no traffic")
+                continue
+            print(f"async: {app}: p50={np.percentile(lats, 50) * 1e3:.2f}ms "
+                  f"p95={np.percentile(lats, 95) * 1e3:.2f}ms "
+                  f"over {lats.size} requests")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2.5-3b")
@@ -154,6 +242,21 @@ def main() -> None:
     ap.add_argument("--batch-size", type=int, default=None,
                     help="graph-app throughput mode: serve frames*batch single "
                          "frames through plan.batched(batch_size) (PlanServer)")
+    ap.add_argument("--async", dest="async_serve", action="store_true",
+                    help="continuous-batching mode: one AsyncPlanServer hosts "
+                         "every demo app (or just --graph-app), a background "
+                         "scheduler forms macro-batches from the admission "
+                         "queues, per-request latency + deadline stats")
+    ap.add_argument("--flush-after", type=float, default=0.02,
+                    help="async: partial-batch release deadline (seconds the "
+                         "oldest queued request may wait for batch fill)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="async: per-request latency budget in seconds "
+                         "(late completions count as deadline misses)")
+    ap.add_argument("--max-queue", type=int, default=1024,
+                    help="async: bounded admission queue per plan")
+    ap.add_argument("--overload", choices=["reject", "shed"], default="reject",
+                    help="async: backpressure policy when a queue is full")
     ap.add_argument("--quantize", action="store_true",
                     help="graph-app: calibrate + quantize the plan to INT8 "
                          "weights (backend='quant' on TPU) and report parity "
@@ -162,6 +265,9 @@ def main() -> None:
                     help="sample batches for activation calibration")
     args = ap.parse_args()
 
+    if args.async_serve:
+        _serve_async(args)
+        return
     if args.graph_app:
         _serve_graph_app(args)
         return

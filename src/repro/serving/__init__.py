@@ -1,1 +1,13 @@
-from .engine import Engine, GenerationResult, Request, RequestScheduler
+from .engine import Engine, GenerationResult, PlanServer, Request, RequestScheduler
+from .scheduler import AsyncPlanServer, QueueFullError, RequestHandle
+
+__all__ = [
+    "AsyncPlanServer",
+    "Engine",
+    "GenerationResult",
+    "PlanServer",
+    "QueueFullError",
+    "Request",
+    "RequestHandle",
+    "RequestScheduler",
+]

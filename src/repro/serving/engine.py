@@ -15,7 +15,12 @@ layer (``exec_mode='bsr'|'colpack'``) -- the engine is agnostic.
 Plan serving: :class:`PlanServer` runs the vision apps' execution plans
 (``core/graph/executor.py``) at throughput -- frames queue up and execute in
 fixed-size compiled batches via :meth:`ExecutionPlan.batched`, padding only
-the tail batch.
+the tail batch.  Its async successor lives in ``serving/scheduler.py``:
+:class:`~repro.serving.scheduler.AsyncPlanServer` decouples admission from
+execution (per-request handles, tick-driven continuous batching, multi-plan
+routing, bounded queues with backpressure); v1 stays as the synchronous
+building block and the deterministic baseline it is differential-tested
+against.
 """
 
 from __future__ import annotations

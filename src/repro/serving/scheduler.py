@@ -1,0 +1,545 @@
+"""PlanServer v2: an async continuous-batching engine over execution plans.
+
+:class:`PlanServer` (v1, ``serving/engine.py``) blocks on batch fill: frames
+queue up and nothing runs until the caller flushes.  This module decouples
+admission from execution the way a real serving frontend must:
+
+* :meth:`AsyncPlanServer.submit` returns a :class:`RequestHandle`
+  (future-like) immediately; the caller blocks on ``handle.result()`` only
+  when it actually needs the output.
+* a tick-driven scheduler forms macro-batches *continuously* from the
+  admission queues -- a batch launches as soon as it is full, or as soon as
+  latency pressure (the engine-level ``flush_after`` or a request-level
+  ``deadline``) says a partial batch beats waiting.  Ticks come from a
+  background thread (:meth:`start`) or from explicit synchronous
+  :meth:`step` calls, which is what deterministic tests drive (the clock is
+  injectable for the same reason).
+* one server hosts **many plans** (the three demo apps share a process):
+  each plan gets its own admission queue + :class:`BatchedPlan`, and each
+  tick round-robins over the ready queues so a flood on one plan cannot
+  starve the others.
+* admission is **bounded**: a full queue either rejects the new request
+  (``overload="reject"``, raises :class:`QueueFullError`) or sheds
+  whichever of queue + {incoming} would be scheduled last -- lowest
+  priority class, newest arrival (``overload="shed"``: an evicted queued
+  handle fails with :class:`QueueFullError`; an incoming request that is
+  itself the victim raises at ``submit``, so it can never displace a
+  higher-priority queued request); both are counted, so overload is
+  visible in the stats instead of an unbounded memory ramp.
+
+Request lifecycle::
+
+    submit() -> queued -> [scheduler tick picks it] -> executing -> done
+        |                                                  handle.result()
+        +-> rejected/shed (handle raises QueueFullError)
+
+Scheduling policy per tick, per plan (highest first within a plan):
+
+1. full batch ready (``len(queue) >= batch_size``);
+2. latency release: oldest queued request older than ``flush_after``, or
+   any queued request's absolute deadline within ``deadline_margin``;
+3. otherwise the queue waits (batch fill beats padding overhead).
+
+Within a plan, requests are picked by ``(-priority, arrival)`` -- a higher
+``priority`` class jumps the queue but never preempts a running batch.
+Completion latency and per-request deadline misses are recorded per plan;
+:meth:`latency_stats` reduces them to p50/p95/p99.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "AsyncPlanServer",
+    "QueueFullError",
+    "RequestHandle",
+]
+
+
+class QueueFullError(RuntimeError):
+    """Raised by ``submit`` under the reject policy; stored on the shed
+    handle under the shed policy."""
+
+
+@dataclasses.dataclass(eq=False)
+class RequestHandle:
+    """Per-request future.  ``result()`` blocks until the scheduler (or a
+    synchronous :meth:`AsyncPlanServer.step`) completes the request, then
+    returns the plan output for this single frame (batch dim stripped) or
+    raises the stored error (shed under backpressure, execution failure)."""
+
+    rid: int
+    plan: str
+    priority: int = 0
+    #: absolute deadline (engine clock); None = best effort
+    deadline_at: Optional[float] = None
+    submitted_at: float = 0.0
+    completed_at: Optional[float] = None
+    deadline_missed: bool = False
+
+    def __post_init__(self):
+        self._event = threading.Event()
+        self._value: Any = None
+        self._error: Optional[BaseException] = None
+        self._inputs: Optional[Tuple[Any, ...]] = None  # cleared at dispatch
+
+    # -- caller side --------------------------------------------------------- #
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"request {self.rid} ({self.plan}) not done within {timeout}s"
+            )
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+    def exception(self) -> Optional[BaseException]:
+        return self._error if self._event.is_set() else None
+
+    @property
+    def latency(self) -> Optional[float]:
+        """Submit-to-completion seconds (None while in flight)."""
+        if self.completed_at is None:
+            return None
+        return self.completed_at - self.submitted_at
+
+    # -- scheduler side ------------------------------------------------------ #
+    def _resolve(self, value, now: float) -> None:
+        self.completed_at = now
+        self.deadline_missed = (
+            self.deadline_at is not None and now > self.deadline_at
+        )
+        self._value = value
+        self._event.set()
+
+    def _fail(self, err: BaseException, now: float) -> None:
+        self.completed_at = now
+        self._error = err
+        self._event.set()
+
+
+#: bounded completion-side buffers: a server nobody drains must plateau,
+#: not ramp -- the admission queue bounds the inflow, these bound the wake
+RETAINED_COMPLETIONS = 4096
+LATENCY_RESERVOIR = 4096
+
+
+@dataclasses.dataclass(eq=False)
+class _PlanEntry:
+    name: str
+    plan: Any
+    params: Any
+    batched: Any  # BatchedPlan
+    queue: List[RequestHandle] = dataclasses.field(default_factory=list)
+    seq: int = 0  # FIFO tiebreak within a priority class
+    latencies: Deque[float] = dataclasses.field(
+        default_factory=lambda: deque(maxlen=LATENCY_RESERVOIR)
+    )
+    stats: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {
+            "submitted": 0, "completed": 0, "batches": 0, "padded_frames": 0,
+            "rejected": 0, "shed": 0, "deadline_flushes": 0,
+            "deadline_misses": 0,
+        }
+    )
+
+
+class AsyncPlanServer:
+    """Async continuous-batching server over one or more compiled plans.
+
+    Deterministic use (tests; no thread)::
+
+        server = AsyncPlanServer(clock=fake_clock)
+        server.add_plan("style", plan, params, batch_size=4)
+        h = server.submit("style", frame)
+        server.step()          # one scheduler tick
+        y = h.result(0)
+
+    Production use::
+
+        with AsyncPlanServer(flush_after=0.01) as server:
+            server.add_plan(...); server.start()
+            handles = [server.submit(app, f) for app, f in traffic]
+            outs = [h.result() for h in handles]
+    """
+
+    def __init__(
+        self,
+        *,
+        flush_after: Optional[float] = None,
+        deadline_margin: float = 0.0,
+        max_queue: int = 1024,
+        overload: str = "reject",
+        tick_interval: float = 0.002,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        if overload not in ("reject", "shed"):
+            raise ValueError(f"overload policy {overload!r}: want reject|shed")
+        if max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        self.flush_after = flush_after
+        self.deadline_margin = deadline_margin
+        self.max_queue = max_queue
+        self.overload = overload
+        self.tick_interval = tick_interval
+        self.closed = False
+        self._clock = clock
+        self._plans: Dict[str, _PlanEntry] = {}
+        self._rr = 0  # round-robin start index over plan names
+        self._rid = 0
+        self._lock = threading.RLock()
+        self._work = threading.Event()  # submit -> wake the scheduler thread
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._inflight = 0
+        self._idle = threading.Condition(self._lock)
+        #: completed handles not yet handed over via drain_completed(),
+        #: bounded: only the most recent RETAINED_COMPLETIONS are kept, so a
+        #: server whose caller works purely through handles (never drains)
+        #: plateaus instead of retaining every output array forever
+        self._completed: Deque[RequestHandle] = deque(maxlen=RETAINED_COMPLETIONS)
+
+    # -- configuration ------------------------------------------------------- #
+    def add_plan(
+        self, name: str, plan, params, batch_size: int, *, via_vmap: bool = False
+    ) -> None:
+        """Register a plan under ``name`` with its own admission queue and
+        fixed compiled batch size.  All registered plans share the scheduler
+        (and its fairness rotation)."""
+        with self._lock:
+            if self.closed:
+                raise RuntimeError("AsyncPlanServer is closed")
+            if name in self._plans:
+                raise ValueError(f"plan {name!r} already registered")
+            self._plans[name] = _PlanEntry(
+                name=name, plan=plan, params=params,
+                batched=plan.batched(batch_size, via_vmap=via_vmap),
+            )
+
+    @property
+    def plans(self) -> Tuple[str, ...]:
+        return tuple(self._plans)
+
+    # -- admission ----------------------------------------------------------- #
+    def submit(
+        self,
+        plan_name: str,
+        *frame_inputs,
+        priority: int = 0,
+        deadline: Optional[float] = None,
+    ) -> RequestHandle:
+        """Queue one frame for ``plan_name`` (one array per graph input, no
+        batch dim) and return its :class:`RequestHandle` immediately.
+        ``deadline`` is a per-request latency budget in seconds (relative to
+        now); a near deadline releases a partial batch early, and a late
+        completion is counted in ``deadline_misses``.  A full queue follows
+        the overload policy: ``reject`` raises :class:`QueueFullError`;
+        ``shed`` drops whichever of queue + {this request} would be
+        scheduled last (lowest priority class, newest arrival) -- an
+        evicted queued handle fails with :class:`QueueFullError`, while an
+        incoming request that is itself the victim raises here (at equal
+        priority the newcomer is always the victim; only a strictly
+        higher-priority submit evicts queued work)."""
+        with self._lock:
+            if self.closed:
+                raise RuntimeError("AsyncPlanServer is closed; no further requests")
+            entry = self._plans.get(plan_name)
+            if entry is None:
+                raise KeyError(
+                    f"unknown plan {plan_name!r}; registered: {sorted(self._plans)}"
+                )
+            n_in = len(entry.plan.graph.inputs)
+            if len(frame_inputs) != n_in:
+                raise TypeError(
+                    f"plan {plan_name!r} expects {n_in} inputs per frame, "
+                    f"got {len(frame_inputs)}"
+                )
+            now = self._clock()
+            shed: Optional[RequestHandle] = None
+            if len(entry.queue) >= self.max_queue:
+                if self.overload == "reject":
+                    entry.stats["rejected"] += 1
+                    raise QueueFullError(
+                        f"plan {plan_name!r} queue full "
+                        f"({len(entry.queue)}/{self.max_queue}); request rejected"
+                    )
+                # shed: evict whichever of queue + {incoming} would be
+                # scheduled *last* (max (-priority, seq) = lowest class,
+                # newest arrival).  The incoming request competes too: at
+                # equal-or-lower priority it IS scheduled last, and turning
+                # it away must never evict a higher-priority queued request.
+                victim = max(entry.queue, key=lambda h: (-h.priority, h._seq))
+                if (-priority, entry.seq) >= (-victim.priority, victim._seq):
+                    entry.stats["shed"] += 1
+                    raise QueueFullError(
+                        f"plan {plan_name!r} queue full "
+                        f"({len(entry.queue)}/{self.max_queue}) of equal-or-"
+                        f"higher-priority requests; new request shed"
+                    )
+                entry.queue.remove(victim)
+                victim._inputs = None  # evicted: release its frame arrays
+                entry.stats["shed"] += 1
+                shed = victim
+            handle = RequestHandle(
+                rid=self._rid, plan=plan_name, priority=priority,
+                deadline_at=None if deadline is None else now + deadline,
+                submitted_at=now,
+            )
+            self._rid += 1
+            handle._inputs = tuple(jnp.asarray(f) for f in frame_inputs)
+            handle._seq = entry.seq
+            entry.seq += 1
+            entry.queue.append(handle)
+            entry.stats["submitted"] += 1
+        if shed is not None:
+            shed._fail(
+                QueueFullError(
+                    f"request {shed.rid} shed from full {plan_name!r} queue"
+                ),
+                now,
+            )
+        self._work.set()
+        return handle
+
+    def pending(self, plan_name: Optional[str] = None) -> int:
+        with self._lock:
+            if plan_name is not None:
+                return len(self._plans[plan_name].queue)
+            return sum(len(e.queue) for e in self._plans.values())
+
+    # -- scheduling ---------------------------------------------------------- #
+    def _ready(self, entry: _PlanEntry, now: float, force: bool) -> Optional[str]:
+        """Why this queue should release a batch now (None = keep filling)."""
+        if not entry.queue:
+            return None
+        if len(entry.queue) >= entry.batched.batch_size:
+            return "full"
+        if force:
+            return "force"
+        if self.flush_after is not None:
+            oldest = min(h.submitted_at for h in entry.queue)
+            if now - oldest >= self.flush_after:
+                return "flush_after"
+        margin = self.deadline_margin
+        if any(
+            h.deadline_at is not None and h.deadline_at - now <= margin
+            for h in entry.queue
+        ):
+            return "deadline"
+        return None
+
+    def _take_batch(self, entry: _PlanEntry, now: float) -> List[RequestHandle]:
+        """Pop up to batch_size requests by (due-deadline, -priority,
+        arrival).  Deadline urgency outranks priority class for batch
+        MEMBERSHIP (not just release timing): under sustained full-batch
+        pressure from a higher priority class, a due request must join the
+        released batch rather than starve while its deadline keeps
+        triggering releases that exclude it."""
+        margin = self.deadline_margin
+
+        def key(h: RequestHandle):
+            due = h.deadline_at is not None and h.deadline_at - now <= margin
+            return (not due, -h.priority, h._seq)
+
+        order = sorted(entry.queue, key=key)
+        batch = order[: entry.batched.batch_size]
+        taken = set(id(h) for h in batch)
+        entry.queue = [h for h in entry.queue if id(h) not in taken]
+        return batch
+
+    def _execute(self, entry: _PlanEntry, batch: List[RequestHandle]) -> None:
+        """Run one macro-batch through the plan's compiled chunk and resolve
+        every handle.  Called with the admission lock *released* so submits
+        keep landing while the device works."""
+        try:
+            # stacking stays inside the guard: a wrong-shape frame must fail
+            # its batch's handles, never kill the scheduler thread
+            inputs = tuple(
+                jnp.stack([h._inputs[i] for h in batch])
+                for i in range(len(batch[0]._inputs))
+            )
+            out = entry.batched.run_chunk(entry.params, *inputs)
+            err = None
+        except Exception as e:  # resolve handles; callers see the error
+            out, err = None, e
+        now = self._clock()
+        with self._lock:
+            for i, h in enumerate(batch):
+                h._inputs = None  # executed: release the frame arrays
+                if err is not None:
+                    h._fail(err, now)
+                else:
+                    h._resolve(
+                        tuple(o[i] for o in out) if isinstance(out, tuple)
+                        else out[i],
+                        now,
+                    )
+                if h.deadline_missed:
+                    entry.stats["deadline_misses"] += 1
+                entry.stats["completed"] += 1
+                if h.latency is not None:
+                    entry.latencies.append(h.latency)
+                self._completed.append(h)
+            entry.stats["batches"] += 1
+            entry.stats["padded_frames"] += entry.batched.batch_size - len(batch)
+            self._inflight -= 1
+            self._idle.notify_all()
+
+    def step(self, *, force: bool = False) -> int:
+        """One synchronous scheduler tick: visit every plan queue in fair
+        rotation and execute at most ONE macro-batch per ready queue.
+        Returns the number of batches executed.  ``force=True`` releases
+        every non-empty queue regardless of fill or deadlines (the drain
+        path of :meth:`close`).  Deterministic tests call this directly with
+        a clock injected at construction (there is deliberately no ``now``
+        parameter: submit/complete timestamps come from that same clock, and
+        a second time source here would silently skew flush_after/deadline
+        accounting against them); the background thread calls it in a
+        loop."""
+        executed = 0
+        with self._lock:
+            names = list(self._plans)
+            if not names:
+                return 0
+            rotation = names[self._rr % len(names):] + names[: self._rr % len(names)]
+            self._rr += 1
+        for name in rotation:
+            with self._lock:
+                entry = self._plans[name]
+                t = self._clock()
+                reason = self._ready(entry, t, force)
+                if reason is None:
+                    continue
+                batch = self._take_batch(entry, t)
+                if reason in ("flush_after", "deadline"):
+                    entry.stats["deadline_flushes"] += 1
+                self._inflight += 1
+            self._execute(entry, batch)
+            executed += 1
+        return executed
+
+    # -- background thread --------------------------------------------------- #
+    def start(self) -> "AsyncPlanServer":
+        """Launch the scheduler thread (idempotent).  It ticks whenever work
+        arrives and at least every ``tick_interval`` seconds, so deadline
+        releases fire even when no submits are landing."""
+        with self._lock:
+            if self.closed:
+                raise RuntimeError("AsyncPlanServer is closed")
+            if self._thread is not None:
+                return self
+            self._stop.clear()
+            self._thread = threading.Thread(
+                target=self._loop, name="AsyncPlanServer", daemon=True
+            )
+            self._thread.start()
+        return self
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            if self.step() == 0:
+                self._work.wait(self.tick_interval)
+                self._work.clear()
+
+    # -- completion / teardown ----------------------------------------------- #
+    def drain_completed(self) -> List[RequestHandle]:
+        """Hand over (and clear) the handles completed since the last drain,
+        in completion order -- the bulk-consumer mirror of per-handle
+        ``result()`` (the v1 ``PlanServer.drain_completed`` contract lifted
+        to handles).  Drain regularly if completion order matters: the
+        buffer keeps only the most recent ``RETAINED_COMPLETIONS`` handles
+        (callers working purely through handles can ignore it -- results
+        live on the handles either way, and the bound stops an undrained
+        server from retaining every output array for its lifetime)."""
+        with self._lock:
+            done = list(self._completed)
+            self._completed.clear()
+        return done
+
+    def close(self) -> int:
+        """Stop the scheduler thread, drain every queue (partial batches
+        force-flush -- queued requests are never dropped), and refuse
+        further submits.  In-flight batches complete before close returns,
+        so every handle ever accepted is resolved.  Returns the number of
+        requests drained by close itself.  Idempotent; also runs on
+        ``with`` exit."""
+        with self._lock:
+            if self.closed:
+                return 0
+            self.closed = True  # admission off first: the drain is bounded
+            thread = self._thread
+        if thread is not None:
+            self._stop.set()
+            self._work.set()
+            thread.join()
+            self._thread = None
+        drained = 0
+        while True:  # synchronous force-drain of whatever is still queued
+            with self._lock:
+                queued = sum(len(e.queue) for e in self._plans.values())
+            if queued == 0:
+                break
+            drained += queued
+            while self.step(force=True):
+                pass
+        with self._lock:  # wait out any batch the thread left in flight
+            while self._inflight:
+                self._idle.wait()
+        return drained
+
+    def __enter__(self) -> "AsyncPlanServer":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    # -- stats ---------------------------------------------------------------- #
+    @property
+    def stats(self) -> Dict[str, Any]:
+        """Aggregate counters plus a ``per_plan`` breakdown (copies)."""
+        with self._lock:
+            per_plan = {n: dict(e.stats) for n, e in self._plans.items()}
+        total: Dict[str, int] = {}
+        for s in per_plan.values():
+            for k, v in s.items():
+                total[k] = total.get(k, 0) + v
+        total["per_plan"] = per_plan
+        return total
+
+    def latency_stats(
+        self, plan_name: Optional[str] = None
+    ) -> Dict[str, float]:
+        """p50/p95/p99/mean completion latency (seconds) over the completed
+        requests of one plan (or all plans)."""
+        with self._lock:
+            if plan_name is not None:
+                lats: Sequence[float] = list(self._plans[plan_name].latencies)
+            else:
+                lats = [
+                    v for e in self._plans.values() for v in e.latencies
+                ]
+        if not lats:
+            return {"count": 0, "p50": 0.0, "p95": 0.0, "p99": 0.0, "mean": 0.0}
+        arr = np.asarray(lats)
+        return {
+            "count": int(arr.size),
+            "p50": float(np.percentile(arr, 50)),
+            "p95": float(np.percentile(arr, 95)),
+            "p99": float(np.percentile(arr, 99)),
+            "mean": float(arr.mean()),
+        }

@@ -4,6 +4,8 @@ device (the dry-run sets its own 512-device flag in a separate process)."""
 import jax
 import pytest
 
+from repro.kernels import ops as kops
+
 
 @pytest.fixture(scope="session")
 def rng():
@@ -12,3 +14,51 @@ def rng():
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+
+
+# --------------------------------------------------------------------------- #
+# global-state isolation                                                       #
+# --------------------------------------------------------------------------- #
+#
+# Two pieces of process-level mutable state leak between tests if left alone:
+# the conv2d fallback counters (ops._CONV_FALLBACKS) and the block-size
+# TuningCache singleton (entries, enabled flag, sweep counter, save path).
+# The autouse fixture below snapshots both around EVERY test so no test can
+# observe another's mutations -- the order-independence regression lives in
+# tests/test_state_isolation.py, which drives these helpers directly.
+
+
+def snapshot_global_state():
+    """Capture the process-level kernel state a test could mutate."""
+    cache = kops.tuning_cache()
+    return {
+        "conv_fallbacks": kops.conv_fallback_counts(),  # already a copy
+        "tune_entries": dict(cache.entries),
+        "tune_enabled": cache.enabled,
+        "tune_sweeps": cache.sweeps,
+        "tune_path": cache.path,
+    }
+
+
+def restore_global_state(snap) -> None:
+    """Reset the process-level kernel state to ``snap`` (exact contents, not
+    a merge: entries/counters added since the snapshot are discarded)."""
+    kops.reset_conv_fallbacks()
+    kops._CONV_FALLBACKS.update(snap["conv_fallbacks"])
+    cache = kops.tuning_cache()
+    cache.entries = dict(snap["tune_entries"])
+    cache.enabled = snap["tune_enabled"]
+    cache.sweeps = snap["tune_sweeps"]
+    cache.path = snap["tune_path"]
+
+
+@pytest.fixture(autouse=True)
+def _isolate_global_state():
+    """Every test runs against the kernel state it started with: fallback
+    counters and the process TuningCache are restored on exit, so test
+    outcomes cannot depend on execution order (or on -n auto scheduling)."""
+    snap = snapshot_global_state()
+    try:
+        yield
+    finally:
+        restore_global_state(snap)

@@ -1,0 +1,417 @@
+"""PlanServer v2 (`serving/scheduler.py`): the async continuous-batching
+engine.  Deterministic coverage drives the synchronous :meth:`step` tick
+with an injected clock; the threaded tests exercise the background
+scheduler the way production would.  Edge cases from the issue checklist:
+deadline with an empty queue, close() under in-flight async requests,
+backpressure rejection/shedding, multi-plan fairness under skewed traffic,
+and drain_completed on the async path."""
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import compile_plan, optimize
+from repro.models.cnn import APPS, app_masks
+from repro.serving import AsyncPlanServer, QueueFullError
+
+KEY = jax.random.PRNGKey(0)
+FRAME = (3, 8, 8)  # super_resolution single-frame shape at base=8
+
+
+def _plan(app="super_resolution"):
+    g = APPS[app](KEY, base=8)
+    masks, structures = app_masks(g, app, sparsity=0.5)
+    go = optimize(g, masks, structures)
+    return go, compile_plan(go, backend="reference")
+
+
+@pytest.fixture(scope="module")
+def sr():
+    return _plan()
+
+
+@pytest.fixture(scope="module")
+def coloring():
+    return _plan("coloring")
+
+
+def _server(sr, clock=None, **kw):
+    go, plan = sr
+    server = AsyncPlanServer(clock=clock or (lambda: 0.0), **kw)
+    server.add_plan("sr", plan, go.params, batch_size=4)
+    return server
+
+
+def _frames(n, shape=FRAME):
+    return [jax.random.normal(jax.random.PRNGKey(i), shape) for i in range(n)]
+
+
+# --------------------------------------------------------------------------- #
+# deterministic scheduling (synchronous step, injected clock)                  #
+# --------------------------------------------------------------------------- #
+
+
+def test_submit_returns_pending_handle_and_full_batch_executes(sr):
+    go, plan = sr
+    server = _server(sr)
+    frames = _frames(4)
+    handles = [server.submit("sr", f) for f in frames]
+    assert all(not h.done() for h in handles)  # admission != execution
+    assert server.pending("sr") == 4
+    assert server.step() == 1  # full batch: releases without any deadline
+    assert server.pending() == 0 and all(h.done() for h in handles)
+    want = plan(go.params, jnp.stack(frames))
+    for i, h in enumerate(handles):
+        np.testing.assert_allclose(
+            np.asarray(h.result(0)), np.asarray(want)[i], rtol=1e-5, atol=1e-5
+        )
+    assert server.stats["padded_frames"] == 0
+    server.close()
+
+
+def test_partial_batch_waits_until_flush_after(sr):
+    now = [0.0]
+    server = _server(sr, clock=lambda: now[0], flush_after=1.0)
+    h = server.submit("sr", _frames(1)[0])
+    assert server.step() == 0 and not h.done()  # batch fill beats padding
+    now[0] = 0.99
+    assert server.step() == 0
+    now[0] = 1.0  # oldest request has now waited out the release deadline
+    assert server.step() == 1 and h.done()
+    assert server.stats["deadline_flushes"] == 1
+    assert server.stats["padded_frames"] == 3
+    server.close()
+
+
+def test_deadline_with_empty_queue_is_noop(sr):
+    """An expired engine deadline with nothing queued must not flush, count,
+    or crash -- on the sync path and on a ticking scheduler thread."""
+    now = [100.0]  # far past any deadline from t=0
+    server = _server(sr, clock=lambda: now[0], flush_after=0.5)
+    assert server.step() == 0
+    assert server.step(force=True) == 0
+    assert server.stats["deadline_flushes"] == 0
+    assert server.stats["batches"] == 0
+    server.start()  # idle ticks over an empty queue
+    server.close()
+    assert server.stats["batches"] == 0
+
+
+def test_per_request_deadline_releases_partial_batch_and_counts_miss(sr):
+    now = [0.0]
+    server = _server(sr, clock=lambda: now[0])  # NO engine-level flush_after
+    h_slack = server.submit("sr", _frames(1)[0])  # best-effort: never releases
+    assert server.step() == 0
+    h = server.submit("sr", _frames(2)[1], deadline=0.5)
+    assert server.step() == 0  # deadline not yet reached
+    now[0] = 0.6  # past the request's budget: release NOW, already late
+    assert server.step() == 1
+    assert h.done() and h_slack.done()  # same macro-batch
+    assert h.deadline_missed and h.latency == pytest.approx(0.6)
+    assert not h_slack.deadline_missed  # best-effort requests never miss
+    assert server.stats["deadline_misses"] == 1
+    assert server.stats["deadline_flushes"] == 1
+    server.close()
+
+
+def test_priority_classes_jump_the_queue(sr):
+    go, plan = sr
+    server = _server(sr)
+    lo = [server.submit("sr", f, priority=0) for f in _frames(4)]
+    hi = [server.submit("sr", f, priority=1) for f in _frames(6)[4:]]
+    assert server.step() == 1  # one full batch released
+    # both high-priority requests ran in the first batch, with the two
+    # oldest low-priority requests filling the remaining slots
+    assert all(h.done() for h in hi)
+    assert [h.done() for h in lo] == [True, True, False, False]
+    assert server.step(force=True) == 1  # drain the rest
+    assert all(h.done() for h in lo)
+    server.close()
+
+
+def test_submit_validates_plan_name_and_arity(sr):
+    server = _server(sr)
+    with pytest.raises(KeyError, match="unknown plan"):
+        server.submit("nope", _frames(1)[0])
+    with pytest.raises(TypeError, match="inputs per frame"):
+        server.submit("sr", _frames(1)[0], _frames(1)[0])
+    with pytest.raises(ValueError, match="already registered"):
+        server.add_plan("sr", sr[1], sr[0].params, 4)
+    server.close()
+
+
+# --------------------------------------------------------------------------- #
+# backpressure                                                                 #
+# --------------------------------------------------------------------------- #
+
+
+def test_backpressure_reject_policy(sr):
+    server = _server(sr, max_queue=2, overload="reject")
+    h0 = server.submit("sr", _frames(1)[0])
+    server.submit("sr", _frames(2)[1])
+    with pytest.raises(QueueFullError, match="queue full"):
+        server.submit("sr", _frames(3)[2])
+    assert server.stats["rejected"] == 1
+    assert server.pending("sr") == 2  # the queue itself is untouched
+    assert not h0.done()
+    server.close()
+    assert h0.done()  # close drained the queued ones
+
+
+def test_backpressure_shed_policy_evicts_scheduled_last(sr):
+    """The shed victim is whichever of queue + {incoming} would be
+    scheduled LAST (lowest priority class, newest arrival): at equal
+    priority the newcomer itself is turned away, only a strictly
+    higher-priority submit evicts queued work, and higher-priority queued
+    requests are untouchable."""
+    server = _server(sr, max_queue=2, overload="shed")
+    h_hi = server.submit("sr", _frames(1)[0], priority=1)
+    h_a = server.submit("sr", _frames(2)[1], priority=0)
+    with pytest.raises(QueueFullError, match="shed"):  # equal prio: newcomer loses
+        server.submit("sr", _frames(3)[2], priority=0)
+    assert not h_a.done()  # queued work untouched by the failed newcomer
+    h_b = server.submit("sr", _frames(4)[3], priority=2)  # evicts h_a
+    assert h_a.done() and not h_b.done()
+    assert h_a._inputs is None  # eviction releases the frame arrays
+    with pytest.raises(QueueFullError, match="shed"):
+        h_a.result(0)
+    assert server.stats["shed"] == 2 and server.stats["rejected"] == 0
+    server.close()
+    assert h_hi.done() and h_b.done()
+    assert h_hi.exception() is None and h_b.exception() is None
+
+
+def test_backpressure_shed_never_inverts_priority(sr):
+    """A full queue of high-priority requests must turn a low-priority
+    newcomer away rather than evict any of them."""
+    server = _server(sr, max_queue=2, overload="shed")
+    hi = [server.submit("sr", f, priority=5) for f in _frames(2)]
+    with pytest.raises(QueueFullError, match="shed"):
+        server.submit("sr", _frames(3)[2], priority=0)
+    assert not any(h.done() for h in hi)  # nothing evicted
+    assert server.stats["shed"] == 1
+    server.close()
+    assert all(h.exception() is None for h in hi)
+
+
+def test_due_deadline_wins_batch_membership_over_priority(sr):
+    """Deadline urgency outranks priority class for batch MEMBERSHIP: under
+    sustained full-batch pressure from a higher priority class, a due
+    low-priority request joins the released batch instead of starving
+    while its deadline keeps triggering releases that exclude it."""
+    now = [0.0]
+    server = _server(sr, clock=lambda: now[0])
+    h_low = server.submit("sr", _frames(1)[0], priority=0, deadline=0.5)
+    hi = [server.submit("sr", f, priority=1) for f in _frames(7)[1:]]
+    now[0] = 0.6  # h_low is due; the queue is also over batch_size
+    assert server.step() == 1
+    assert h_low.done()  # in the batch, displacing one high-priority slot
+    assert sum(h.done() for h in hi) == 3
+    server.close()
+
+
+# --------------------------------------------------------------------------- #
+# multi-plan routing + fairness                                                #
+# --------------------------------------------------------------------------- #
+
+
+def test_multi_plan_routing_parity(sr, coloring):
+    go_s, plan_s = sr
+    go_c, plan_c = coloring
+    server = AsyncPlanServer(clock=lambda: 0.0)
+    server.add_plan("sr", plan_s, go_s.params, batch_size=2)
+    server.add_plan("coloring", plan_c, go_c.params, batch_size=2)
+    assert server.plans == ("sr", "coloring")
+    fs = _frames(2)
+    fc = _frames(2, (1, 16, 16))
+    hs = [server.submit("sr", f) for f in fs]
+    hc = [server.submit("coloring", f) for f in fc]
+    assert server.step() == 2  # both full queues release in one tick
+    want_s = plan_s(go_s.params, jnp.stack(fs))
+    want_c = plan_c(go_c.params, jnp.stack(fc))
+    for i, h in enumerate(hs):
+        np.testing.assert_allclose(
+            np.asarray(h.result(0)), np.asarray(want_s)[i], rtol=1e-5, atol=1e-5
+        )
+    for i, h in enumerate(hc):
+        np.testing.assert_allclose(
+            np.asarray(h.result(0)), np.asarray(want_c)[i], rtol=1e-5, atol=1e-5
+        )
+    per_plan = server.stats["per_plan"]
+    assert per_plan["sr"]["completed"] == 2
+    assert per_plan["coloring"]["completed"] == 2
+    server.close()
+
+
+def test_fairness_under_skewed_traffic(sr, coloring):
+    """A flood on one plan must not starve the other: round-robin gives the
+    light plan a batch slot every tick, so its lone full batch completes
+    within the first two ticks regardless of the heavy backlog."""
+    go_s, plan_s = sr
+    go_c, plan_c = coloring
+    server = AsyncPlanServer(clock=lambda: 0.0)
+    server.add_plan("heavy", plan_s, go_s.params, batch_size=2)
+    server.add_plan("light", plan_c, go_c.params, batch_size=2)
+    heavy = [server.submit("heavy", f) for f in _frames(20)]
+    light = [server.submit("light", f) for f in _frames(2, (1, 16, 16))]
+    ticks = 0
+    while not all(h.done() for h in light):
+        assert server.step() >= 1
+        ticks += 1
+    assert ticks <= 2  # not behind the 10-batch heavy backlog
+    assert sum(h.done() for h in heavy) <= 2 * server._plans["heavy"].batched.batch_size
+    server.close()
+    assert all(h.done() for h in heavy)
+
+
+# --------------------------------------------------------------------------- #
+# drain_completed on the async path                                            #
+# --------------------------------------------------------------------------- #
+
+
+def test_drain_completed_hands_over_in_completion_order_once(sr):
+    server = _server(sr)
+    assert server.drain_completed() == []  # nothing completed yet
+    h1 = [server.submit("sr", f) for f in _frames(4)]
+    server.step()
+    h2 = [server.submit("sr", f) for f in _frames(4)]
+    server.step()
+    done = server.drain_completed()
+    assert done == h1 + h2  # completion order, batch by batch
+    assert server.drain_completed() == []  # drained exactly once
+    server.submit("sr", _frames(1)[0])
+    server.close()
+    assert len(server.drain_completed()) == 1  # close-drained request lands too
+    server.close()  # idempotent
+
+
+def test_drain_completed_with_background_thread(sr):
+    server = _server(sr, clock=time.monotonic, flush_after=0.005, tick_interval=0.001)
+    server.start()
+    handles = [server.submit("sr", f) for f in _frames(6)]
+    for h in handles:
+        h.result(30.0)
+    drained = server.drain_completed()
+    assert sorted(h.rid for h in drained) == [h.rid for h in handles]
+    server.close()
+    assert server.drain_completed() == []
+
+
+def test_bad_frame_fails_its_batch_not_the_scheduler(sr):
+    """A wrong-shape frame must surface on the handles of its batch (the
+    stack/execute error is stored), and the server must keep serving."""
+    server = _server(sr)
+    h_bad = server.submit("sr", jnp.zeros((3, 4, 4)))  # wrong spatial dims
+    h_ok = server.submit("sr", _frames(1)[0])
+    assert server.step(force=True) == 1
+    assert h_bad.done() and h_ok.done()
+    assert h_bad.exception() is not None
+    with pytest.raises(Exception):
+        h_ok.result(0)  # same macro-batch: shares the failure
+    h2 = server.submit("sr", _frames(1)[0])  # the server itself survives
+    server.step(force=True)
+    assert h2.exception() is None and h2.result(0).shape
+    server.close()
+
+
+# --------------------------------------------------------------------------- #
+# close / teardown                                                             #
+# --------------------------------------------------------------------------- #
+
+
+def test_close_under_inflight_async_requests(sr):
+    """close() while the scheduler thread is mid-flight: every accepted
+    request still resolves (queued ones force-drain, in-flight batches
+    complete), and the server refuses new work."""
+    server = _server(sr, clock=time.monotonic, flush_after=10.0, tick_interval=0.001)
+    server.start()
+    handles = [server.submit("sr", f) for f in _frames(11)]  # 2 full + partial
+    drained = server.close()  # immediately: some batches likely in flight
+    assert not server.running and server.closed
+    assert all(h.done() for h in handles)  # nothing lost, nothing dropped
+    assert all(h.exception() is None for h in handles)
+    assert drained >= 0  # whatever the thread didn't get to, close drained
+    assert server.stats["completed"] == 11
+    with pytest.raises(RuntimeError, match="closed"):
+        server.submit("sr", _frames(1)[0])
+    with pytest.raises(RuntimeError, match="closed"):
+        server.start()
+    with pytest.raises(RuntimeError, match="closed"):
+        server.add_plan("sr2", sr[1], sr[0].params, 4)
+
+
+def test_context_manager_drains_on_exit(sr):
+    with _server(sr) as server:
+        h = server.submit("sr", _frames(1)[0])
+    assert server.closed and h.done()
+
+
+def test_result_timeout_and_exception_surfaces(sr):
+    server = _server(sr)
+    h = server.submit("sr", _frames(1)[0])
+    with pytest.raises(TimeoutError, match="not done"):
+        h.result(0)
+    assert h.exception() is None  # not done yet -> no exception view
+    assert h.latency is None
+    server.close()
+    assert h.latency == 0.0  # injected clock never advanced
+
+
+# --------------------------------------------------------------------------- #
+# BatchedPlan: chunk-execute entry point + thread-safe stats                   #
+# --------------------------------------------------------------------------- #
+
+
+def test_run_chunk_bounds_and_padding(sr):
+    go, plan = sr
+    bp = plan.batched(4)
+    frames = _frames(3)
+    out = bp.run_chunk(go.params, jnp.stack(frames))
+    assert out.shape[0] == 3  # padding sliced off
+    want = plan(go.params, jnp.stack(frames))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+    assert bp.total_stats == {"frames": 3, "batches": 1, "padded_frames": 1}
+    with pytest.raises(ValueError, match="at most batch_size"):
+        bp.run_chunk(go.params, jnp.zeros((5, 3, 8, 8)))
+    with pytest.raises(ValueError, match="empty macro-batch"):
+        bp.run_chunk(go.params, jnp.zeros((0, 3, 8, 8)))
+
+
+def test_batched_plan_total_stats_accumulate_across_threads(sr):
+    """total_stats is the scheduler's ledger: hammer run_chunk from several
+    threads and the counters must come out exact (lock-protected)."""
+    go, plan = sr
+    bp = plan.batched(2)
+    x = jnp.stack(_frames(1))
+    jax.block_until_ready(bp.run_chunk(go.params, x))  # compile once up front
+    errs = []
+
+    def worker():
+        try:
+            for _ in range(5):
+                bp.run_chunk(go.params, x)
+        except Exception as e:  # pragma: no cover - failure path
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert bp.total_stats == {"frames": 21, "batches": 21, "padded_frames": 21}
+
+
+def test_batched_plan_call_still_reports_last_stats(sr):
+    """v1 consumers (PlanServer.flush) read last_stats per call; the chunked
+    rewrite must preserve that contract alongside the cumulative ledger."""
+    go, plan = sr
+    bp = plan.batched(2)
+    out = bp(go.params, jnp.stack(_frames(5)))
+    assert out.shape[0] == 5
+    assert bp.last_stats == {"frames": 5, "batches": 3, "padded_frames": 1}
+    assert bp.total_stats == {"frames": 5, "batches": 3, "padded_frames": 1}

@@ -1,0 +1,77 @@
+"""Global-state isolation: no test may observe another's mutations of the
+process-level kernel state (conv fallback counters, the TuningCache
+singleton).  The autouse fixture in conftest.py enforces this; the tests
+here prove ORDER INDEPENDENCE by running two state-mutating "tests" in both
+orders through the same snapshot/restore machinery and asserting each sees
+pristine state regardless of which ran first."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from conftest import restore_global_state, snapshot_global_state
+
+from repro.kernels import ops as kops
+
+
+def _mutate_fallback_counters():
+    """Mutator A: a grouped conv is a documented lax.conv fallback -- running
+    one bumps the process-level counter."""
+    x = jnp.ones((1, 4, 6, 6))
+    w = jnp.ones((4, 2, 3, 3))
+    kops.conv2d(x, w, groups=2, interpret=True)
+    assert kops.conv_fallback_counts().get("groups", 0) >= 1
+
+
+def _mutate_tuning_cache():
+    """Mutator B: poke a winner + flip the enabled flag on the singleton."""
+    cache = kops.tuning_cache()
+    cache.entries["matmul|1x1x1|float32|dense|interpret"] = kops.TuneEntry(
+        (8, 128, 128), "swept", 0.1
+    )
+    cache.enabled = not cache.enabled
+    cache.sweeps += 7
+
+
+def _assert_pristine(baseline):
+    assert snapshot_global_state() == baseline
+
+
+@pytest.mark.parametrize("order", ["ab", "ba"])
+def test_mutators_are_isolated_in_both_orders(order):
+    """Run the two mutators in both orders, each wrapped in the fixture's
+    snapshot/restore; the state observed before and after every mutator must
+    equal the pristine baseline, independent of order."""
+    baseline = snapshot_global_state()
+    mutators = {"a": _mutate_fallback_counters, "b": _mutate_tuning_cache}
+    for key in order:
+        _assert_pristine(baseline)  # previous mutator's damage fully undone
+        snap = snapshot_global_state()
+        try:
+            mutators[key]()
+            assert snapshot_global_state() != baseline  # it really mutated
+        finally:
+            restore_global_state(snap)
+    _assert_pristine(baseline)
+
+
+def test_fixture_restores_fallback_counters():
+    """The autouse fixture itself: mutate freely here; the companion test
+    below (collected AFTER this one in file order, and possibly before it
+    under -n auto) must never see the mutation either way."""
+    _mutate_fallback_counters()
+    assert kops.conv_fallback_counts()
+
+
+def test_fixture_left_no_fallback_residue():
+    assert kops.conv_fallback_counts().get("groups", 0) == 0
+
+
+def test_fixture_restores_tuning_cache():
+    cache = kops.tuning_cache()
+    before = dict(cache.entries)
+    _mutate_tuning_cache()
+    assert cache.entries != before
+
+
+def test_fixture_left_no_tuning_residue():
+    assert "matmul|1x1x1|float32|dense|interpret" not in kops.tuning_cache().entries
