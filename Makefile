@@ -28,6 +28,7 @@ bench-smoke:  ## tiny-shape benchmark pass (CI-sized, no TPU; writes results/BEN
 	python -m benchmarks.kernel_bench --smoke
 	python -m benchmarks.table1_apps --smoke
 	python -m benchmarks.serving_bench --smoke
+	python -m benchmarks.trajectory --check
 
 deps:
 	pip install -r requirements.txt

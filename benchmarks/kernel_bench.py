@@ -30,6 +30,15 @@ algorithm, so this bench reports what is *portable* from this container:
 
 ``--smoke`` shrinks every shape so CI can exercise the full path without a
 TPU (also reachable via ``make bench-smoke``).
+
+Timing methodology: every sample dispatches the jitted callable and blocks
+on the result via ``jax.block_until_ready``, so a sample covers dispatch +
+device execution and never measures async dispatch alone.  ``--warmup``
+extra calls run first (JIT compile + caches) and are discarded; ``--repeat``
+timed samples are reduced with the median (robust to scheduler noise).
+Baselines (lax.conv / fp32 GEMM) are timed ONCE per shape and shared across
+every scheme row of that shape, so scheme-to-scheme ratios within a shape
+are against the identical baseline sample.
 """
 
 from __future__ import annotations
@@ -53,12 +62,20 @@ K, N, M = 2048, 2048, 256
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 
 
+#: global overrides set by --repeat / --warmup (None -> per-bench default:
+#: 7 samples, or 3 under --smoke; 1 warmup call)
+REPEAT: int | None = None
+WARMUP: int | None = None
+
+
 def _median_time(fn, *args, reps=7):
-    jax.block_until_ready(fn(*args))
+    reps = REPEAT if REPEAT is not None else reps
+    for _ in range(max(1, WARMUP if WARMUP is not None else 1)):
+        jax.block_until_ready(fn(*args))  # compile + warm caches, discarded
     ts = []
     for _ in range(reps):
         t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
+        jax.block_until_ready(fn(*args))  # sample = dispatch + execution
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts))
 
@@ -396,52 +413,66 @@ def bench_conv(smoke: bool = False, out_path: str | None = None) -> dict:
     # kernel-level: the implicit-GEMM Pallas conv (all three schemes) vs the
     # XLA lax.conv baseline.  interpret-mode wall-clock measures Python, so
     # shapes stay modest there; parity gates the bench in every mode, the
-    # speedup is asserted on real hardware only.
-    n, c, h, wdt, o = (1, 8, 16, 16, 16) if smoke else (1, 32, 32, 32, 64)
+    # speedup is asserted on real hardware only.  The lax baseline is timed
+    # ONCE per shape and shared across the four scheme rows of that shape.
+    # The second (full-mode) shape is a wide-channel config whose resident-K
+    # workspace overflows the hw VMEM guard: it lowers through the tiled-K
+    # contraction path (block_c > 0) instead of falling back to lax.
+    shape_list = (
+        [(1, 8, 16, 16, 16)] if smoke
+        else [(1, 32, 32, 32, 64), (1, 256, 16, 16, 64)]
+    )
     key = jax.random.PRNGKey(0)
-    x = jax.random.normal(key, (n, c, h, wdt)) * 0.5
-    w = jax.random.normal(jax.random.PRNGKey(1), (o, c, 3, 3)) * 0.05
-    b = jax.random.normal(jax.random.PRNGKey(2), (o,)) * 0.1
-    qt = QTensor.from_float(w, axis=0)
-    kept = jnp.asarray(np.arange(0, c, 2), jnp.int32)  # half the channels live
-    x_scale = float(jnp.max(jnp.abs(x))) / 127.0
     reps = 3 if smoke else 7
-    base = jax.jit(lambda x, w, b: ref.conv2d_ref(x, w, b, stride=1, padding="SAME"))
-    t_lax = _median_time(base, x, w, b, reps=reps)
-    want = base(x, w, b)
     print("conv,scheme,NxCxHxW->O,ms_lax,ms_kernel,speedup,max_err")
-    f_dense = jax.jit(lambda x, w, b: kops.conv2d(x, w, b))
-    f_chan = jax.jit(lambda x, w, b: kops.conv2d(x, w[:, ::2], b, kept=kept))
-    f_w8 = jax.jit(lambda x, v, s, b: kops.conv2d(x, v, b, w_scale=s))
-    f_w8a8 = jax.jit(
-        lambda x, v, s, b: kops.conv2d(x, v, b, w_scale=s, x_scale=x_scale)
-    )
-    want_chan = ref.conv2d_ref(jnp.take(x, kept, axis=1), w[:, ::2], b)
-    cases = (
-        ("dense+f32", lambda: f_dense(x, w, b), want, 1e-4),
-        ("chanprune+f32", lambda: f_chan(x, w, b), want_chan, 1e-4),
-        ("dense+w8", lambda: f_w8(x, qt.values, qt.scale, b), want, 5e-2),
-        ("dense+w8a8", lambda: f_w8a8(x, qt.values, qt.scale, b), want, 5e-2),
-    )
-    for scheme, fn, target, tol in cases:
-        t_k = _median_time(fn, reps=reps)
-        err = float(jnp.abs(fn() - target).max())
-        # parity gates the bench in every mode (int8 schemes against the
-        # fp32 baseline carry bounded quantization noise)
-        assert err <= tol, (scheme, err, tol)
-        speedup = t_lax / t_k
-        if not interpret:  # interpret timings measure Python, not silicon
-            assert speedup > 1.0, (scheme, speedup)
-        row = {
-            "scheme": scheme, "shape": [n, c, h, wdt, o],
-            "ms_lax": t_lax * 1e3, "ms_kernel": t_k * 1e3, "speedup": speedup,
-            "max_err": err,
-        }
-        record["kernels"].append(row)
-        print(
-            f"conv,{scheme},{n}x{c}x{h}x{wdt}->{o},{t_lax*1e3:.3f},"
-            f"{t_k*1e3:.3f},{speedup:.2f},{err:.2e}"
+    for n, c, h, wdt, o in shape_list:
+        x = jax.random.normal(key, (n, c, h, wdt)) * 0.5
+        w = jax.random.normal(jax.random.PRNGKey(1), (o, c, 3, 3)) * 0.05
+        b = jax.random.normal(jax.random.PRNGKey(2), (o,)) * 0.1
+        qt = QTensor.from_float(w, axis=0)
+        kept = jnp.asarray(np.arange(0, c, 2), jnp.int32)  # half channels live
+        x_scale = float(jnp.max(jnp.abs(x))) / 127.0
+        base = jax.jit(
+            lambda x, w, b: ref.conv2d_ref(x, w, b, stride=1, padding="SAME")
         )
+        t_lax = _median_time(base, x, w, b, reps=reps)  # once per shape
+        want = base(x, w, b)
+        f_dense = jax.jit(lambda x, w, b: kops.conv2d(x, w, b))
+        f_chan = jax.jit(lambda x, w, b: kops.conv2d(x, w[:, ::2], b, kept=kept))
+        f_w8 = jax.jit(lambda x, v, s, b: kops.conv2d(x, v, b, w_scale=s))
+        f_w8a8 = jax.jit(
+            lambda x, v, s, b: kops.conv2d(x, v, b, w_scale=s, x_scale=x_scale)
+        )
+        want_chan = ref.conv2d_ref(jnp.take(x, kept, axis=1), w[:, ::2], b)
+        # int8 parity tolerance: a8 rounding noise accumulates over the
+        # K = C*kh*kw contraction (~sqrt(K) growth), so the wide-channel
+        # shape gets a proportionally wider bound than the 32-channel one
+        tol8 = max(5e-2, 5e-2 * (c / 32) ** 0.5)
+        cases = (
+            ("dense+f32", lambda: f_dense(x, w, b), want, 1e-4),
+            ("chanprune+f32", lambda: f_chan(x, w, b), want_chan, 1e-4),
+            ("dense+w8", lambda: f_w8(x, qt.values, qt.scale, b), want, tol8),
+            ("dense+w8a8", lambda: f_w8a8(x, qt.values, qt.scale, b), want, tol8),
+        )
+        for scheme, fn, target, tol in cases:
+            t_k = _median_time(fn, reps=reps)
+            err = float(jnp.abs(fn() - target).max())
+            # parity gates the bench in every mode (int8 schemes against the
+            # fp32 baseline carry bounded quantization noise)
+            assert err <= tol, (scheme, err, tol)
+            speedup = t_lax / t_k
+            if not interpret:  # interpret timings measure Python, not silicon
+                assert speedup > 1.0, (scheme, speedup)
+            row = {
+                "scheme": scheme, "shape": [n, c, h, wdt, o],
+                "ms_lax": t_lax * 1e3, "ms_kernel": t_k * 1e3,
+                "speedup": speedup, "max_err": err,
+            }
+            record["kernels"].append(row)
+            print(
+                f"conv,{scheme},{n}x{c}x{h}x{wdt}->{o},{t_lax*1e3:.3f},"
+                f"{t_k*1e3:.3f},{speedup:.2f},{err:.2e}"
+            )
 
     # app-level acceptance: every conv of the three demo apps lowers through
     # the Pallas kernel (zero fallbacks), at parity with the jnp reference
@@ -516,4 +547,12 @@ def main(smoke: bool = False):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="tiny shapes (CI, no TPU)")
-    main(smoke=ap.parse_args().smoke)
+    ap.add_argument("--repeat", type=int, default=None,
+                    help="timed samples per measurement (default 7, 3 in "
+                         "smoke); each sample blocks on the result")
+    ap.add_argument("--warmup", type=int, default=None,
+                    help="discarded warm-up calls before timing (default 1; "
+                         "covers JIT compile)")
+    cli = ap.parse_args()
+    REPEAT, WARMUP = cli.repeat, cli.warmup
+    main(smoke=cli.smoke)

@@ -651,8 +651,9 @@ class ExecutionPlan:
 
     def _conv_workspace(self, n: Node, pstruct, x_struct) -> int:
         """Per-grid-step VMEM working set of one conv step through the
-        implicit-GEMM kernel (resident image + filter tile + im2col patch +
-        accumulator), at the tuned blocks when known, else the defaults."""
+        implicit-GEMM kernel (resident image slab + filter tile + im2col
+        patch + accumulator), at the tuned blocks when known, else the
+        defaults."""
         wkey = "w" if n.op == "conv2d" else "values"
         if wkey not in pstruct or getattr(x_struct, "ndim", 0) != 4:
             return 0
@@ -668,6 +669,10 @@ class ExecutionPlan:
         interp = (
             kops.interpret_default() if self.interpret is None else self.interpret
         )
+        # a 1x1 conv elects the direct-GEMM fast path at lowering time:
+        # no im2col, no resident image -- it owns no conv-kernel workspace
+        if kops.conv_gemm1x1_elected(kh, kw, a.get("groups", 1), padding, c):
+            return 0
         # a step outside the kernel's matrix executes through lax.conv and
         # owns no Pallas VMEM workspace
         if kops.conv_fallback_reason(
@@ -695,7 +700,12 @@ class ExecutionPlan:
                 b for f in fmts
                 if (b := cache.lookup_nd("conv2d", shape, dtype, f, interp))
             ),
-            kops.TuningCache.DEFAULTS["conv2d"],
+            # no tuned winner: the wrapper would seed the shape-aware default
+            # (resident when it fits VMEM, else the tiled-K granularity)
+            kops._conv_default_blocks(
+                c, int(x_struct.shape[2]), int(x_struct.shape[3]), kh, kw,
+                stride, padding, x_item, w_item, interp,
+            ),
         )
         return kops.conv_vmem_workspace(
             c, int(x_struct.shape[2]), int(x_struct.shape[3]), kh, kw, stride,

@@ -12,14 +12,28 @@ GEMM view (per batch image)::
     M = OH x OW   (output pixels)       N = O  (output channels)
     K = C x kh x kw                     acc[M, N] += patch[M, K] @ W[K, N]
 
-Tiling: grid ``(N_batch, OH/block_h, O/block_o)``.  Each grid step owns a
-``[block_h * OW, block_o]`` output tile.  The input image arrives as one
-NHWC VMEM block per batch element (the wrapper transposes + zero-pads once
-in HBM -- that is *padding*, not im2col); the kernel then walks the
-``kh x kw`` filter taps, slicing a ``[block_h, OW, C]`` patch per tap out of
-the resident image (strided rows/cols for ``stride > 1``), reshaping it to
-``[block_h * OW, C]`` and feeding the MXU.  K is therefore contracted fully
-inside one grid step -- no cross-step accumulator scratch.
+Tiling: grid ``(N_batch, OH/block_h, O/block_o)`` and -- with ``block_c``
+set -- a fourth tiled-K axis ``C/block_c``.  Each grid step owns a
+``[block_h * OW, block_o]`` output tile.  The input image arrives as an NHWC
+VMEM block per batch element (the wrapper transposes + zero-pads once in
+HBM -- that is *padding*, not im2col); the kernel then walks the ``kh x kw``
+filter taps, slicing a ``[block_h, OW, block_c]`` patch per tap out of the
+resident slab (strided rows/cols for ``stride > 1``), reshaping it to
+``[block_h * OW, block_c]`` and feeding the MXU.
+
+``block_c == 0`` keeps the legacy resident-image contraction: all of
+``K = C * kh * kw`` inside one grid step, no accumulator scratch.  With
+``block_c > 0`` the contraction is *tiled over K*: the innermost grid axis
+walks channel blocks, a cross-step VMEM accumulator scratch (f32, or int32
+for W8A8) carries partial sums, and bias/rescale/activation/epilogue run
+once on the **last** K step -- exactly ``dense_matmul``'s (i, j, k) grid
+shape, with the per-step K slab being ``block_k = block_c * kh * kw`` of the
+GEMM's K.  VMEM pressure then scales with ``block_c``, not ``C``, so
+wide-channel layers stop tripping the ``lax.conv`` VMEM fallback; the
+Pallas TPU grid pipeline streams the next step's image/filter blocks
+HBM->VMEM while the current step computes (automatic double-buffering --
+the explicit hand-rolled variant lives in ``dense_matmul``'s /
+``quant_matmul``'s ``pipeline=2`` path).
 
 Three schemes share the kernel body, selected by operand dtypes:
 
@@ -55,6 +69,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from .dense_matmul import _ACTIVATIONS, apply_epilogue_steps, validate_epilogue
 from .pallas_compat import tpu_compiler_params as _tpu_compiler_params
@@ -122,23 +137,29 @@ def conv_vmem_workspace(
     padding: str,
     block_h: int,
     block_o: int,
+    block_c: int = 0,
     x_itemsize: int = 4,
     w_itemsize: int = 4,
 ) -> dict:
     """Per-grid-step VMEM working set of the implicit-GEMM kernel: the
-    resident padded image, one filter tile, the in-flight im2col patch tile,
-    and the f32 accumulator/output tile.  Shared by the ``ops.conv2d``
-    fallback guard and :meth:`ExecutionPlan.memory_estimate` (the im2col
-    scratch never touches HBM, so it must be accounted as VMEM-side peak
-    working memory, not activation bytes)."""
+    resident image slab, one filter tile, the in-flight im2col patch tile,
+    and the f32 accumulator/output tile.  ``block_c == 0`` means the legacy
+    resident-image path (all ``C`` channels in VMEM at once); ``block_c > 0``
+    is the tiled-K contraction, where only a ``block_c``-channel slab is
+    resident per grid step (plus the cross-step accumulator scratch).
+    Shared by the ``ops.conv2d`` fallback guard and
+    :meth:`ExecutionPlan.memory_estimate` (the im2col scratch never touches
+    HBM, so it must be accounted as VMEM-side peak working memory, not
+    activation bytes)."""
     oh, ow = conv_out_hw(h, w, kh, kw, stride, padding)
     ohp = -(-max(oh, 1) // block_h) * block_h
     hp = (ohp - 1) * stride + kh
     wp = (max(ow, 1) - 1) * stride + kw
     bm = block_h * max(ow, 1)
-    image = hp * wp * c * x_itemsize
-    weights = kh * kw * c * block_o * w_itemsize
-    patch = bm * c * x_itemsize  # one (ki, kj) im2col tile resident at a time
+    c_eff = min(c, block_c) if block_c else c
+    image = hp * wp * c_eff * x_itemsize
+    weights = kh * kw * c_eff * block_o * w_itemsize
+    patch = bm * c_eff * x_itemsize  # one (ki, kj) im2col tile resident at a time
     acc = bm * block_o * 4
     out = bm * block_o * 4
     return {
@@ -152,12 +173,13 @@ def conv_vmem_workspace(
 
 
 def conv2d_gemm_kernel(
-    x_ref,  # [1, Hp, Wp, C] resident padded image (f32, or int8 for W8A8)
-    w_ref,  # [kh*kw, C, block_o] filter taps (f32, or int8 for INT8 schemes)
+    x_ref,  # [1, Hp, Wp, C or block_c] image slab (f32, or int8 for W8A8)
+    w_ref,  # [kh*kw, C or block_c, block_o] filter taps (f32 or int8)
     ws_ref,  # [1, block_o] combined per-output-channel rescale, or None (f32)
     b_ref,  # [1, block_o] bias tile, or None
     side_refs,  # per-tile epilogue side operands, each [block_h*OW, block_o]
     o_ref,  # [block_h*OW, block_o] output tile
+    acc_ref=None,  # cross-step VMEM accumulator (tiled-K only): f32 or int32
     *,
     stride: int,
     kh: int,
@@ -167,8 +189,14 @@ def conv2d_gemm_kernel(
     activation: Optional[str],
     epilogue: Tuple[Tuple, ...] = (),
 ):
-    """One (n, i, j) grid step: contract all C*kh*kw of K for one output
-    tile, materializing one im2col patch tile per filter tap in VMEM."""
+    """One grid step of the implicit GEMM.
+
+    ``acc_ref is None`` (legacy resident path): an (n, i, j) step contracts
+    all ``C*kh*kw`` of K for one output tile, materializing one im2col patch
+    tile per filter tap in VMEM.  With ``acc_ref`` (tiled-K path) this is an
+    (n, i, j, kc) step: it contracts one ``block_c``-channel slab of K into
+    the cross-step accumulator -- zeroed at ``kc == 0``, finished (rescale /
+    bias / activation / epilogue + output write) at the last ``kc``."""
     i = pl.program_id(1)
     c = x_ref.shape[3]
     bm = block_h * out_w
@@ -194,21 +222,38 @@ def conv2d_gemm_kernel(
                     wk.astype(jnp.float32),
                     preferred_element_type=jnp.float32,
                 )
-    acc = acc.astype(jnp.float32)
-    if ws_ref is not None:
-        acc = acc * ws_ref[...].astype(jnp.float32)
-    if b_ref is not None:
-        acc = acc + b_ref[...].astype(jnp.float32)
-    acc = _ACTIVATIONS[activation](acc)
-    acc = apply_epilogue_steps(acc, epilogue, side_refs)
-    o_ref[...] = acc.astype(o_ref.dtype)
+
+    def _finish(a):
+        a = a.astype(jnp.float32)
+        if ws_ref is not None:
+            a = a * ws_ref[...].astype(jnp.float32)
+        if b_ref is not None:
+            a = a + b_ref[...].astype(jnp.float32)
+        a = _ACTIVATIONS[activation](a)
+        a = apply_epilogue_steps(a, epilogue, side_refs)
+        o_ref[...] = a.astype(o_ref.dtype)
+
+    if acc_ref is None:
+        _finish(acc)
+        return
+    kc = pl.program_id(3)
+
+    @pl.when(kc == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += acc
+
+    @pl.when(kc == pl.num_programs(3) - 1)
+    def _epilogue():
+        _finish(acc_ref[...])
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
         "stride", "kh", "kw", "activation", "epilogue", "block_h", "block_o",
-        "interpret", "out_dtype",
+        "block_c", "interpret", "out_dtype",
     ),
 )
 def conv2d_gemm(
@@ -224,6 +269,7 @@ def conv2d_gemm(
     epilogue: Tuple[Tuple, ...] = (),
     block_h: int = 8,
     block_o: int = 128,
+    block_c: int = 0,
     interpret: bool = False,
     out_dtype=None,
 ) -> jax.Array:
@@ -236,6 +282,11 @@ def conv2d_gemm(
     ``[Op]`` vectors; ``sides`` epilogue operands in the flattened output
     layout ``[N * OHp * OW, Op]``.  Returns ``[N * OHp * OW, Op]``.
 
+    ``block_c == 0`` contracts all of K per grid step with the whole padded
+    image VMEM-resident; ``block_c > 0`` (must divide ``C``) adds the tiled-K
+    grid axis with the cross-step accumulator scratch -- the per-step K slab
+    is ``block_k = block_c * kh * kw``.
+
     Use :func:`repro.kernels.ops.conv2d` for the NCHW/OIHW public API.
     """
     n, hp, wp, c = x.shape
@@ -247,6 +298,7 @@ def conv2d_gemm(
     assert wp == (out_w - 1) * stride + kw, (wp, out_w, kw, stride)
     assert out_h % block_h == 0, (out_h, block_h)
     assert op % block_o == 0, (op, block_o)
+    assert block_c >= 0 and (not block_c or c % block_c == 0), (c, block_c)
     if activation not in _ACTIVATIONS:
         raise ValueError(f"unknown activation {activation!r}")
     validate_epilogue(epilogue, len(sides))
@@ -254,34 +306,55 @@ def conv2d_gemm(
     m = n * out_h * out_w
     for s in sides:
         assert s.shape == (m, op), (s.shape, (m, op))
+    a8 = jnp.issubdtype(x.dtype, jnp.integer)
     out_dtype = out_dtype or (jnp.float32 if jnp.issubdtype(w.dtype, jnp.integer) else x.dtype)
     n_h_tiles = out_h // block_h
-    grid = (n, n_h_tiles, op // block_o)
-
-    in_specs = [
-        pl.BlockSpec((1, hp, wp, c), lambda nn, i, j: (nn, 0, 0, 0)),
-        pl.BlockSpec((kk, c, block_o), lambda nn, i, j: (0, 0, j)),
-    ]
+    tiled_k = bool(block_c)
+    bc = block_c or c
+    if tiled_k:
+        grid = (n, n_h_tiles, op // block_o, c // block_c)
+        in_specs = [
+            pl.BlockSpec((1, hp, wp, bc), lambda nn, i, j, kc: (nn, 0, 0, kc)),
+            pl.BlockSpec((kk, bc, block_o), lambda nn, i, j, kc: (0, kc, j)),
+        ]
+        vec_tile = pl.BlockSpec((1, block_o), lambda nn, i, j, kc: (0, j))
+        out_tile = pl.BlockSpec(
+            (bm, block_o), lambda nn, i, j, kc: (nn * n_h_tiles + i, j)
+        )
+        scratch = [pltpu.VMEM((bm, block_o), jnp.int32 if a8 else jnp.float32)]
+        # kc is the contraction: it must stay sequential so the accumulator
+        # scratch lives across it (the grid pipeline still double-buffers the
+        # streamed image/filter blocks underneath)
+        semantics = ("parallel", "parallel", "parallel", "arbitrary")
+    else:
+        grid = (n, n_h_tiles, op // block_o)
+        in_specs = [
+            pl.BlockSpec((1, hp, wp, c), lambda nn, i, j: (nn, 0, 0, 0)),
+            pl.BlockSpec((kk, c, block_o), lambda nn, i, j: (0, 0, j)),
+        ]
+        vec_tile = pl.BlockSpec((1, block_o), lambda nn, i, j: (0, j))
+        out_tile = pl.BlockSpec(
+            (bm, block_o), lambda nn, i, j: (nn * n_h_tiles + i, j)
+        )
+        scratch = []
+        semantics = ("parallel", "parallel", "parallel")
     args = [x, w]
     has_ws = ws is not None
     if has_ws:
         assert ws.shape == (op,), (ws.shape, op)
-        in_specs.append(pl.BlockSpec((1, block_o), lambda nn, i, j: (0, j)))
+        in_specs.append(vec_tile)
         args.append(ws.reshape(1, op).astype(jnp.float32))
     has_bias = bias is not None
     if has_bias:
         assert bias.shape == (op,), (bias.shape, op)
-        in_specs.append(pl.BlockSpec((1, block_o), lambda nn, i, j: (0, j)))
+        in_specs.append(vec_tile)
         args.append(bias.reshape(1, op))
-    out_tile = pl.BlockSpec(
-        (bm, block_o), lambda nn, i, j: (nn * n_h_tiles + i, j)
-    )
     in_specs.extend([out_tile] * len(sides))
     args.extend(sides)
     n_sides = len(sides)
 
     def kern(*refs):
-        # refs: x, w, [ws], [bias], *sides, o
+        # refs: x, w, [ws], [bias], *sides, o, [acc]
         pos = 2
         ws_ref = refs[pos] if has_ws else None
         pos += int(has_ws)
@@ -293,7 +366,8 @@ def conv2d_gemm(
             ws_ref,
             b_ref,
             refs[pos : pos + n_sides],
-            refs[-1],
+            refs[-1 - len(scratch)],
+            refs[-1] if tiled_k else None,
             stride=stride,
             kh=kh,
             kw=kw,
@@ -309,8 +383,9 @@ def conv2d_gemm(
         in_specs=in_specs,
         out_specs=out_tile,
         out_shape=jax.ShapeDtypeStruct((m, op), out_dtype),
+        scratch_shapes=scratch,
         compiler_params=_tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "parallel")
+            dimension_semantics=semantics
         ),
         interpret=interpret,
     )(*args)

@@ -14,6 +14,17 @@ intermediate).
 Grid: ``(M/bm, N/bn, K/bk)`` with a VMEM f32 accumulator; K innermost so the
 accumulator lives across the contraction.  Block shapes default to MXU-square
 128 and must divide the (padded) operand shapes -- the ops.py wrapper pads.
+
+``pipeline >= 2`` switches to the hand-rolled double-buffered variant: the
+grid drops to ``(M/bm, N/bn)``, the x/w operands stay in HBM
+(``memory_space=ANY``), and the kernel itself streams ``[bm, bk]`` /
+``[bk, bn]`` K-slabs into a ``pipeline``-deep ring of VMEM scratch buffers
+with explicit async DMAs -- the copy for K-step ``k + depth - 1`` is started
+*before* waiting on step ``k``'s, so HBM transfer of the next slab overlaps
+the MXU contraction of the current one.  This is the explicit form of what
+the Pallas grid pipeline does automatically for the ``pipeline == 1`` path;
+it exists so the tuning cache can choose between compiler-scheduled and
+hand-scheduled K streaming per shape (the 4th ``matmul``-family block field).
 """
 
 from __future__ import annotations
@@ -28,7 +39,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .pallas_compat import tpu_compiler_params as _tpu_compiler_params
 
-__all__ = ["dense_matmul_kernel", "dense_matmul"]
+__all__ = [
+    "dense_matmul_kernel",
+    "dense_matmul_pipelined_kernel",
+    "dense_matmul",
+]
 
 
 _ACTIVATIONS = {
@@ -103,10 +118,76 @@ def dense_matmul_kernel(
         o_ref[...] = acc.astype(o_ref.dtype)
 
 
+def dense_matmul_pipelined_kernel(
+    x_hbm,  # [bm, K] row panel, left in HBM (memory_space=ANY)
+    w_hbm,  # [K, bn] column panel, left in HBM (memory_space=ANY)
+    b_ref,
+    side_refs,
+    o_ref,
+    x_slots,  # VMEM [depth, bm, bk] ring of streamed x K-slabs
+    w_slots,  # VMEM [depth, bk, bn] ring of streamed w K-slabs
+    sem,  # DMA semaphores [depth, 2] (slot x {x, w})
+    *,
+    block_k: int,
+    n_steps: int,
+    depth: int,
+    activation: Optional[str],
+    epilogue: Tuple[Tuple, ...] = (),
+):
+    """One (i, j) grid step of the hand-pipelined GEMM: K is contracted by
+    an in-kernel loop over ``n_steps`` slabs streamed HBM->VMEM through a
+    ``depth``-deep double-buffer ring.  Slab ``s + depth - 1``'s DMA starts
+    before slab ``s``'s is awaited, so the copy of the next operands overlaps
+    the MXU work on the current ones; the accumulator is the loop carry."""
+
+    def copies(slot, step):
+        return (
+            pltpu.make_async_copy(
+                x_hbm.at[:, pl.ds(step * block_k, block_k)],
+                x_slots.at[slot],
+                sem.at[slot, 0],
+            ),
+            pltpu.make_async_copy(
+                w_hbm.at[pl.ds(step * block_k, block_k), :],
+                w_slots.at[slot],
+                sem.at[slot, 1],
+            ),
+        )
+
+    for p in range(min(depth - 1, n_steps)):  # warm-up: fill the ring
+        for c in copies(p, p):
+            c.start()
+
+    def body(step, acc):
+        ahead = step + depth - 1
+
+        @pl.when(ahead < n_steps)
+        def _prefetch():
+            for c in copies(jax.lax.rem(ahead, depth), ahead):
+                c.start()
+
+        slot = jax.lax.rem(step, depth)
+        for c in copies(slot, step):
+            c.wait()
+        return acc + jnp.dot(
+            x_slots[slot], w_slots[slot], preferred_element_type=jnp.float32
+        )
+
+    acc = jax.lax.fori_loop(
+        0, n_steps, body, jnp.zeros(o_ref.shape, jnp.float32)
+    )
+    if b_ref is not None:
+        acc = acc + b_ref[...].astype(jnp.float32)
+    acc = _ACTIVATIONS[activation](acc)
+    acc = apply_epilogue_steps(acc, epilogue, side_refs)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "activation", "epilogue", "block_m", "block_n", "block_k", "interpret", "out_dtype",
+        "activation", "epilogue", "block_m", "block_n", "block_k", "pipeline",
+        "interpret", "out_dtype",
     ),
 )
 def dense_matmul(
@@ -119,12 +200,14 @@ def dense_matmul(
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 128,
+    pipeline: int = 1,
     interpret: bool = False,
     out_dtype=None,
 ) -> jax.Array:
     """``epilogue(act(x @ w + bias))`` -- 2-D operands, shapes multiples of
     the blocks; ``sides`` are [M, N] arrays streamed per-tile for the
-    epilogue's add/mul slots.
+    epilogue's add/mul slots.  ``pipeline >= 2`` selects the hand-rolled
+    double-buffered K streaming path (that many VMEM slab slots in flight).
 
     Use :func:`repro.kernels.ops.matmul` for the padded/raked public API.
     """
@@ -142,37 +225,74 @@ def dense_matmul(
     for s in sides:
         assert s.shape == (m, n), (s.shape, (m, n))
     out_dtype = out_dtype or x.dtype
-    grid = (m // block_m, n // block_n, k // block_k)
-
-    in_specs = [
-        pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
-        pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
-    ]
+    pipelined = pipeline >= 2
+    if pipelined:
+        grid = (m // block_m, n // block_n)
+        any_space = pltpu.TPUMemorySpace.ANY
+        in_specs = [
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0), memory_space=any_space),
+            pl.BlockSpec((k, block_n), lambda i, j: (0, j), memory_space=any_space),
+        ]
+        bias_tile = pl.BlockSpec((1, block_n), lambda i, j: (0, j))
+        out_tile = pl.BlockSpec((block_m, block_n), lambda i, j: (i, j))
+        scratch = [
+            pltpu.VMEM((pipeline, block_m, block_k), x.dtype),
+            pltpu.VMEM((pipeline, block_k, block_n), w.dtype),
+            pltpu.SemaphoreType.DMA((pipeline, 2)),
+        ]
+        semantics = ("parallel", "parallel")
+    else:
+        grid = (m // block_m, n // block_n, k // block_k)
+        in_specs = [
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ]
+        bias_tile = pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j))
+        out_tile = pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j))
+        scratch = [pltpu.VMEM((block_m, block_n), jnp.float32)]
+        semantics = ("parallel", "parallel", "arbitrary")
     args = [x, w]
     has_bias = bias is not None
     if has_bias:
         assert bias.shape == (n,), bias.shape
-        in_specs.append(pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)))
+        in_specs.append(bias_tile)
         args.append(bias.reshape(1, n))
-    out_tile = pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j))
     in_specs.extend([out_tile] * len(sides))
     args.extend(sides)
     n_sides = len(sides)
 
     def kern(*refs):
-        # refs: x, w, [bias], *sides, o, acc
+        # refs: x, w, [bias], *sides, o, then scratch
         b_ref = refs[2] if has_bias else None
         first_side = 2 + int(has_bias)
-        dense_matmul_kernel(
-            refs[0],
-            refs[1],
-            b_ref,
-            refs[first_side : first_side + n_sides],
-            refs[-2],
-            refs[-1],
-            activation=activation,
-            epilogue=epilogue,
-        )
+        side_refs = refs[first_side : first_side + n_sides]
+        if pipelined:
+            dense_matmul_pipelined_kernel(
+                refs[0],
+                refs[1],
+                b_ref,
+                side_refs,
+                refs[-4],
+                refs[-3],
+                refs[-2],
+                refs[-1],
+                block_k=block_k,
+                n_steps=k // block_k,
+                depth=pipeline,
+                activation=activation,
+                epilogue=epilogue,
+            )
+        else:
+            dense_matmul_kernel(
+                refs[0],
+                refs[1],
+                b_ref,
+                side_refs,
+                refs[-2],
+                refs[-1],
+                activation=activation,
+                epilogue=epilogue,
+            )
 
     return pl.pallas_call(
         kern,
@@ -180,9 +300,9 @@ def dense_matmul(
         in_specs=in_specs,
         out_specs=out_tile,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        scratch_shapes=scratch,
         compiler_params=_tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
+            dimension_semantics=semantics
         ),
         interpret=interpret,
     )(*args)

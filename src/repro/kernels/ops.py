@@ -53,6 +53,9 @@ __all__ = [
     "conv_fallback_counts",
     "conv_fallback_reason",
     "reset_conv_fallbacks",
+    "conv_fastpath_counts",
+    "conv_gemm1x1_elected",
+    "reset_conv_fastpaths",
     "fused_elementwise",
     "ffn_gateup",
     "qmatmul",
@@ -100,50 +103,64 @@ class TuningCache:
     never pay a sweep.
     """
 
-    #: default blocks per op: matmul family is (block_m, block_n, block_k);
+    #: default blocks per op: matmul family is (block_m, block_n, block_k,
+    #: pipeline_depth) -- depth 1 is the compiler-scheduled grid-K path,
+    #: depth >= 2 the hand-rolled double-buffered K streaming ring;
     #: bsr_matmul tunes only block_m (block_n/k come from the packed format);
     #: fused_elementwise tunes block_m (full feature dim is tile-resident)
     DEFAULTS: Dict[str, Tuple[int, ...]] = {
-        "matmul": (128, 128, 128),
+        "matmul": (128, 128, 128, 1),
         "bsr_matmul": (128,),
         "fused_elementwise": (128,),
-        "qmatmul": (128, 128, 128),
-        # conv2d tunes (block_h, block_o): output-row rows per tile (the GEMM
-        # M block is block_h * OW) and output-channel lanes per tile
-        "conv2d": (8, 128),
+        "qmatmul": (128, 128, 128, 1),
+        # conv2d tunes (block_h, block_o, block_c): output rows per tile (the
+        # GEMM M block is block_h * OW), output-channel lanes per tile, and
+        # the tiled-K channel granularity (0 = resident full-K contraction;
+        # block_c > 0 streams block_k = block_c*kh*kw K-slabs per grid step)
+        "conv2d": (8, 128, 0),
     }
     #: small sweep grids; TPU lanes want the minor dims at 128 multiples
     #: (pallas_guide: f32 min tile 8x128, MXU 128x128)
     CANDIDATES: Dict[str, Tuple[Tuple[int, ...], ...]] = {
         "matmul": (
-            (128, 128, 128),
-            (64, 128, 128),
-            (256, 128, 128),
-            (128, 256, 128),
-            (128, 128, 256),
+            (128, 128, 128, 1),
+            (64, 128, 128, 1),
+            (256, 128, 128, 1),
+            (128, 256, 128, 1),
+            (128, 128, 256, 1),
+            # hand-pipelined double-buffered K streaming (depth-2 ring)
+            (128, 128, 128, 2),
+            (128, 128, 256, 2),
         ),
         "bsr_matmul": ((64,), (128,), (256,)),
-        "fused_elementwise": ((64,), (128,), (256,), (512,)),
+        "fused_elementwise": ((64,), (128,), (256,), (512,), (1024,)),
         # int8 tiles are (32, 128)-granular; larger K blocks amortize the
         # rescale and exploit the 4x smaller weight stream
         "qmatmul": (
-            (128, 128, 128),
-            (64, 128, 128),
-            (256, 128, 128),
-            (128, 256, 128),
-            (128, 128, 256),
-            (128, 128, 512),
+            (128, 128, 128, 1),
+            (64, 128, 128, 1),
+            (256, 128, 128, 1),
+            (128, 256, 128, 1),
+            (128, 128, 256, 1),
+            (128, 128, 512, 1),
+            # hand-pipelined ring: int8 slabs are 4x smaller, deeper K pays
+            (128, 128, 128, 2),
+            (128, 128, 512, 2),
         ),
         # more rows per tile amortizes the per-tap patch slicing; larger
-        # block_o amortizes image residency across output channels
+        # block_o amortizes image residency across output channels; non-zero
+        # block_c trades image residency for the tiled-K accumulator
         "conv2d": (
-            (1, 128),
-            (2, 128),
-            (4, 128),
-            (8, 128),
-            (16, 128),
-            (4, 256),
-            (8, 256),
+            (1, 128, 0),
+            (2, 128, 0),
+            (4, 128, 0),
+            (8, 128, 0),
+            (16, 128, 0),
+            (4, 256, 0),
+            (8, 256, 0),
+            (8, 128, 64),
+            (8, 128, 128),
+            (4, 256, 128),
         ),
     }
 
@@ -152,6 +169,13 @@ class TuningCache:
         self.enabled = (env not in (None, "0", "false", "False")) if enabled is None else enabled
         self.entries: Dict[str, TuneEntry] = {}
         self.sweeps = 0  # number of grid sweeps actually executed
+        #: restrict sweeping to these op families (None = all); lookups and
+        #: defaults still serve every family (the tune CLI's --ops filter)
+        self.ops_filter: Optional[frozenset] = None
+        #: per-key-family resolve accounting: hits (cached winner returned),
+        #: misses (no usable entry -- default recorded or sweep triggered),
+        #: sweeps (candidate grids actually timed)
+        self.stats: Dict[str, Dict[str, int]] = {}
         self.path = path or os.environ.get("REPRO_TUNE_CACHE")
         if self.path and os.path.exists(self.path):
             try:
@@ -198,8 +222,11 @@ class TuningCache:
         interpret: bool,
         runner: Optional[Callable[..., Any]] = None,
         reps: int = 3,
+        default: Optional[Tuple[int, ...]] = None,
     ) -> Tuple[int, ...]:
-        return self.resolve_nd(op, (m, n, k), dtype, fmt, interpret, runner, reps)
+        return self.resolve_nd(
+            op, (m, n, k), dtype, fmt, interpret, runner, reps, default
+        )
 
     def resolve_nd(
         self,
@@ -210,14 +237,26 @@ class TuningCache:
         interpret: bool,
         runner: Optional[Callable[..., Any]] = None,
         reps: int = 3,
+        default: Optional[Tuple[int, ...]] = None,
     ) -> Tuple[int, ...]:
+        """Cached winner for the key if one exists; else sweep (tuning
+        enabled + concrete runner + op not excluded by ``ops_filter``) or
+        fall back to ``default`` (the caller's shape/mode-aware seed) or the
+        op family's static ``DEFAULTS`` entry."""
         key = self.key_nd(op, shape, dtype, fmt, interpret)
+        stat = self.stats.setdefault(op, {"hits": 0, "misses": 0, "sweeps": 0})
         hit = self.entries.get(key)
-        can_sweep = self.enabled and runner is not None
+        can_sweep = (
+            self.enabled
+            and runner is not None
+            and (self.ops_filter is None or op in self.ops_filter)
+        )
         # seeded-default entries are placeholders, not measurements: re-tune
         # them the first time a sweep is actually possible
         if hit is not None and not (can_sweep and hit.source == "default"):
+            stat["hits"] += 1
             return hit.blocks
+        stat["misses"] += 1
         if can_sweep:
             best, best_ms = None, float("inf")
             for cand in self.CANDIDATES[op]:
@@ -234,10 +273,11 @@ class TuningCache:
                 if ms < best_ms:
                     best, best_ms = cand, ms
             self.sweeps += 1
+            stat["sweeps"] += 1
             if best is not None:
                 self.entries[key] = TuneEntry(best, "swept", best_ms)
                 return best
-        default = self.DEFAULTS[op]
+        default = default or self.DEFAULTS[op]
         self.entries[key] = TuneEntry(default, "default")
         return default
 
@@ -270,6 +310,16 @@ class TuningCache:
     def clear(self) -> None:
         self.entries.clear()
         self.sweeps = 0
+        self.stats.clear()
+
+    def stats_report(self) -> str:
+        """Per-key-family resolve accounting (hits / misses / sweeps) --
+        printed by the ``launch.tune`` CLI after a pre-warm pass."""
+        lines = ["family,hits,misses,sweeps"]
+        for op in sorted(self.stats):
+            s = self.stats[op]
+            lines.append(f"{op},{s['hits']},{s['misses']},{s['sweeps']}")
+        return "\n".join(lines)
 
     def report(self) -> str:
         lines = ["op,shape,dtype,format,mode,blocks,source,ms"]
@@ -302,9 +352,24 @@ def _concrete(*arrays) -> bool:
     return not any(isinstance(a, jax.core.Tracer) for a in arrays)
 
 
+def _blocks4(blocks: Sequence[int]) -> Tuple[int, int, int, int]:
+    """Normalize a matmul-family blocks tuple: legacy 3-field entries (from
+    pre-pipeline cache files) mean the compiler-scheduled grid-K path
+    (pipeline depth 1)."""
+    t = tuple(int(b) for b in blocks)
+    return t if len(t) == 4 else (*t[:3], 1)
+
+
+def _conv_blocks3(blocks: Sequence[int]) -> Tuple[int, int, int]:
+    """Normalize a conv2d blocks tuple: legacy 2-field entries mean the
+    resident full-K contraction (block_c == 0)."""
+    t = tuple(int(b) for b in blocks)
+    return t if len(t) == 3 else (*t[:2], 0)
+
+
 def _matmul_blocked(
     x2, w, bias, activation, block_m, block_n, block_k, interpret,
-    epilogue=(), sides=(),
+    epilogue=(), sides=(), pipeline=1,
 ):
     m, k = x2.shape
     n = w.shape[1]
@@ -322,6 +387,7 @@ def _matmul_blocked(
         block_m=block_m,
         block_n=block_n,
         block_k=block_k,
+        pipeline=pipeline,
         interpret=interpret,
     )[:m, :n]
 
@@ -337,6 +403,7 @@ def matmul(
     block_m: Optional[int] = None,
     block_n: Optional[int] = None,
     block_k: Optional[int] = None,
+    pipeline: Optional[int] = None,
     interpret: Optional[bool] = None,
     _format: str = "dense",
 ) -> jax.Array:
@@ -349,6 +416,10 @@ def matmul(
     Block sizes left as ``None`` are resolved through the tuning cache
     (cached winner for this shape if one exists, else the seeded default;
     a one-off candidate sweep when tuning is enabled on concrete arrays).
+    The cached tuple's 4th field is the pipeline depth: 1 = grid-K (the
+    compiler's automatic double-buffering), >= 2 = the hand-rolled DMA ring
+    in :func:`~.dense_matmul.dense_matmul_pipelined_kernel`; ``pipeline``
+    pins it explicitly.
     """
     interpret = interpret_default() if interpret is None else interpret
     x2, lead = _flatten_batch(x)
@@ -361,32 +432,34 @@ def matmul(
     if block_m is None and block_n is None and block_k is None:
         runner = None
         if _TUNING.enabled and _concrete(x2, w, bias, *sides2):
-            runner = lambda bm, bn, bk: _matmul_blocked(
-                x2, w, bias, activation, bm, bn, bk, interpret, epilogue, sides2
+            runner = lambda bm, bn, bk, depth=1: _matmul_blocked(
+                x2, w, bias, activation, bm, bn, bk, interpret, epilogue,
+                sides2, pipeline if pipeline is not None else depth,
             )
         # an epilogue'd GEMM streams extra per-tile sides (different VMEM
         # pressure): never let its swept winner alias the plain GEMM's
         fmt = (
             f"{_format}+e{len(epilogue)}s{len(sides2)}" if epilogue else _format
         )
-        block_m, block_n, block_k = _TUNING.resolve(
+        block_m, block_n, block_k, depth = _blocks4(_TUNING.resolve(
             "matmul", m, n, k, x2.dtype, fmt, interpret, runner
-        )
+        ))
+        pipeline = depth if pipeline is None else pipeline
     elif block_m is None or block_n is None or block_k is None:
         # partially pinned: fill from defaults, never from the cache -- a
         # swept winner for the free dims was timed with different pins
-        dm, dn, dk = TuningCache.DEFAULTS["matmul"]
+        dm, dn, dk, _ = TuningCache.DEFAULTS["matmul"]
         block_m, block_n, block_k = block_m or dm, block_n or dn, block_k or dk
     out = _matmul_blocked(
         x2, w, bias, activation, block_m, block_n, block_k, interpret,
-        epilogue, sides2,
+        epilogue, sides2, pipeline or 1,
     )
     return out.reshape(*lead, n)
 
 
 def _qmatmul_blocked(
     x2, w_q, w_scale, bias, activation, block_m, block_n, block_k, interpret,
-    epilogue=(), sides=(),
+    epilogue=(), sides=(), pipeline=1,
 ):
     m, k = x2.shape
     n = w_q.shape[1]
@@ -406,6 +479,7 @@ def _qmatmul_blocked(
         block_m=block_m,
         block_n=block_n,
         block_k=block_k,
+        pipeline=pipeline,
         interpret=interpret,
     )[:m, :n]
 
@@ -423,6 +497,7 @@ def qmatmul(
     block_m: Optional[int] = None,
     block_n: Optional[int] = None,
     block_k: Optional[int] = None,
+    pipeline: Optional[int] = None,
     interpret: Optional[bool] = None,
     _format: str = "dense",
 ) -> jax.Array:
@@ -463,22 +538,23 @@ def qmatmul(
     if block_m is None and block_n is None and block_k is None:
         runner = None
         if _TUNING.enabled and _concrete(x2, w_q, w_scale, bias, *sides2):
-            runner = lambda bm, bn, bk: _qmatmul_blocked(
+            runner = lambda bm, bn, bk, depth=1: _qmatmul_blocked(
                 x2, w_q, w_scale, bias, activation, bm, bn, bk, interpret,
-                epilogue, sides2,
+                epilogue, sides2, pipeline if pipeline is not None else depth,
             )
         fmt = f"{_format}+{scheme}"
         if epilogue:
             fmt += f"+e{len(epilogue)}s{len(sides2)}"
-        block_m, block_n, block_k = _TUNING.resolve(
+        block_m, block_n, block_k, depth = _blocks4(_TUNING.resolve(
             "qmatmul", m, n, k, x2.dtype, fmt, interpret, runner
-        )
+        ))
+        pipeline = depth if pipeline is None else pipeline
     elif block_m is None or block_n is None or block_k is None:
-        dm, dn, dk = TuningCache.DEFAULTS["qmatmul"]
+        dm, dn, dk, _ = TuningCache.DEFAULTS["qmatmul"]
         block_m, block_n, block_k = block_m or dm, block_n or dn, block_k or dk
     out = _qmatmul_blocked(
         x2, w_q, w_scale, bias, activation, block_m, block_n, block_k,
-        interpret, epilogue, sides2,
+        interpret, epilogue, sides2, pipeline or 1,
     )
     return out.reshape(*lead, n)
 
@@ -497,6 +573,12 @@ _CONV_VMEM_LIMIT = 12 * 2**20
 #: degenerate output / VMEM overflow).  Counted at trace time under jit.
 _CONV_FALLBACKS: Dict[str, int] = {}
 
+#: scheme -> count of conv2d calls elected onto the 1x1 direct-GEMM fast
+#: path (im2col bypassed, lowered to dense/quant matmul).  Counted at trace
+#: time under jit, exactly like the fallback matrix -- an election is a
+#: lowering decision, not a fallback.
+_CONV_FASTPATHS: Dict[str, int] = {}
+
 
 def conv_fallback_counts() -> Dict[str, int]:
     """Copy of the conv2d fallback counters (reason -> count) -- the
@@ -506,6 +588,33 @@ def conv_fallback_counts() -> Dict[str, int]:
 
 def reset_conv_fallbacks() -> None:
     _CONV_FALLBACKS.clear()
+
+
+def conv_fastpath_counts() -> Dict[str, int]:
+    """Copy of the 1x1 direct-GEMM election counters (scheme -> count)."""
+    return dict(_CONV_FASTPATHS)
+
+
+def reset_conv_fastpaths() -> None:
+    _CONV_FASTPATHS.clear()
+
+
+def conv_gemm1x1_elected(kh: int, kw: int, groups: int, padding, c: int) -> bool:
+    """True when a conv lowers through the 1x1 direct-GEMM fast path: unit
+    taps, ungrouped, live input channels, and padding that adds no border
+    (SAME == VALID for 1x1 taps; explicit pads must be all-zero).  Dilation
+    is irrelevant for a unit tap, so it never blocks election.  Shared by
+    :func:`conv2d` and :meth:`ExecutionPlan.memory_estimate` (an elected
+    step owns no conv-kernel VMEM workspace)."""
+    if kh != 1 or kw != 1 or groups != 1 or c <= 0:
+        return False
+    if isinstance(padding, str):
+        return padding in ("SAME", "VALID")
+    try:
+        (a, b), (c2, d) = padding
+        return int(a) == int(b) == int(c2) == int(d) == 0
+    except (TypeError, ValueError):
+        return False
 
 
 def conv_fallback_reason(
@@ -524,13 +633,18 @@ def conv_fallback_reason(
     w_itemsize: int = 4,
     block_h: Optional[int] = None,
     block_o: Optional[int] = None,
+    block_c: Optional[int] = None,
 ) -> Optional[str]:
     """The conv2d fallback matrix, shared by the :func:`conv2d` wrapper and
     :meth:`ExecutionPlan.memory_estimate` (a step that lowers through
     lax.conv has no Pallas VMEM workspace).  ``c`` is the *contracted*
-    channel count.  The VMEM guard evaluates the largest blocks the tuning
-    cache could resolve (pinned values, else the biggest sweep candidate):
-    a swept winner must never overshoot the limit the guard enforces."""
+    channel count.  The VMEM guard asks whether any resolvable configuration
+    fits: pinned blocks are honored verbatim; otherwise it evaluates the
+    default (block_h, block_o) at the most frugal K granularity available --
+    the smallest non-zero ``block_c`` sweep candidate (tiled-K caps the
+    resident slab, so wide-channel layers no longer trip the guard; sweep
+    candidates that individually overflow fail to compile and are skipped
+    by the sweep's try/except)."""
     if groups != 1:
         return "groups"
     if dilation != 1:
@@ -549,15 +663,65 @@ def conv_fallback_reason(
     if oh < 1 or ow < 1:
         return "degenerate"
     if not interpret:
-        bh = block_h or max(cand[0] for cand in TuningCache.CANDIDATES["conv2d"])
-        bo = block_o or max(cand[1] for cand in TuningCache.CANDIDATES["conv2d"])
-        wsb = conv_vmem_workspace(
-            c, h, w, kh, kw, stride, padding, bh, bo,
-            x_itemsize=x_itemsize, w_itemsize=w_itemsize,
+        dh, do_, _ = TuningCache.DEFAULTS["conv2d"]
+        bh = block_h or dh
+        bo = block_o or do_
+        if block_c is not None:
+            c_options = [block_c]
+        else:
+            # resident first (cheapest when it fits), then the smallest
+            # tiled-K granularity the sweep could resolve
+            tiled = [
+                cand[2] for cand in TuningCache.CANDIDATES["conv2d"]
+                if len(cand) > 2 and cand[2]
+            ]
+            c_options = [0] + ([min(tiled)] if tiled else [])
+        fits = any(
+            conv_vmem_workspace(
+                c, h, w, kh, kw, stride, padding, bh, bo, bc,
+                x_itemsize=x_itemsize, w_itemsize=w_itemsize,
+            )["total"] <= _CONV_VMEM_LIMIT
+            for bc in c_options
         )
-        if wsb["total"] > _CONV_VMEM_LIMIT:
+        if not fits:
             return "vmem"
     return None
+
+
+def _conv_default_blocks(
+    c: int,
+    h: int,
+    w: int,
+    kh: int,
+    kw: int,
+    stride: int,
+    padding,
+    x_itemsize: int,
+    w_itemsize: int,
+    interpret: bool,
+) -> Tuple[int, int, int]:
+    """Shape-aware conv default: the seeded (block_h, block_o) with the
+    cheapest K granularity that fits VMEM -- resident when possible, else
+    the largest fitting tiled-K candidate (fewer grid steps), else the
+    smallest.  Interpret mode has no VMEM, so it always stays resident."""
+    dh, do_, _ = TuningCache.DEFAULTS["conv2d"]
+    if interpret:
+        return (dh, do_, 0)
+    tiled = sorted(
+        {
+            cand[2] for cand in TuningCache.CANDIDATES["conv2d"]
+            if len(cand) > 2 and cand[2]
+        },
+        reverse=True,
+    )
+    for bc in (0, *tiled):
+        total = conv_vmem_workspace(
+            c, h, w, kh, kw, stride, padding, dh, do_, bc,
+            x_itemsize=x_itemsize, w_itemsize=w_itemsize,
+        )["total"]
+        if total <= _CONV_VMEM_LIMIT:
+            return (dh, do_, bc)
+    return (dh, do_, min(tiled) if tiled else 0)  # guard rejects this case
 
 
 def _conv2d_fallback(
@@ -584,6 +748,45 @@ def _conv2d_fallback(
     return y.astype(x.dtype)
 
 
+def _conv2d_1x1_gemm(
+    x, w, bias, *, stride, kept, w_scale, x_scale, activation, epilogue,
+    sides, interpret, fmt, is_q,
+):
+    """The 1x1 direct-GEMM fast path: a unit-tap conv with no border padding
+    is ``y[n, :, i, j] = W @ x[n, :, i*s, j*s]`` -- a plain GEMM over the
+    ``N*OH*OW`` pixel axis.  The NCHW tensor is reshaped NHWC -> [pixels, C]
+    (strides subsample the grid first; SAME and VALID coincide for 1x1
+    taps), the OIHW filter collapses to [C, O], and the conv's whole fused
+    program -- bias, activation, epilogue steps with their side operands --
+    rides the dense/quant matmul kernel unchanged.  Keys under the
+    ``conv1x1.{fmt}`` matmul-family format, never aliasing a plain GEMM's
+    winner (the pixel-axis M has different tuning pressure)."""
+    if kept is not None:
+        x = jnp.take(x, kept, axis=1)
+    if stride > 1:
+        x = x[:, :, ::stride, ::stride]
+    nb, c, oh, ow = x.shape
+    o = w.shape[0]
+    assert w.shape[1] == c, (w.shape, c)
+    for s in sides:
+        assert s.shape == (nb, o, oh, ow), (s.shape, (nb, o, oh, ow))
+    xm = x.transpose(0, 2, 3, 1).reshape(nb * oh * ow, c)
+    wm = w.reshape(o, c).T  # OIHW unit taps -> [C, O]
+    sm = [s.transpose(0, 2, 3, 1).reshape(nb * oh * ow, o) for s in sides]
+    if is_q:
+        y = qmatmul(
+            xm, wm, w_scale, bias, x_scale=x_scale, activation=activation,
+            epilogue=epilogue, epilogue_sides=sm, interpret=interpret,
+            _format=f"conv1x1.{fmt}",
+        )
+    else:
+        y = matmul(
+            xm, wm, bias, activation=activation, epilogue=epilogue,
+            epilogue_sides=sm, interpret=interpret, _format=f"conv1x1.{fmt}",
+        )
+    return y.reshape(nb, oh, ow, o).transpose(0, 3, 1, 2)
+
+
 def conv2d(
     x: jax.Array,
     w: jax.Array,
@@ -601,6 +804,8 @@ def conv2d(
     epilogue_sides: Sequence[jax.Array] = (),
     block_h: Optional[int] = None,
     block_o: Optional[int] = None,
+    block_c: Optional[int] = None,
+    gemm_1x1: bool = True,
     interpret: Optional[bool] = None,
     _format: Optional[str] = None,
 ) -> jax.Array:
@@ -623,17 +828,32 @@ def conv2d(
     ``("add"|"mul", slot)`` into ``epilogue_sides``, each shaped like the
     NCHW output), run on the f32 accumulator inside the kernel.
 
+    **1x1 fast path** (:func:`conv_gemm1x1_elected`, counted per scheme in
+    :func:`conv_fastpath_counts`): a unit-tap ungrouped conv with no border
+    padding is exactly a GEMM over the pixel axis -- im2col is bypassed and
+    the call lowers to :func:`matmul` / :func:`qmatmul` (NHWC reshape;
+    strides become a spatial subsample) with the conv's full epilogue
+    program, keyed under the ``conv1x1.{fmt}`` matmul-family format.
+    Election happens at lowering time, before the fallback matrix; pinning
+    any conv block size or ``gemm_1x1=False`` opts back into the im2col
+    kernel.
+
     Fallback matrix (auto-routed through ``lax.conv``, bit-identical math,
     counted in :func:`conv_fallback_counts`): ``groups != 1``,
     ``dilation != 1``, malformed/negative explicit padding, degenerate
     output (``OH*OW < 1``), or -- on real hardware only -- a per-step VMEM
-    working set above ~12 MB (the padded image is tile-resident) at the
-    largest blocks the tuning cache could resolve.
+    working set above ~12 MB at every resolvable K granularity (tiled-K
+    caps the resident slab at ``block_c`` channels, so only pathological
+    spatial extents still trip this).
 
     Block sizes left as ``None`` resolve through the tuning cache under the
     ``conv2d|NxCxHxWxOxKHxKWxS|{dtype}|{fmt}+{scheme}[+valid|+p..][+e..s..]|{mode}``
-    key family (``(block_h, block_o)``: output rows x output channels per
-    tile; SAME -- the canonical geometry -- keys without a padding suffix).
+    key family (``(block_h, block_o, block_c)``: output rows x output
+    channels per tile, plus the tiled-K channel granularity -- 0 keeps the
+    whole image resident, else ``block_k = block_c*kh*kw`` of the GEMM K
+    streams per grid step; SAME -- the canonical geometry -- keys without a
+    padding suffix).  The default is shape-aware: resident when the working
+    set fits VMEM, else the largest fitting ``block_c`` candidate.
     """
     interpret = interpret_default() if interpret is None else interpret
     epilogue = tuple(tuple(s) for s in epilogue)
@@ -647,12 +867,25 @@ def conv2d(
         raise ValueError("x_scale (W8A8) requires int8 weights")
     scheme = "f32" if not is_q else ("w8a8" if x_scale is not None else "w8")
     fmt = _format or ("channelcompact" if kept is not None else "dense")
+    c_live = int(kept.shape[0]) if kept is not None else c_in
+    if (
+        gemm_1x1
+        and block_h is None and block_o is None and block_c is None
+        and conv_gemm1x1_elected(kh, kw_, groups, padding, c_live)
+    ):
+        _CONV_FASTPATHS[scheme] = _CONV_FASTPATHS.get(scheme, 0) + 1
+        return _conv2d_1x1_gemm(
+            x, w, bias, stride=stride, kept=kept, w_scale=w_scale,
+            x_scale=x_scale, activation=activation, epilogue=epilogue,
+            sides=sides, interpret=interpret, fmt=fmt, is_q=is_q,
+        )
     reason = conv_fallback_reason(
-        int(kept.shape[0]) if kept is not None else c_in,
+        c_live,
         h, w_in, kh, kw_, stride, padding,
         groups=groups, dilation=dilation, interpret=interpret,
         x_itemsize=1 if scheme == "w8a8" else x.dtype.itemsize,
         w_itemsize=w.dtype.itemsize, block_h=block_h, block_o=block_o,
+        block_c=block_c,
     )
     if reason is not None:
         _CONV_FALLBACKS[reason] = _CONV_FALLBACKS.get(reason, 0) + 1
@@ -695,7 +928,7 @@ def conv2d(
         out_dtype = jnp.float32
     pt, pl_ = conv_pad_hw(h, w_in, kh, kw_, stride, padding)
 
-    def run(bh, bo):
+    def run(bh, bo, bc=0):
         ohp = -(-oh // bh) * bh
         hpad = (ohp - 1) * stride + kh
         wpad = (ow - 1) * stride + kw_
@@ -709,7 +942,13 @@ def conv2d(
             x2.transpose(0, 2, 3, 1)[:, :h_used, :w_used],
             ((0, 0), (pt, hpad - pt - h_used), (pl_, wpad - pl_ - w_used), (0, 0)),
         )
-        wt = _pad_axis(w.transpose(2, 3, 1, 0).reshape(kh * kw_, c, o), bo, 2)
+        wt = w.transpose(2, 3, 1, 0).reshape(kh * kw_, c, o)
+        if bc:
+            # tiled-K: zero-pad channels to a block_c multiple (zero slabs
+            # contribute nothing to the accumulator, int8 included)
+            xt = _pad_axis(xt, bc, 3)
+            wt = _pad_axis(wt, bc, 1)
+        wt = _pad_axis(wt, bo, 2)
         op_ = wt.shape[2]
         wsp = None if ws_vec is None else _pad_axis(ws_vec, bo, 0)
         bp = None if bias is None else _pad_axis(bias, bo, 0)
@@ -724,13 +963,14 @@ def conv2d(
             xt, wt, wsp, bp, *sp,
             stride=stride, kh=kh, kw=kw_,
             activation=activation, epilogue=epilogue,
-            block_h=bh, block_o=bo, interpret=interpret, out_dtype=out_dtype,
+            block_h=bh, block_o=bo, block_c=bc,
+            interpret=interpret, out_dtype=out_dtype,
         )
         return (
             out2.reshape(nb, ohp, ow, op_)[:, :oh, :, :o].transpose(0, 3, 1, 2)
         )
 
-    if block_h is None and block_o is None:
+    if block_h is None and block_o is None and block_c is None:
         runner = None
         if _TUNING.enabled and _concrete(x2, w, bias, w_scale, *sides):
             runner = run
@@ -739,14 +979,20 @@ def conv2d(
         fmtkey = f"{fmt}+{scheme}" + conv_padding_token(padding)
         if epilogue:
             fmtkey += f"+e{len(epilogue)}s{len(sides)}"
-        block_h, block_o = _TUNING.resolve_nd(
+        x_item = 1 if scheme == "w8a8" else x.dtype.itemsize
+        block_h, block_o, block_c = _conv_blocks3(_TUNING.resolve_nd(
             "conv2d", (nb, c, h, w_in, o, kh, kw_, stride), x2.dtype, fmtkey,
             interpret, runner,
-        )
-    elif block_h is None or block_o is None:
-        dh, do_ = TuningCache.DEFAULTS["conv2d"]
+            default=_conv_default_blocks(
+                c, h, w_in, kh, kw_, stride, padding, x_item,
+                w.dtype.itemsize, interpret,
+            ),
+        ))
+    elif block_h is None or block_o is None or block_c is None:
+        dh, do_, dc = TuningCache.DEFAULTS["conv2d"]
         block_h, block_o = block_h or dh, block_o or do_
-    return run(block_h, block_o)
+        block_c = dc if block_c is None else block_c
+    return run(block_h, block_o, block_c)
 
 
 def fused_elementwise(
@@ -803,8 +1049,15 @@ def fused_elementwise(
         # side/norm counts change per-tile VMEM residency: same-shape
         # programs with different operand counts must not share a winner
         fmt = f"ew+s{len(sides)}n{len(norm_params)}"
+        # interpret mode pays ~1 ms of Python per grid step, which swamps
+        # this memory-bound kernel at the 128-row default (the 0.13x/0.50x
+        # regression profiled in BENCH_fusion.json): seed a single full-M
+        # tile there -- one grid step -- and keep the VMEM-sized 128-row
+        # default for real hardware
+        default = ((-(-m // 8) * 8,) if interpret else None)
         (block_m,) = _TUNING.resolve(
-            "fused_elementwise", m, d, len(steps), x2.dtype, fmt, interpret, runner
+            "fused_elementwise", m, d, len(steps), x2.dtype, fmt, interpret,
+            runner, default=default,
         )
     return run(block_m).reshape(x.shape)
 

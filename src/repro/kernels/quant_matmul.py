@@ -28,6 +28,15 @@ Grid: ``(M/bm, N/bn, K/bk)``, K innermost so the accumulator lives across the
 contraction.  The :func:`repro.kernels.ops.qmatmul` wrapper pads/rakes and
 resolves block sizes through the tuning cache under the ``qmatmul`` key
 family.  int8 min tile is (32, 128) -- every candidate block is a multiple.
+
+``pipeline >= 2`` selects the hand-rolled double-buffered variant (grid
+``(M/bm, N/bn)``, x/w left in HBM, K-slabs streamed through a ring of VMEM
+scratch buffers with explicit async DMAs, the next slab's copy overlapping
+the current contraction) -- see :mod:`.dense_matmul` for the lifecycle; here
+the loop carry is int32 for W8A8 and the int8 weight slab still dequantizes
+in VMEM for W8-only.  The int8 streams make this the kernel where manual
+staging matters most: a depth-2 ring holds ``2 * bk * (bm + bn)`` int8
+bytes, a quarter of the f32 footprint.
 """
 
 from __future__ import annotations
@@ -43,7 +52,11 @@ from jax.experimental.pallas import tpu as pltpu
 from .dense_matmul import _ACTIVATIONS, apply_epilogue_steps, validate_epilogue
 from .pallas_compat import tpu_compiler_params as _tpu_compiler_params
 
-__all__ = ["quant_matmul_kernel", "quant_matmul"]
+__all__ = [
+    "quant_matmul_kernel",
+    "quant_matmul_pipelined_kernel",
+    "quant_matmul",
+]
 
 
 def quant_matmul_kernel(
@@ -88,11 +101,85 @@ def quant_matmul_kernel(
         o_ref[...] = acc.astype(o_ref.dtype)
 
 
+def quant_matmul_pipelined_kernel(
+    x_hbm,  # [bm, K] int8 (W8A8) or f32 (W8-only) row panel in HBM
+    w_hbm,  # [K, bn] int8 column panel in HBM
+    ws_ref,  # [1, bn] f32 combined rescale per output column
+    b_ref,
+    side_refs,
+    o_ref,
+    x_slots,  # VMEM [depth, bm, bk] ring of streamed x K-slabs
+    w_slots,  # VMEM [depth, bk, bn] int8 ring of streamed w K-slabs
+    sem,  # DMA semaphores [depth, 2] (slot x {x, w})
+    *,
+    block_k: int,
+    n_steps: int,
+    depth: int,
+    activation: Optional[str],
+    epilogue: Tuple[Tuple, ...] = (),
+):
+    """One (i, j) grid step of the hand-pipelined INT8 GEMM: K contracted by
+    an in-kernel loop over slabs streamed through a ``depth``-deep ring, the
+    DMA for slab ``s + depth - 1`` issued before slab ``s`` is awaited.  The
+    accumulator is the loop carry (int32 for W8A8, f32 for W8-only); the
+    per-column rescale + epilogue run once after the loop."""
+    a8 = jnp.issubdtype(x_hbm.dtype, jnp.integer)
+
+    def copies(slot, step):
+        return (
+            pltpu.make_async_copy(
+                x_hbm.at[:, pl.ds(step * block_k, block_k)],
+                x_slots.at[slot],
+                sem.at[slot, 0],
+            ),
+            pltpu.make_async_copy(
+                w_hbm.at[pl.ds(step * block_k, block_k), :],
+                w_slots.at[slot],
+                sem.at[slot, 1],
+            ),
+        )
+
+    for p in range(min(depth - 1, n_steps)):  # warm-up: fill the ring
+        for c in copies(p, p):
+            c.start()
+
+    def body(step, acc):
+        ahead = step + depth - 1
+
+        @pl.when(ahead < n_steps)
+        def _prefetch():
+            for c in copies(jax.lax.rem(ahead, depth), ahead):
+                c.start()
+
+        slot = jax.lax.rem(step, depth)
+        for c in copies(slot, step):
+            c.wait()
+        if a8:
+            return acc + jnp.dot(
+                x_slots[slot], w_slots[slot], preferred_element_type=jnp.int32
+            )
+        return acc + jnp.dot(
+            x_slots[slot], w_slots[slot].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+    acc = jax.lax.fori_loop(
+        0, n_steps, body,
+        jnp.zeros(o_ref.shape, jnp.int32 if a8 else jnp.float32),
+    )
+    acc = acc.astype(jnp.float32) * ws_ref[...].astype(jnp.float32)
+    if b_ref is not None:
+        acc = acc + b_ref[...].astype(jnp.float32)
+    acc = _ACTIVATIONS[activation](acc)
+    acc = apply_epilogue_steps(acc, epilogue, side_refs)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "activation", "epilogue", "block_m", "block_n", "block_k", "interpret",
-        "out_dtype",
+        "activation", "epilogue", "block_m", "block_n", "block_k", "pipeline",
+        "interpret", "out_dtype",
     ),
 )
 def quant_matmul(
@@ -106,6 +193,7 @@ def quant_matmul(
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 128,
+    pipeline: int = 1,
     interpret: bool = False,
     out_dtype=jnp.float32,
 ) -> jax.Array:
@@ -113,6 +201,8 @@ def quant_matmul(
     operands.  ``x`` int8 selects the W8A8 int32 path (``w_scale`` must
     already fold the activation scale in); f32 ``x`` selects the W8-only
     per-tile-dequantize path.  ``w_q [K, N]`` int8, ``w_scale [N]`` f32.
+    ``pipeline >= 2`` selects the hand-rolled double-buffered K streaming
+    path (that many VMEM slab slots in flight).
 
     Use :func:`repro.kernels.ops.qmatmul` for the padded/raked public API.
     """
@@ -130,39 +220,78 @@ def quant_matmul(
     for s in sides:
         assert s.shape == (m, n), (s.shape, (m, n))
     a8 = jnp.issubdtype(x.dtype, jnp.integer)
-    grid = (m // block_m, n // block_n, k // block_k)
-
-    in_specs = [
-        pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
-        pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
-        pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
-    ]
+    pipelined = pipeline >= 2
+    if pipelined:
+        grid = (m // block_m, n // block_n)
+        any_space = pltpu.TPUMemorySpace.ANY
+        in_specs = [
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0), memory_space=any_space),
+            pl.BlockSpec((k, block_n), lambda i, j: (0, j), memory_space=any_space),
+            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+        ]
+        bias_tile = pl.BlockSpec((1, block_n), lambda i, j: (0, j))
+        out_tile = pl.BlockSpec((block_m, block_n), lambda i, j: (i, j))
+        scratch = [
+            pltpu.VMEM((pipeline, block_m, block_k), x.dtype),
+            pltpu.VMEM((pipeline, block_k, block_n), w_q.dtype),
+            pltpu.SemaphoreType.DMA((pipeline, 2)),
+        ]
+        semantics = ("parallel", "parallel")
+    else:
+        grid = (m // block_m, n // block_n, k // block_k)
+        in_specs = [
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+        ]
+        bias_tile = pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j))
+        out_tile = pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j))
+        scratch = [pltpu.VMEM((block_m, block_n), jnp.int32 if a8 else jnp.float32)]
+        semantics = ("parallel", "parallel", "arbitrary")
     args = [x, w_q, w_scale.reshape(1, n).astype(jnp.float32)]
     has_bias = bias is not None
     if has_bias:
         assert bias.shape == (n,), bias.shape
-        in_specs.append(pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)))
+        in_specs.append(bias_tile)
         args.append(bias.reshape(1, n))
-    out_tile = pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j))
     in_specs.extend([out_tile] * len(sides))
     args.extend(sides)
     n_sides = len(sides)
 
     def kern(*refs):
-        # refs: x, w_q, ws, [bias], *sides, o, acc
+        # refs: x, w_q, ws, [bias], *sides, o, then scratch
         b_ref = refs[3] if has_bias else None
         first_side = 3 + int(has_bias)
-        quant_matmul_kernel(
-            refs[0],
-            refs[1],
-            refs[2],
-            b_ref,
-            refs[first_side : first_side + n_sides],
-            refs[-2],
-            refs[-1],
-            activation=activation,
-            epilogue=epilogue,
-        )
+        side_refs = refs[first_side : first_side + n_sides]
+        if pipelined:
+            quant_matmul_pipelined_kernel(
+                refs[0],
+                refs[1],
+                refs[2],
+                b_ref,
+                side_refs,
+                refs[-4],
+                refs[-3],
+                refs[-2],
+                refs[-1],
+                block_k=block_k,
+                n_steps=k // block_k,
+                depth=pipeline,
+                activation=activation,
+                epilogue=epilogue,
+            )
+        else:
+            quant_matmul_kernel(
+                refs[0],
+                refs[1],
+                refs[2],
+                b_ref,
+                side_refs,
+                refs[-2],
+                refs[-1],
+                activation=activation,
+                epilogue=epilogue,
+            )
 
     return pl.pallas_call(
         kern,
@@ -170,11 +299,9 @@ def quant_matmul(
         in_specs=in_specs,
         out_specs=out_tile,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[
-            pltpu.VMEM((block_m, block_n), jnp.int32 if a8 else jnp.float32)
-        ],
+        scratch_shapes=scratch,
         compiler_params=_tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
+            dimension_semantics=semantics
         ),
         interpret=interpret,
     )(*args)

@@ -19,6 +19,8 @@ Examples::
       --out results/tuning_style.json
   PYTHONPATH=src python -m repro.launch.tune --graph-app all --quantize \
       --smoke                                   # CI-sized, CPU-safe
+  PYTHONPATH=src python -m repro.launch.tune --graph-app coloring \
+      --ops conv2d,qmatmul --smoke              # sweep only two key families
 """
 
 from __future__ import annotations
@@ -84,6 +86,10 @@ def main() -> None:
                     help="also sweep the INT8 plan (qmatmul / int8 conv keys)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes for CPU/CI (sweeps interpret-mode keys)")
+    ap.add_argument("--ops", default=None,
+                    help="comma-separated key families to sweep (e.g. "
+                         "'conv2d,qmatmul'); other families resolve to "
+                         "defaults without sweeping")
     ap.add_argument("--out", default=None,
                     help="cache JSON path (default: REPRO_TUNE_CACHE or "
                          "results/tuning_cache.json)")
@@ -93,6 +99,10 @@ def main() -> None:
 
     cache = kops.tuning_cache()
     cache.enabled = True
+    if args.ops:
+        cache.ops_filter = frozenset(
+            op.strip() for op in args.ops.split(",") if op.strip()
+        )
     apps = (
         ["style_transfer", "coloring", "super_resolution"]
         if args.graph_app == "all" else [args.graph_app]
@@ -101,6 +111,7 @@ def main() -> None:
         _sweep_app(app, args)
 
     print(cache.report())
+    print(cache.stats_report())
     out = args.out or os.environ.get("REPRO_TUNE_CACHE") or os.path.join(
         "results", "tuning_cache.json"
     )

@@ -56,12 +56,16 @@ def _in_params(c, dtype=jnp.float32):
 
 
 def build_style_transfer(key: Array, base: int = 32, n_res: int = 5) -> Graph:
-    """conv9-IN-relu, 2x downsample conv3 s2, n_res residual blocks, 2x
-    upsample, conv9-out.  Input [N, 3, H, W]."""
+    """conv7-IN-relu, 2x downsample conv3 s2, n_res residual blocks (1x1
+    entry conv + 3x3 body, MSG-Net bottleneck style -- the 1x1 lowers through
+    the direct-GEMM conv fast path), 2x upsample, conv7-out (mobile-sized
+    7x7 stem: the stem convs stay f32 under the quantize pass, so their
+    weight mass bounds the plan's INT8 compression ratio).
+    Input [N, 3, H, W]."""
     keys = iter(jax.random.split(key, 64))
     b = GraphBuilder(["x"])
     h = b.add("conv2d", "x", name="conv_in",
-              params=_conv_params(next(keys), base, 3, 9), stride=1)
+              params=_conv_params(next(keys), base, 3, 7), stride=1)
     h = b.add("norm", h, name="in_in", params=_in_params(base), kind="instance")
     h = b.add("activation", h, name="act_in", fn="relu")
     c = base
@@ -73,7 +77,7 @@ def build_style_transfer(key: Array, base: int = 32, n_res: int = 5) -> Graph:
         c *= 2
     for i in range(n_res):  # residual blocks
         r = b.add("conv2d", h, name=f"res{i}_c1",
-                  params=_conv_params(next(keys), c, c, 3))
+                  params=_conv_params(next(keys), c, c, 1))
         r = b.add("norm", r, name=f"res{i}_n1", params=_in_params(c), kind="instance")
         r = b.add("activation", r, name=f"res{i}_a1", fn="relu")
         r = b.add("conv2d", r, name=f"res{i}_c2",
@@ -87,7 +91,7 @@ def build_style_transfer(key: Array, base: int = 32, n_res: int = 5) -> Graph:
         h = b.add("norm", h, name=f"up{i}_in", params=_in_params(c // 2), kind="instance")
         h = b.add("activation", h, name=f"up{i}_act", fn="relu")
         c //= 2
-    out = b.add("conv2d", h, name="conv_out", params=_conv_params(next(keys), 3, c, 9))
+    out = b.add("conv2d", h, name="conv_out", params=_conv_params(next(keys), 3, c, 7))
     return b.build(out)
 
 
@@ -145,16 +149,18 @@ def build_coloring(key: Array, base: int = 32) -> Graph:
 
 
 def build_super_resolution(
-    key: Array, base: int = 32, n_res: int = 8, expand: int = 4, scale: int = 2
+    key: Array, base: int = 32, n_res: int = 8, expand: int = 6, scale: int = 2
 ) -> Graph:
-    """Wide-activation residual body + pixel shuffle.  Input [N, 3, H, W]."""
+    """Wide-activation residual body + pixel shuffle.  Input [N, 3, H, W].
+    Blocks are WDSR-B style: 1x1 expand (direct-GEMM conv fast path) ->
+    relu -> 3x3 project, with the wider x6 expansion the 1x1 makes cheap."""
     keys = iter(jax.random.split(key, 64))
     b = GraphBuilder(["x"])
     h = b.add("conv2d", "x", name="head", params=_conv_params(next(keys), base, 3, 3))
     body_in = h
     for i in range(n_res):
         r = b.add("conv2d", h, name=f"res{i}_expand",
-                  params=_conv_params(next(keys), base * expand, base, 3))
+                  params=_conv_params(next(keys), base * expand, base, 1))
         r = b.add("activation", r, name=f"res{i}_act", fn="relu")
         r = b.add("conv2d", r, name=f"res{i}_project",
                   params=_conv_params(next(keys), base, base * expand, 3))

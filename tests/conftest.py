@@ -33,10 +33,13 @@ def snapshot_global_state():
     cache = kops.tuning_cache()
     return {
         "conv_fallbacks": kops.conv_fallback_counts(),  # already a copy
+        "conv_fastpaths": kops.conv_fastpath_counts(),  # already a copy
         "tune_entries": dict(cache.entries),
         "tune_enabled": cache.enabled,
         "tune_sweeps": cache.sweeps,
         "tune_path": cache.path,
+        "tune_ops_filter": cache.ops_filter,
+        "tune_stats": {op: dict(s) for op, s in cache.stats.items()},
     }
 
 
@@ -45,11 +48,15 @@ def restore_global_state(snap) -> None:
     a merge: entries/counters added since the snapshot are discarded)."""
     kops.reset_conv_fallbacks()
     kops._CONV_FALLBACKS.update(snap["conv_fallbacks"])
+    kops.reset_conv_fastpaths()
+    kops._CONV_FASTPATHS.update(snap["conv_fastpaths"])
     cache = kops.tuning_cache()
     cache.entries = dict(snap["tune_entries"])
     cache.enabled = snap["tune_enabled"]
     cache.sweeps = snap["tune_sweeps"]
     cache.path = snap["tune_path"]
+    cache.ops_filter = snap["tune_ops_filter"]
+    cache.stats = {op: dict(s) for op, s in snap["tune_stats"].items()}
 
 
 @pytest.fixture(autouse=True)

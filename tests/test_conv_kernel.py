@@ -401,3 +401,165 @@ def test_app_kernel_plans_lower_all_convs_through_pallas(app):
     assert kops.conv_fallback_counts() == {}, kops.conv_fallback_counts()
     want = compile_plan(go, backend="reference")(go.params, x)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
+# PR 6: tiled-K contraction + 1x1 direct-GEMM fast path                        #
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("block_c", [0, 2, 4])
+def test_conv_tiled_k_matches_resident_and_oracle(block_c):
+    """Pinning block_c > 0 streams K in channel slabs through the cross-step
+    accumulator; the result is at tolerance with both the resident full-K
+    path (block_c=0) and the lax oracle."""
+    x, wt, b = _conv_case(2, 6, 11, 13, 8, 3)
+    got = kops.conv2d(x, wt, b, activation="relu",
+                      block_h=8, block_o=128, block_c=block_c)
+    want = ref.conv2d_ref(x, wt, b, activation="relu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("scheme", ["w8", "w8a8"])
+def test_conv_tiled_k_int8_schemes_match_oracle(scheme):
+    """block_c slabs accumulate in int32 for w8a8 (channel zero-padding
+    contributes exact zeros) and f32 for w8-dequant."""
+    x, wt, b = _conv_case(1, 6, 10, 10, 8, 3)
+    qt = QTensor.from_float(wt, axis=0)
+    xs = float(jnp.max(jnp.abs(x))) / 127.0 if scheme == "w8a8" else None
+    got = kops.conv2d(x, qt.values, b, w_scale=qt.scale, x_scale=xs,
+                      block_h=8, block_o=128, block_c=2)
+    want = ref.qconv2d_ref(x, qt.values, qt.scale, b, x_scale=xs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_conv_tiled_k_epilogue_runs_on_last_step_only():
+    """The epilogue (bias/activation/steps) must fire exactly once, on the
+    final K step, over the accumulated sum -- not per slab."""
+    x, wt, b = _conv_case(1, 4, 9, 9, 6, 3)
+    side = jax.random.normal(jax.random.PRNGKey(3), (1, 6, 9, 9))
+    steps = (("add", 0), ("activation", "gelu"))
+    got = kops.conv2d(x, wt, b, epilogue=steps, epilogue_sides=(side,),
+                      block_h=8, block_o=128, block_c=2)
+    want = ref.apply_steps_ref(
+        ref.conv2d_ref(x, wt, b, out_dtype=jnp.float32), steps, [side]
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_wide_channel_conv_no_longer_vmem_fallback():
+    """PR 4's guard rejected any shape whose resident full-K workspace
+    overflowed VMEM; with tiled-K the guard passes whenever SOME block_c
+    candidate fits, so the wide-channel config lowers through Pallas."""
+    c, h, w, kh = 2048, 32, 32, 3
+    # the resident workspace genuinely overflows (the old fallback trigger)
+    resident = kops.conv_vmem_workspace(c, h, w, kh, kh, 1, "SAME", 8, 128)
+    assert resident["total"] > kops._CONV_VMEM_LIMIT
+    # ... but a tiled block_c candidate fits, so the hw guard passes now
+    assert kops.conv_fallback_reason(c, h, w, kh, kh, 1, "SAME", interpret=False) is None
+    # and the hw default resolution elects a tiled block_c for this shape
+    dh, do_, bc = kops._conv_default_blocks(c, h, w, kh, kh, 1, "SAME", 4, 4, False)
+    assert bc > 0
+    tiled = kops.conv_vmem_workspace(c, h, w, kh, kh, 1, "SAME", dh, do_, bc)
+    assert tiled["total"] <= kops._CONV_VMEM_LIMIT
+    # pinning a still-too-big block_c is honored verbatim -> fallback
+    assert kops.conv_fallback_reason(
+        c, h, w, kh, kh, 1, "SAME", interpret=False, block_c=0
+    ) == "vmem"
+
+
+def test_wide_channel_conv_runs_through_pallas_at_parity():
+    """A (scaled-down) wide-channel config executes the tiled-K kernel path
+    end to end: zero fallbacks, oracle parity."""
+    x, wt, b = _conv_case(1, 64, 8, 8, 8, 3)
+    kops.reset_conv_fallbacks()
+    got = kops.conv2d(x, wt, b, block_h=8, block_o=128, block_c=16)
+    assert kops.conv_fallback_counts() == {}
+    want = ref.conv2d_ref(x, wt, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_conv_1x1_fast_path_elected_counted_and_parity():
+    """Unit-tap convs bypass im2col and lower to the dense/quant GEMM
+    kernels; elections are counted per scheme like fallbacks."""
+    x = jax.random.normal(KEY, (2, 6, 12, 12))
+    w1 = jax.random.normal(jax.random.PRNGKey(1), (8, 6, 1, 1)) * 0.1
+    b = jax.random.normal(jax.random.PRNGKey(2), (8,)) * 0.1
+    kops.reset_conv_fastpaths()
+    kops.reset_conv_fallbacks()
+    got = kops.conv2d(x, w1, b, activation="relu")
+    assert kops.conv_fastpath_counts() == {"f32": 1}
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(ref.conv2d_ref(x, w1, b, activation="relu")),
+        rtol=1e-4, atol=1e-5,
+    )
+    # stride subsamples spatially before the GEMM
+    got_s = kops.conv2d(x, w1, b, stride=2)
+    np.testing.assert_allclose(
+        np.asarray(got_s), np.asarray(ref.conv2d_ref(x, w1, b, stride=2)),
+        rtol=1e-4, atol=1e-5,
+    )
+    # int8 schemes route to qmatmul and count under their scheme
+    qt = QTensor.from_float(w1, axis=0)
+    got_q = kops.conv2d(x, qt.values, b, w_scale=qt.scale, x_scale=0.05)
+    assert kops.conv_fastpath_counts()["w8a8"] == 1
+    np.testing.assert_allclose(
+        np.asarray(got_q),
+        np.asarray(ref.qconv2d_ref(x, qt.values, qt.scale, b, x_scale=0.05)),
+        rtol=1e-4, atol=1e-5,
+    )
+    # channel compaction gathers kept channels before the reshape
+    kept = jnp.asarray([0, 2, 5], jnp.int32)
+    got_k = kops.conv2d(x, w1[:, :3], b, kept=kept)
+    assert kops.conv_fastpath_counts()["f32"] >= 3
+    np.testing.assert_allclose(
+        np.asarray(got_k),
+        np.asarray(ref.conv2d_ref(jnp.take(x, kept, axis=1), w1[:, :3], b)),
+        rtol=1e-4, atol=1e-5,
+    )
+    assert kops.conv_fallback_counts() == {}  # elections are not fallbacks
+
+
+def test_conv_1x1_election_rules():
+    """Election requires unit taps, groups=1, no effective padding, live
+    input channels; pinned block sizes or gemm_1x1=False bypass it so the
+    im2col kernel stays testable on 1x1 shapes."""
+    assert kops.conv_gemm1x1_elected(1, 1, 1, "SAME", 6)
+    assert kops.conv_gemm1x1_elected(1, 1, 1, "VALID", 6)
+    assert kops.conv_gemm1x1_elected(1, 1, 1, ((0, 0), (0, 0)), 6)
+    assert not kops.conv_gemm1x1_elected(3, 3, 1, "SAME", 6)   # taps
+    assert not kops.conv_gemm1x1_elected(1, 1, 2, "SAME", 6)   # groups
+    assert not kops.conv_gemm1x1_elected(1, 1, 1, ((1, 0), (0, 0)), 6)  # pad
+    assert not kops.conv_gemm1x1_elected(1, 1, 1, "SAME", 0)   # no live K
+    x = jax.random.normal(KEY, (1, 4, 8, 8))
+    w1 = jax.random.normal(jax.random.PRNGKey(1), (6, 4, 1, 1)) * 0.1
+    kops.reset_conv_fastpaths()
+    kops.conv2d(x, w1, block_h=8, block_o=128)  # pinned -> im2col kernel
+    kops.conv2d(x, w1, gemm_1x1=False)
+    assert kops.conv_fastpath_counts() == {}
+
+
+@pytest.mark.parametrize("app", list(APPS))
+def test_app_1x1_convs_lower_through_fast_path(app):
+    """Every demo app carries at least one 1x1 conv (style/SR residual
+    blocks are bottleneck/WDSR-B style; coloring's fusion conv): each app's
+    kernel plan elects the direct-GEMM fast path with zero fallbacks."""
+    g = APPS[app](KEY, base=8)
+    n_1x1 = sum(
+        1 for n in g.nodes
+        if n.op == "conv2d" and g.params[n.name]["w"].shape[2] == 1
+    )
+    assert n_1x1 >= 1, app
+    masks, structures = app_masks(g, app, sparsity=0.5)
+    go = optimize(g, masks, structures)
+    plan_k = compile_plan(go, backend="kernel")
+    x = jax.random.normal(jax.random.PRNGKey(1), APP_INPUTS[app])
+    kops.reset_conv_fastpaths()
+    kops.reset_conv_fallbacks()
+    got = plan_k(go.params, x)  # eager: counters see every call
+    fastpaths = kops.conv_fastpath_counts()
+    assert sum(fastpaths.values()) >= n_1x1, (app, fastpaths)
+    assert kops.conv_fallback_counts() == {}, kops.conv_fallback_counts()
+    want = compile_plan(go, backend="reference")(go.params, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)

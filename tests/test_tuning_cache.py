@@ -88,8 +88,8 @@ def test_corrupt_cache_file_warns_and_uses_defaults(tmp_path, payload):
         c = TuningCache(enabled=False, path=str(p))
     assert any("ignoring unreadable tuning cache" in str(x.message) for x in w)
     # the cache still works: unknown keys resolve to the seeded defaults
-    assert c.resolve("matmul", 8, 8, 8, jnp.float32, "dense", True) == (128, 128, 128)
-    assert c.resolve("qmatmul", 8, 8, 8, jnp.int8, "dense+w8a8", True) == (128, 128, 128)
+    assert c.resolve("matmul", 8, 8, 8, jnp.float32, "dense", True) == (128, 128, 128, 1)
+    assert c.resolve("qmatmul", 8, 8, 8, jnp.int8, "dense+w8a8", True) == (128, 128, 128, 1)
 
 
 def test_missing_cache_file_is_silently_fresh(tmp_path):
@@ -144,3 +144,107 @@ def test_loaded_entries_survive_resolve_and_block_sweeps(fresh_cache):
 
     assert fresh_cache.resolve(*shape, True, runner=runner) == (256, 128, 128)
     assert not called and fresh_cache.sweeps == 0
+
+
+# --------------------------------------------------------------------------- #
+# PR 6: pipeline-depth / block_c key-family extension                          #
+# --------------------------------------------------------------------------- #
+
+
+def test_matmul_defaults_carry_pipeline_depth_and_conv_block_c():
+    """The matmul/qmatmul block tuple grew a 4th pipeline-depth field and
+    conv2d a 3rd block_c field; defaults pin the legacy behavior (depth 1 =
+    compiler-scheduled grid-K, block_c 0 = resident full-K)."""
+    assert TuningCache.DEFAULTS["matmul"] == (128, 128, 128, 1)
+    assert TuningCache.DEFAULTS["qmatmul"] == (128, 128, 128, 1)
+    assert TuningCache.DEFAULTS["conv2d"] == (8, 128, 0)
+    # candidate grids include pipelined / tiled-K entries
+    assert any(c[3] >= 2 for c in TuningCache.CANDIDATES["matmul"])
+    assert any(c[3] >= 2 for c in TuningCache.CANDIDATES["qmatmul"])
+    assert any(c[2] > 0 for c in TuningCache.CANDIDATES["conv2d"])
+
+
+def test_legacy_block_tuples_normalize_without_colliding():
+    """Entries cached before the field extension (3-tuple matmul, 2-tuple
+    conv) still resolve: the normalizers extend them with the legacy-pinned
+    values instead of keying them separately."""
+    assert kops._blocks4((256, 128, 128)) == (256, 128, 128, 1)
+    assert kops._blocks4((128, 128, 128, 2)) == (128, 128, 128, 2)
+    assert kops._conv_blocks3((8, 128)) == (8, 128, 0)
+    assert kops._conv_blocks3((8, 128, 64)) == (8, 128, 64)
+
+
+def test_extended_block_tuples_json_round_trip(tmp_path):
+    """4-field matmul winners and 3-field conv winners survive save/load
+    bit-exactly (depth/block_c are part of the value, not the key, so no
+    old-format key can collide with them)."""
+    c = TuningCache(enabled=False)
+    km = TuningCache.key("matmul", 64, 128, 512, jnp.float32, "dense", False)
+    kc = TuningCache.key_nd(
+        "conv2d", (1, 256, 16, 16, 64, 3, 3, 1), jnp.float32, "dense+f32", False
+    )
+    c.entries[km] = TuneEntry((128, 128, 256, 2), "swept", 0.3)
+    c.entries[kc] = TuneEntry((8, 128, 64), "swept", 0.7)
+    p = str(tmp_path / "tune.json")
+    c.save(p)
+    c2 = TuningCache(enabled=False).load(p)
+    assert c2.entries[km].blocks == (128, 128, 256, 2)
+    assert c2.entries[kc].blocks == (8, 128, 64)
+    assert all(e.source == "loaded" for e in c2.entries.values())
+
+
+def test_loaded_pipelined_winner_blocks_sweeps(fresh_cache):
+    """A loaded depth-2 winner is authoritative exactly like a legacy one:
+    resolve returns it verbatim, no sweep, and the stats ledger records a
+    hit rather than a miss."""
+    shape = ("matmul", 64, 128, 512, jnp.float32, "dense")
+    key = TuningCache.key(*shape, True)
+    fresh_cache.entries[key] = TuneEntry((128, 128, 256, 2), "loaded", 0.4)
+    fresh_cache.enabled = True
+    called = []
+    got = fresh_cache.resolve(*shape, True, runner=lambda *b: called.append(b))
+    assert got == (128, 128, 256, 2)
+    assert not called and fresh_cache.sweeps == 0
+    assert fresh_cache.stats["matmul"] == {"hits": 1, "misses": 0, "sweeps": 0}
+
+
+def test_ops_filter_restricts_sweeps_but_not_lookups(fresh_cache):
+    """The tune CLI's --ops filter: excluded families never sweep (they
+    resolve to defaults) while included families sweep normally; cached
+    winners still serve everyone."""
+    fresh_cache.enabled = True
+    fresh_cache.ops_filter = frozenset({"conv2d"})
+    swept = []
+
+    def runner(*blocks):
+        swept.append(blocks)
+        return jnp.zeros(())
+
+    shape = ("matmul", 64, 128, 128, jnp.float32, "dense")
+    got = fresh_cache.resolve(*shape, True, runner=runner)
+    assert got == TuningCache.DEFAULTS["matmul"] and not swept
+    assert fresh_cache.stats["matmul"]["sweeps"] == 0
+    conv_shape = (1, 8, 8, 8, 4, 3, 3, 1)
+    fresh_cache.resolve_nd(
+        "conv2d", conv_shape, jnp.float32, "dense+f32", True, runner=runner
+    )
+    assert swept  # the included family swept its candidate grid
+    assert fresh_cache.stats["conv2d"]["sweeps"] == 1
+    # a cached winner is returned regardless of the filter
+    key = TuningCache.key(*shape, True)
+    fresh_cache.entries[key] = TuneEntry((64, 128, 128, 1), "swept", 0.2)
+    assert fresh_cache.resolve(*shape, True) == (64, 128, 128, 1)
+
+
+def test_stats_report_csv_counts_per_family(fresh_cache):
+    fresh_cache.resolve("matmul", 8, 8, 8, jnp.float32, "dense", True)   # miss
+    fresh_cache.resolve("matmul", 8, 8, 8, jnp.float32, "dense", True)   # hit
+    fresh_cache.resolve("qmatmul", 8, 8, 8, jnp.int8, "dense+w8a8", True)
+    report = fresh_cache.stats_report()
+    lines = report.splitlines()
+    assert lines[0] == "family,hits,misses,sweeps"
+    assert "matmul,1,1,0" in lines
+    assert "qmatmul,0,1,0" in lines
+    # clear() wipes the ledger with the entries
+    fresh_cache.clear()
+    assert fresh_cache.stats_report() == "family,hits,misses,sweeps"
