@@ -1,7 +1,11 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-cov test-fast lint bench bench-smoke deps deps-dev
+.PHONY: test test-cov test-fast lint bench bench-smoke chaos-smoke deps deps-dev
+
+# fixed fault-injection seed: chaos runs must be reproducible fault-for-fault
+REPRO_FAULT_SEED ?= 7
+export REPRO_FAULT_SEED
 
 # committed coverage floor over the serving + kernel layers (a ratchet:
 # raise it as coverage grows, never lower it to make a PR pass)
@@ -28,6 +32,12 @@ bench-smoke:  ## tiny-shape benchmark pass (CI-sized, no TPU; writes results/BEN
 	python -m benchmarks.kernel_bench --smoke
 	python -m benchmarks.table1_apps --smoke
 	python -m benchmarks.serving_bench --smoke
+	python -m benchmarks.robustness_bench --smoke
+	python -m benchmarks.trajectory --check
+
+chaos-smoke:  ## seeded fault-injection pass: chaos test suite + robustness smoke bench
+	python -m pytest -x -q tests/test_robustness.py tests/test_state_isolation.py
+	python -m benchmarks.robustness_bench --smoke
 	python -m benchmarks.trajectory --check
 
 deps:

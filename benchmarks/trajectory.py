@@ -108,6 +108,28 @@ FLOORS: dict = {
     ("quant", "app:*"): {"max_err": 5e-2},
     ("serving", "parity:*"): {"max_err": 1e-4},
     ("serving_smoke", "parity:*"): {"max_err": 1e-4},
+    # robustness gates (full + committed smoke reference): degraded-mode
+    # overhead is guarded-under-total-failure vs the eager reference plan --
+    # both are Python-dispatch bound, so the ratio is machine-stable (~1.0x
+    # measured); 3.0x is the "guard rails must stay cheap" ceiling.  The
+    # chaos cases gate semantics, not speed: zero lost requests, a surviving
+    # scheduler thread, bit-exact total-demotion output, breaker recovery.
+    ("robustness", "degraded:*"): {"max_err": 1e-4, "max_overhead": 3.0},
+    ("robustness_smoke", "degraded:*"): {"max_err": 1e-4, "max_overhead": 3.0},
+    ("robustness", "chaos"): {
+        "max_err": 1e-4, "zero_lost": True, "require_survival": True,
+    },
+    ("robustness_smoke", "chaos"): {
+        "max_err": 1e-4, "zero_lost": True, "require_survival": True,
+    },
+    ("robustness", "chaos_total"): {
+        "zero_lost": True, "require_survival": True, "require_bitexact": True,
+    },
+    ("robustness_smoke", "chaos_total"): {
+        "zero_lost": True, "require_survival": True, "require_bitexact": True,
+    },
+    ("robustness", "recovery"): {"require_recovered": True},
+    ("robustness_smoke", "recovery"): {"require_recovered": True},
 }
 
 
@@ -146,6 +168,20 @@ def _cases_from(bench: str, rec: dict) -> dict:
         for r in rec.get("apps", ()):
             put(f"app:{r['app']}", max_err=r["max_err"],
                 bytes_ratio=r["bytes_ratio"])
+    elif bench.startswith("robustness"):
+        for r in rec.get("degraded", ()):
+            put(f"degraded:{r['app']}", max_err=r["max_err"],
+                overhead=r["overhead"], clean_overhead=r.get("clean_overhead"))
+        for key in ("chaos", "chaos_total"):
+            c = rec.get(key)
+            if c:
+                put(key, max_err=c["max_err"], lost=c["lost_requests"],
+                    injected=c["injected_faults"], bitexact=c["bitexact"],
+                    survived=c["scheduler_survived"])
+        rcv = rec.get("recovery")
+        if rcv:
+            put("recovery", recovered=rcv["recovered"],
+                breaker_trips=rcv["breaker_trips"])
     elif bench.startswith("serving"):
         for r in rec.get("parity", ()):
             put(f"parity:{r['app']}", max_err=r["max_err"])
@@ -183,7 +219,9 @@ def collect(results_dir: str = RESULTS_DIR) -> dict:
         name = os.path.basename(path)[len("BENCH_"):-len(".json")]
         if name == "trajectory":
             continue
-        if name.endswith("_smoke") and name != "serving_smoke":
+        if name.endswith("_smoke") and name not in (
+            "serving_smoke", "robustness_smoke",
+        ):
             continue  # smoke runs are CI plumbing, not perf data
         with open(path) as f:
             rec = json.load(f)
@@ -248,6 +286,20 @@ def check(traj: dict | None = None, results_dir: str = RESULTS_DIR) -> int:
                     violations.append(f"{tag}: plan_steps {steps} > {floor['max_steps']}")
                 if floor.get("zero_fallbacks") and fields.get("fallbacks"):
                     violations.append(f"{tag}: fallbacks {fields['fallbacks']}")
+                over = fields.get("overhead")
+                if "max_overhead" in floor and over is not None and over > floor["max_overhead"]:
+                    violations.append(
+                        f"{tag}: degraded overhead {over:.2f}x > "
+                        f"{floor['max_overhead']}x"
+                    )
+                if floor.get("zero_lost") and fields.get("lost"):
+                    violations.append(f"{tag}: {fields['lost']} lost requests")
+                if floor.get("require_survival") and fields.get("survived") is False:
+                    violations.append(f"{tag}: scheduler thread died")
+                if floor.get("require_bitexact") and fields.get("bitexact") is False:
+                    violations.append(f"{tag}: total demotion not bit-exact")
+                if floor.get("require_recovered") and fields.get("recovered") is False:
+                    violations.append(f"{tag}: breakers did not recover")
     if violations:
         raise AssertionError(
             "bench trajectory floor regressions:\n  " + "\n  ".join(violations)

@@ -39,13 +39,18 @@ import numpy as np
 
 from ...kernels import ops as kops
 from ...kernels import ref as kref
+from ...robustness import faults as _faults
+from ...robustness.breaker import GuardConfig, NumericGuardError
 from .ir import Graph, Node
 
 __all__ = [
     "BACKENDS",
+    "EXEC_BACKENDS",
     "register_op",
     "registered_ops",
     "handlers_for",
+    "guard_fallback_counts",
+    "reset_guard_fallbacks",
     "Runtime",
     "Step",
     "ExecutionPlan",
@@ -62,16 +67,71 @@ _ACT = kref._ACT
 #: plans); non-quantized ops fall through to their kernel handlers.
 BACKENDS = ("kernel", "reference", "quant")
 
+#: executable backends: the registration backends plus ``guarded`` -- a
+#: policy backend (no handler table of its own) that tries a primary table
+#: (``quant`` overlay by default) per step and demotes failures to the
+#: ``reference`` handler under circuit breakers.  See ``_exec_guarded``.
+EXEC_BACKENDS = BACKENDS + ("guarded",)
+
 #: backend -> op -> handler(params, inputs, attrs, runtime) -> array
 _HANDLERS: Dict[str, Dict[str, Callable]] = {b: {} for b in BACKENDS}
 
 
 def handlers_for(backend: str) -> Dict[str, Callable]:
     """The effective handler table for ``backend`` (``quant`` inherits every
-    kernel handler and overrides/extends with the quantized set)."""
-    if backend == "quant":
+    kernel handler and overrides/extends with the quantized set; ``guarded``
+    resolves to its default primary table -- the same overlay)."""
+    if backend in ("quant", "guarded"):
         return {**_HANDLERS["kernel"], **_HANDLERS["quant"]}
     return dict(_HANDLERS[backend])
+
+
+# --------------------------------------------------------------------------- #
+# guarded-execution accounting (process-wide, mirrors conv_fallback_counts)    #
+# --------------------------------------------------------------------------- #
+
+_GUARD_LOCK = threading.Lock()
+#: "op/scheme/reason" -> demotions to the reference handler, process-wide
+#: (reason in {exception, numeric, breaker_open}); the per-plan breakdown
+#: lives in ``ExecutionPlan.guard_stats()``
+_GUARD_FALLBACKS: Dict[str, int] = {}
+
+
+def guard_fallback_counts() -> Dict[str, int]:
+    """Process-wide guarded-executor demotion counts, keyed
+    ``"op/scheme/reason"`` -- the guarded-backend sibling of
+    :func:`repro.kernels.ops.conv_fallback_counts`."""
+    with _GUARD_LOCK:
+        return dict(_GUARD_FALLBACKS)
+
+
+def reset_guard_fallbacks() -> None:
+    with _GUARD_LOCK:
+        _GUARD_FALLBACKS.clear()
+
+
+def _node_scheme(n: Node) -> str:
+    """The quantization scheme a node executes under -- the breaker-key
+    dimension that separates an INT8 kernel family from its f32 sibling."""
+    if n.op in ("qlinear", "qconv2d"):
+        s = n.attrs.get("scheme")
+        if s:
+            return s
+        return "w8a8" if n.attrs.get("x_scale") is not None else "w8"
+    return "f32"
+
+
+def _check_finite(y) -> None:
+    """Post-step numeric guard: raise :class:`NumericGuardError` when any
+    concrete inexact leaf of ``y`` contains NaN/Inf.  Tracers (jit/vmap
+    tracing) are skipped -- the guard is an eager-mode contract."""
+    for leaf in jax.tree.leaves(y):
+        if isinstance(leaf, jax.core.Tracer):
+            continue
+        if jnp.issubdtype(jnp.result_type(leaf), jnp.inexact) and not bool(
+            jnp.all(jnp.isfinite(leaf))
+        ):
+            raise NumericGuardError("non-finite values in step output")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -547,10 +607,34 @@ class ExecutionPlan:
     steps: Tuple[Step, ...]
     backend: str
     interpret: Optional[bool] = None
+    #: guarded-backend knobs; only meaningful (and auto-defaulted) when
+    #: ``backend == "guarded"``
+    guard: Optional[GuardConfig] = None
 
     def __post_init__(self):
         self._rt = Runtime(backend=self.backend, interpret=self.interpret)
-        self._handlers = handlers_for(self.backend)
+        if self.backend == "guarded":
+            if self.guard is None:
+                self.guard = GuardConfig()
+            self._handlers = handlers_for(self.guard.primary)
+            self._ref_handlers = handlers_for("reference")
+            self._guard_lock = threading.Lock()
+            #: (op, scheme) -> CircuitBreaker, created lazily per step family
+            self._breakers: Dict[Tuple[str, str], Any] = {}
+            self.guard_counters: Dict[str, Any] = {
+                "primary_ok": 0,
+                "fallbacks": 0,
+                "breaker_short_circuits": 0,
+                "numeric_guard_trips": 0,
+                "by_key": {},
+            }
+        else:
+            if self.guard is not None:
+                raise ValueError(
+                    "guard config requires backend='guarded', "
+                    f"got {self.backend!r}"
+                )
+            self._handlers = handlers_for(self.backend)
 
     # -- execution ----------------------------------------------------------- #
     def __call__(self, params: Dict[str, Dict[str, Any]], *args):
@@ -574,16 +658,92 @@ class ExecutionPlan:
         if observer is not None:
             for name, v in env.items():
                 observer(name, v)
+        guarded = self.backend == "guarded"
         for step in self.steps:
             n = step.node
             xs = [env[i] for i in n.inputs]
-            env[n.name] = self._handlers[n.op](params.get(n.name, {}), xs, n.attrs, self._rt)
+            p = params.get(n.name, {})
+            if guarded:
+                env[n.name] = self._exec_guarded(n, p, xs)
+            else:
+                env[n.name] = self._handlers[n.op](p, xs, n.attrs, self._rt)
             if observer is not None:
                 observer(n.name, env[n.name])
             for f in step.frees:  # dead intermediate: release our reference
                 del env[f]
         outs = tuple(env[o] for o in self.graph.outputs)
         return outs[0] if len(outs) == 1 else outs
+
+    # -- guarded execution ---------------------------------------------------- #
+    def _exec_guarded(self, n: Node, p, xs):
+        """One step under the guarded contract: try the primary (kernel)
+        handler behind the step family's circuit breaker and fault-injection
+        hook; on any exception or a numeric-guard trip, record the failure
+        and demote to the ``reference`` handler for this step only.  Shared
+        ops (same function object on both backends) run unguarded -- there
+        is nothing to demote to."""
+        cfg = self.guard
+        ref = self._ref_handlers.get(n.op)
+        primary = self._handlers.get(n.op, ref)
+        if ref is None or primary is ref:
+            return primary(p, xs, n.attrs, self._rt)
+        key = (n.op, _node_scheme(n))
+        with self._guard_lock:
+            br = self._breakers.get(key)
+            if br is None:
+                br = self._breakers[key] = cfg.make_breaker()
+            allowed = br.allow()
+        if not allowed:
+            self._count_guard(key, "breaker_open")
+            return ref(p, xs, n.attrs, self._rt)
+        fn = _faults.wrap_handler(n.op, primary)
+        try:
+            y = fn(p, xs, n.attrs, self._rt)
+            if cfg.numeric_guards:
+                _check_finite(y)
+        except Exception as e:  # demote: any failure mode, never propagate
+            with self._guard_lock:
+                br.record_failure()
+            self._count_guard(
+                key, "numeric" if isinstance(e, NumericGuardError) else "exception"
+            )
+            return ref(p, xs, n.attrs, self._rt)
+        with self._guard_lock:
+            br.record_success()
+            self.guard_counters["primary_ok"] += 1
+        return y
+
+    def _count_guard(self, key: Tuple[str, str], reason: str) -> None:
+        gkey = f"{key[0]}/{key[1]}/{reason}"
+        with self._guard_lock:
+            c = self.guard_counters
+            c["fallbacks"] += 1
+            if reason == "breaker_open":
+                c["breaker_short_circuits"] += 1
+            elif reason == "numeric":
+                c["numeric_guard_trips"] += 1
+            c["by_key"][gkey] = c["by_key"].get(gkey, 0) + 1
+        with _GUARD_LOCK:
+            _GUARD_FALLBACKS[gkey] = _GUARD_FALLBACKS.get(gkey, 0) + 1
+
+    def guard_stats(self) -> Dict[str, Any]:
+        """Snapshot of this plan's guarded-execution state: demotion
+        counters plus every breaker's state machine -- the payload
+        ``AsyncPlanServer.health()`` surfaces per plan."""
+        if self.backend != "guarded":
+            return {}
+        with self._guard_lock:
+            c = self.guard_counters
+            return {
+                "counters": {
+                    **{k: v for k, v in c.items() if k != "by_key"},
+                    "by_key": dict(c["by_key"]),
+                },
+                "breakers": {
+                    f"{op}/{scheme}": br.snapshot()
+                    for (op, scheme), br in self._breakers.items()
+                },
+            }
 
     # -- introspection ------------------------------------------------------- #
     def memory_estimate(self, *inputs) -> Dict[str, Any]:
@@ -749,12 +909,22 @@ class BatchedPlan:
         if self.batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {self.batch_size}")
         n_in = len(self.plan.graph.inputs)
-        call = (
-            jax.vmap(self.plan, in_axes=(None,) + (0,) * n_in)
-            if self.via_vmap
-            else self.plan
-        )
-        self._chunk = jax.jit(call)
+        if self.plan.backend == "guarded":
+            # guarded semantics (per-step try/except, breakers, numeric
+            # guards) are eager-mode contracts -- tracing would bake one
+            # arbitrary branch into the jitted chunk and blind the guards
+            if self.via_vmap:
+                raise ValueError(
+                    "guarded plans execute eagerly; via_vmap needs tracing"
+                )
+            self._chunk = self.plan
+        else:
+            call = (
+                jax.vmap(self.plan, in_axes=(None,) + (0,) * n_in)
+                if self.via_vmap
+                else self.plan
+            )
+            self._chunk = jax.jit(call)
         #: stats of the most recent __call__ (padding overhead is the serving
         #: cost of fixed-shape compilation; surfaced by PlanServer)
         self.last_stats: Dict[str, int] = {}
@@ -827,18 +997,27 @@ class BatchedPlan:
 
 
 def compile_plan(
-    g: Graph, *, backend: str = "kernel", interpret: Optional[bool] = None
+    g: Graph,
+    *,
+    backend: str = "kernel",
+    interpret: Optional[bool] = None,
+    guard: Optional[GuardConfig] = None,
 ) -> ExecutionPlan:
     """Compile ``g`` into an :class:`ExecutionPlan` (validates the graph,
-    resolves handlers, schedules topologically, computes buffer liveness)."""
-    if backend not in _HANDLERS:
-        raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
+    resolves handlers, schedules topologically, computes buffer liveness).
+    ``backend="guarded"`` compiles a degradation-tolerant plan: each step
+    tries ``guard.primary``'s handler and demotes failures to ``reference``
+    (see :meth:`ExecutionPlan._exec_guarded`)."""
+    if backend not in _HANDLERS and backend != "guarded":
+        raise ValueError(f"unknown backend {backend!r}; have {EXEC_BACKENDS}")
     # schedule before validating: Graph.validate requires def-before-use node
     # order, which the Kahn schedule establishes for out-of-order builders
     order = _topo_schedule(g)
     g = dataclasses.replace(g, nodes=order)
     g.validate()
     handlers = handlers_for(backend)
+    if backend == "guarded":  # an op with only a reference handler still runs
+        handlers = {**handlers, **handlers_for("reference")}
     missing = sorted({n.op for n in order if n.op not in handlers})
     if missing:
         raise NotImplementedError(
@@ -858,4 +1037,7 @@ def compile_plan(
             x for x, j in last_use.items() if j == i and x not in keep
         )
         steps.append(Step(node=n, frees=frees))
-    return ExecutionPlan(graph=g, steps=tuple(steps), backend=backend, interpret=interpret)
+    return ExecutionPlan(
+        graph=g, steps=tuple(steps), backend=backend, interpret=interpret,
+        guard=guard,
+    )

@@ -296,8 +296,26 @@ class TuningCache:
                 if e.source != "default"
             },
         }
-        with open(path, "w") as f:
-            json.dump(payload, f, indent=2, sort_keys=True)
+        # crash-safe: write a temp file in the target directory, fsync, then
+        # atomically rename over the destination -- a reader (or a concurrent
+        # saver) can never observe a truncated/interleaved JSON, and an
+        # interrupted save leaves the previous file intact
+        import tempfile
+
+        d = os.path.dirname(os.path.abspath(path))
+        fd, tmp = tempfile.mkstemp(prefix=".tune-", suffix=".json.tmp", dir=d)
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
         return path
 
     def load(self, path: str) -> "TuningCache":

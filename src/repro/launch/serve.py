@@ -153,13 +153,16 @@ def _serve_async(args) -> None:
         )
     apps = [args.graph_app] if args.graph_app else list(APPS)
     on_tpu = jax.default_backend() == "tpu"
-    backend = "kernel" if on_tpu else "reference"
+    # --guarded serves degradation-tolerant plans: each step tries the
+    # kernel/quant handler and demotes failures to the jnp reference (with
+    # circuit breakers + numeric guards); stats land in server.health()
+    backend = "guarded" if args.guarded else ("kernel" if on_tpu else "reference")
     batch_size = args.batch_size or 4
     rng = np.random.default_rng(args.seed)
 
     server = AsyncPlanServer(
         flush_after=args.flush_after, max_queue=args.max_queue,
-        overload=args.overload,
+        overload=args.overload, watchdog=args.watchdog,
     )
     plans, shapes = {}, {}
     for app in apps:
@@ -170,7 +173,12 @@ def _serve_async(args) -> None:
         plans[app] = (plan, go.params)
         c_in = 1 if app == "coloring" else 3
         shapes[app] = (c_in, args.size, args.size)
-        server.add_plan(app, plan, go.params, batch_size)
+        # explicit input spec: a malformed frame fails at submit(), never
+        # inside the macro-batch it would have joined
+        server.add_plan(
+            app, plan, go.params, batch_size,
+            input_spec=[(shapes[app], jnp.float32)],
+        )
         print(f"async: {app}: backend={backend} steps={len(plan.steps)} "
               f"batch_size={batch_size}")
 
@@ -219,6 +227,27 @@ def _serve_async(args) -> None:
             print(f"async: {app}: p50={np.percentile(lats, 50) * 1e3:.2f}ms "
                   f"p95={np.percentile(lats, 95) * 1e3:.2f}ms "
                   f"over {lats.size} requests")
+        # liveness/degradation snapshot: what an external monitor scrapes
+        health = server.health()
+        print(f"health: running={health['running']} "
+              f"inflight={health['inflight']} pending={health['pending']} "
+              f"tick_errors={health['tick_errors']} "
+              f"watchdog={health['watchdog']}")
+        for app, p in health["plans"].items():
+            s = p["stats"]
+            line = (f"health: {app}: queue_depth={p['queue_depth']} "
+                    f"bad_frames={s['bad_frames']} "
+                    f"watchdog_timeouts={s['watchdog_timeouts']} "
+                    f"rejected={s['rejected']} shed={s['shed']}")
+            if "guard" in p:
+                gc = p["guard"]["counters"]
+                brs = ", ".join(
+                    f"{k}={b['state']}" for k, b in p["guard"]["breakers"].items()
+                )
+                line += (f" | guard: primary_ok={gc['primary_ok']} "
+                         f"fallbacks={gc['fallbacks']} "
+                         f"breakers=[{brs or 'none yet'}]")
+            print(line)
 
 
 def main() -> None:
@@ -257,6 +286,14 @@ def main() -> None:
                     help="async: bounded admission queue per plan")
     ap.add_argument("--overload", choices=["reject", "shed"], default="reject",
                     help="async: backpressure policy when a queue is full")
+    ap.add_argument("--guarded", action="store_true",
+                    help="async: serve guarded plans (per-step kernel ->"
+                         " reference demotion with circuit breakers and"
+                         " NaN/Inf guards; guard stats in health())")
+    ap.add_argument("--watchdog", type=float, default=None,
+                    help="async: per-batch execution deadline in seconds; a "
+                         "batch that blows it fails only its own handles "
+                         "(WatchdogTimeout) and the scheduler keeps ticking")
     ap.add_argument("--quantize", action="store_true",
                     help="graph-app: calibrate + quantize the plan to INT8 "
                          "weights (backend='quant' on TPU) and report parity "

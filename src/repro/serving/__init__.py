@@ -1,13 +1,23 @@
 from .engine import Engine, GenerationResult, PlanServer, Request, RequestScheduler
-from .scheduler import AsyncPlanServer, QueueFullError, RequestHandle
+from .scheduler import (
+    AsyncPlanServer,
+    FrameSpecError,
+    QueueFullError,
+    RequestHandle,
+    WatchdogTimeout,
+    submit_with_retry,
+)
 
 __all__ = [
     "AsyncPlanServer",
     "Engine",
+    "FrameSpecError",
     "GenerationResult",
     "PlanServer",
     "QueueFullError",
     "Request",
     "RequestHandle",
     "RequestScheduler",
+    "WatchdogTimeout",
+    "submit_with_retry",
 ]

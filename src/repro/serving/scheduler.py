@@ -57,16 +57,33 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from ..utils.retry import retry_call
+
 __all__ = [
     "AsyncPlanServer",
+    "FrameSpecError",
     "QueueFullError",
     "RequestHandle",
+    "WatchdogTimeout",
+    "submit_with_retry",
 ]
 
 
 class QueueFullError(RuntimeError):
     """Raised by ``submit`` under the reject policy; stored on the shed
     handle under the shed policy."""
+
+
+class FrameSpecError(ValueError):
+    """Raised by ``submit`` when a frame's shape/dtype disagrees with the
+    plan's input spec -- the malformed request fails *at admission*, so it
+    can never poison the macro-batch it would have joined."""
+
+
+class WatchdogTimeout(RuntimeError):
+    """Stored on every handle of a batch whose execution exceeded the
+    server's per-batch watchdog deadline (a hung kernel/compile).  Only
+    that batch fails; the scheduler thread keeps ticking."""
 
 
 @dataclasses.dataclass(eq=False)
@@ -115,7 +132,12 @@ class RequestHandle:
         return self.completed_at - self.submitted_at
 
     # -- scheduler side ------------------------------------------------------ #
+    # _resolve/_fail are idempotent (first verdict wins): a batch the
+    # watchdog abandoned must never have its handles re-resolved if the
+    # hung worker eventually limps home.
     def _resolve(self, value, now: float) -> None:
+        if self._event.is_set():
+            return
         self.completed_at = now
         self.deadline_missed = (
             self.deadline_at is not None and now > self.deadline_at
@@ -124,6 +146,8 @@ class RequestHandle:
         self._event.set()
 
     def _fail(self, err: BaseException, now: float) -> None:
+        if self._event.is_set():
+            return
         self.completed_at = now
         self._error = err
         self._event.set()
@@ -143,6 +167,9 @@ class _PlanEntry:
     batched: Any  # BatchedPlan
     queue: List[RequestHandle] = dataclasses.field(default_factory=list)
     seq: int = 0  # FIFO tiebreak within a priority class
+    #: per-input (shape, dtype) submit() validates against; given at
+    #: add_plan or latched from the first accepted frame
+    input_spec: Optional[Tuple[Tuple[Tuple[int, ...], Any], ...]] = None
     latencies: Deque[float] = dataclasses.field(
         default_factory=lambda: deque(maxlen=LATENCY_RESERVOIR)
     )
@@ -150,7 +177,7 @@ class _PlanEntry:
         default_factory=lambda: {
             "submitted": 0, "completed": 0, "batches": 0, "padded_frames": 0,
             "rejected": 0, "shed": 0, "deadline_flushes": 0,
-            "deadline_misses": 0,
+            "deadline_misses": 0, "bad_frames": 0, "watchdog_timeouts": 0,
         }
     )
 
@@ -182,18 +209,26 @@ class AsyncPlanServer:
         max_queue: int = 1024,
         overload: str = "reject",
         tick_interval: float = 0.002,
+        watchdog: Optional[float] = None,
         clock: Callable[[], float] = time.monotonic,
     ):
         if overload not in ("reject", "shed"):
             raise ValueError(f"overload policy {overload!r}: want reject|shed")
         if max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if watchdog is not None and watchdog <= 0:
+            raise ValueError(f"watchdog must be > 0 seconds, got {watchdog}")
         self.flush_after = flush_after
         self.deadline_margin = deadline_margin
         self.max_queue = max_queue
         self.overload = overload
         self.tick_interval = tick_interval
+        #: per-batch execution deadline (wall seconds); a batch that blows it
+        #: fails its own handles with WatchdogTimeout and is abandoned to a
+        #: daemon thread -- the scheduler moves on
+        self.watchdog = watchdog
         self.closed = False
+        self._tick_errors = 0  # scheduler-tick exceptions survived by _loop
         self._clock = clock
         self._plans: Dict[str, _PlanEntry] = {}
         self._rr = 0  # round-robin start index over plan names
@@ -212,19 +247,41 @@ class AsyncPlanServer:
 
     # -- configuration ------------------------------------------------------- #
     def add_plan(
-        self, name: str, plan, params, batch_size: int, *, via_vmap: bool = False
+        self,
+        name: str,
+        plan,
+        params,
+        batch_size: int,
+        *,
+        via_vmap: bool = False,
+        input_spec: Optional[Sequence[Tuple[Sequence[int], Any]]] = None,
     ) -> None:
         """Register a plan under ``name`` with its own admission queue and
         fixed compiled batch size.  All registered plans share the scheduler
-        (and its fairness rotation)."""
+        (and its fairness rotation).  ``input_spec`` -- one ``(shape, dtype)``
+        per graph input (frame form, no batch dim) -- makes :meth:`submit`
+        reject malformed frames immediately; without it the spec is latched
+        from the first accepted frame."""
         with self._lock:
             if self.closed:
                 raise RuntimeError("AsyncPlanServer is closed")
             if name in self._plans:
                 raise ValueError(f"plan {name!r} already registered")
+            spec = None
+            if input_spec is not None:
+                spec = tuple(
+                    (tuple(int(d) for d in shape), np.dtype(dtype))
+                    for shape, dtype in input_spec
+                )
+                if len(spec) != len(plan.graph.inputs):
+                    raise ValueError(
+                        f"input_spec has {len(spec)} entries; plan has "
+                        f"{len(plan.graph.inputs)} inputs"
+                    )
             self._plans[name] = _PlanEntry(
                 name=name, plan=plan, params=params,
                 batched=plan.batched(batch_size, via_vmap=via_vmap),
+                input_spec=spec,
             )
 
     @property
@@ -265,6 +322,24 @@ class AsyncPlanServer:
                     f"plan {plan_name!r} expects {n_in} inputs per frame, "
                     f"got {len(frame_inputs)}"
                 )
+            frames = tuple(jnp.asarray(f) for f in frame_inputs)
+            # shape/dtype gate: one malformed request fails HERE (its own
+            # "handle"), never inside the macro-batch it would have joined
+            if entry.input_spec is None:
+                entry.input_spec = tuple(
+                    (tuple(f.shape), np.dtype(f.dtype)) for f in frames
+                )
+            else:
+                for i, (f, (shape, dtype)) in enumerate(
+                    zip(frames, entry.input_spec)
+                ):
+                    if tuple(f.shape) != shape or np.dtype(f.dtype) != dtype:
+                        entry.stats["bad_frames"] += 1
+                        raise FrameSpecError(
+                            f"plan {plan_name!r} input {i}: frame is "
+                            f"{tuple(f.shape)}/{np.dtype(f.dtype)}, spec is "
+                            f"{shape}/{dtype}"
+                        )
             now = self._clock()
             shed: Optional[RequestHandle] = None
             if len(entry.queue) >= self.max_queue:
@@ -297,7 +372,7 @@ class AsyncPlanServer:
                 submitted_at=now,
             )
             self._rid += 1
-            handle._inputs = tuple(jnp.asarray(f) for f in frame_inputs)
+            handle._inputs = frames
             handle._seq = entry.seq
             entry.seq += 1
             entry.queue.append(handle)
@@ -361,20 +436,48 @@ class AsyncPlanServer:
     def _execute(self, entry: _PlanEntry, batch: List[RequestHandle]) -> None:
         """Run one macro-batch through the plan's compiled chunk and resolve
         every handle.  Called with the admission lock *released* so submits
-        keep landing while the device works."""
-        try:
-            # stacking stays inside the guard: a wrong-shape frame must fail
-            # its batch's handles, never kill the scheduler thread
-            inputs = tuple(
-                jnp.stack([h._inputs[i] for h in batch])
-                for i in range(len(batch[0]._inputs))
+        keep landing while the device works.
+
+        With a ``watchdog`` deadline the compute runs in a disposable daemon
+        thread: if it has not produced a verdict within the deadline the
+        batch's handles fail with :class:`WatchdogTimeout` and the thread is
+        abandoned (the handles' first-verdict-wins guard makes a late finish
+        harmless) -- a hung kernel costs one batch, never the scheduler."""
+        box: Dict[str, Any] = {}
+
+        def compute() -> None:
+            try:
+                # stacking stays inside the guard: a failing frame must fail
+                # its batch's handles, never kill the scheduler thread
+                inputs = tuple(
+                    jnp.stack([h._inputs[i] for h in batch])
+                    for i in range(len(batch[0]._inputs))
+                )
+                box["out"] = entry.batched.run_chunk(entry.params, *inputs)
+            except Exception as e:  # resolve handles; callers see the error
+                box["err"] = e
+
+        timed_out = False
+        if self.watchdog is None:
+            compute()
+        else:
+            worker = threading.Thread(
+                target=compute, name=f"batch-{entry.name}", daemon=True
             )
-            out = entry.batched.run_chunk(entry.params, *inputs)
-            err = None
-        except Exception as e:  # resolve handles; callers see the error
-            out, err = None, e
+            worker.start()
+            worker.join(self.watchdog)
+            timed_out = worker.is_alive()
         now = self._clock()
         with self._lock:
+            out = box.get("out")
+            err = box.get("err")
+            if timed_out:
+                out = None
+                err = WatchdogTimeout(
+                    f"batch of {len(batch)} on plan {entry.name!r} exceeded "
+                    f"the {self.watchdog}s watchdog deadline"
+                )
+                entry.stats["watchdog_timeouts"] += 1
             for i, h in enumerate(batch):
                 h._inputs = None  # executed: release the frame arrays
                 if err is not None:
@@ -452,7 +555,13 @@ class AsyncPlanServer:
 
     def _loop(self) -> None:
         while not self._stop.is_set():
-            if self.step() == 0:
+            try:
+                executed = self.step()
+            except Exception:  # a bad tick is counted, never fatal
+                with self._lock:
+                    self._tick_errors += 1
+                executed = 0
+            if executed == 0:
                 self._work.wait(self.tick_interval)
                 self._work.clear()
 
@@ -521,6 +630,36 @@ class AsyncPlanServer:
         total["per_plan"] = per_plan
         return total
 
+    def health(self) -> Dict[str, Any]:
+        """One liveness/degradation snapshot: scheduler state (running,
+        in-flight batches, survived tick errors), per-plan queue depths and
+        counters (bad frames, watchdog timeouts, overload), and -- for
+        guarded plans -- the executor's guard stats (demotion counters plus
+        every circuit breaker's state).  This is what ``launch/serve.py
+        --async`` prints and what an external monitor should scrape."""
+        with self._lock:
+            plans: Dict[str, Any] = {}
+            for n, e in self._plans.items():
+                d: Dict[str, Any] = {
+                    "queue_depth": len(e.queue),
+                    "stats": dict(e.stats),
+                }
+                guard_stats = getattr(e.plan, "guard_stats", None)
+                if callable(guard_stats):
+                    gs = guard_stats()
+                    if gs:
+                        d["guard"] = gs
+                plans[n] = d
+            return {
+                "closed": self.closed,
+                "running": self.running,
+                "inflight": self._inflight,
+                "tick_errors": self._tick_errors,
+                "watchdog": self.watchdog,
+                "pending": sum(p["queue_depth"] for p in plans.values()),
+                "plans": plans,
+            }
+
     def latency_stats(
         self, plan_name: Optional[str] = None
     ) -> Dict[str, float]:
@@ -543,3 +682,31 @@ class AsyncPlanServer:
             "p99": float(np.percentile(arr, 99)),
             "mean": float(arr.mean()),
         }
+
+
+def submit_with_retry(
+    server: AsyncPlanServer,
+    plan_name: str,
+    *frame_inputs,
+    priority: int = 0,
+    deadline: Optional[float] = None,
+    retries: int = 5,
+    backoff: float = 0.005,
+    backoff_factor: float = 2.0,
+    jitter: float = 0.5,
+    sleep: Callable[[float], None] = time.sleep,
+) -> RequestHandle:
+    """``server.submit`` wrapped in jittered exponential backoff on
+    :class:`QueueFullError` -- the client-side companion to the bounded
+    admission queue.  Backpressure bursts (queue momentarily full while the
+    scheduler drains) retry with decorrelated delays instead of failing or
+    stampeding; a queue that stays full through every retry still raises,
+    so overload remains visible.  Only ``QueueFullError`` retries --
+    ``FrameSpecError`` and closed-server errors are permanent."""
+    return retry_call(
+        lambda: server.submit(
+            plan_name, *frame_inputs, priority=priority, deadline=deadline
+        ),
+        retries=retries, backoff=backoff, backoff_factor=backoff_factor,
+        jitter=jitter, retry_on=(QueueFullError,), sleep=sleep,
+    )

@@ -23,7 +23,9 @@ import threading
 import time
 from typing import Any, Callable, List, Optional
 
-__all__ = ["PreemptionHandler", "retry", "StragglerMonitor", "Heartbeat"]
+from ..utils.retry import retry_call
+
+__all__ = ["PreemptionHandler", "retry", "retry_call", "StragglerMonitor", "Heartbeat"]
 
 
 class PreemptionHandler:
@@ -58,18 +60,15 @@ def retry(
     retry_on: tuple = (OSError, IOError, RuntimeError),
     on_retry: Optional[Callable[[int, BaseException], None]] = None,
 ) -> Any:
-    """Run ``fn`` with exponential backoff on transient errors."""
-    delay = backoff
-    for attempt in range(retries + 1):
-        try:
-            return fn()
-        except retry_on as e:  # noqa: PERF203
-            if attempt == retries:
-                raise
-            if on_retry:
-                on_retry(attempt, e)
-            time.sleep(delay)
-            delay *= backoff_factor
+    """Run ``fn`` with exponential backoff on transient errors.
+
+    Back-compat shim: the implementation now lives in
+    :func:`repro.utils.retry.retry_call` (which adds jitter and injectable
+    sleep/rng); this keeps the original signature and behavior."""
+    return retry_call(
+        fn, retries=retries, backoff=backoff, backoff_factor=backoff_factor,
+        retry_on=retry_on, on_retry=on_retry,
+    )
 
 
 class StragglerMonitor:

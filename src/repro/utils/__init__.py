@@ -1,2 +1,3 @@
 from .flops import model_flops, param_counts
 from .hlo import collective_bytes, op_histogram
+from .retry import retry_call

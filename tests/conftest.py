@@ -4,7 +4,9 @@ device (the dry-run sets its own 512-device flag in a separate process)."""
 import jax
 import pytest
 
+from repro.core.graph import executor as _executor
 from repro.kernels import ops as kops
+from repro.robustness import faults as _faults
 
 
 @pytest.fixture(scope="session")
@@ -40,12 +42,18 @@ def snapshot_global_state():
         "tune_path": cache.path,
         "tune_ops_filter": cache.ops_filter,
         "tune_stats": {op: dict(s) for op, s in cache.stats.items()},
+        "guard_fallbacks": _executor.guard_fallback_counts(),  # already a copy
     }
 
 
 def restore_global_state(snap) -> None:
     """Reset the process-level kernel state to ``snap`` (exact contents, not
-    a merge: entries/counters added since the snapshot are discarded)."""
+    a merge: entries/counters added since the snapshot are discarded).
+    Any FaultPlan a test left installed is force-uninstalled first, so a
+    failing chaos test can never leak patched kernel entry points."""
+    _faults.uninstall_all()
+    _executor.reset_guard_fallbacks()
+    _executor._GUARD_FALLBACKS.update(snap.get("guard_fallbacks", {}))
     kops.reset_conv_fallbacks()
     kops._CONV_FALLBACKS.update(snap["conv_fallbacks"])
     kops.reset_conv_fastpaths()

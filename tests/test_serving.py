@@ -301,20 +301,42 @@ def test_drain_completed_with_background_thread(sr):
     assert server.drain_completed() == []
 
 
-def test_bad_frame_fails_its_batch_not_the_scheduler(sr):
-    """A wrong-shape frame must surface on the handles of its batch (the
-    stack/execute error is stored), and the server must keep serving."""
+def test_bad_frame_fails_at_submit_not_its_batch(sr):
+    """A wrong-shape/dtype frame is rejected by submit() itself
+    (FrameSpecError against the latched input spec), so it can never poison
+    the macro-batch it would have joined: the good requests around it
+    complete normally and the rejection is counted."""
+    from repro.serving import FrameSpecError
+
     server = _server(sr)
-    h_bad = server.submit("sr", jnp.zeros((3, 4, 4)))  # wrong spatial dims
-    h_ok = server.submit("sr", _frames(1)[0])
+    h_ok = server.submit("sr", _frames(1)[0])  # latches the input spec
+    with pytest.raises(FrameSpecError):
+        server.submit("sr", jnp.zeros((3, 4, 4)))  # wrong spatial dims
+    with pytest.raises(FrameSpecError):
+        server.submit("sr", jnp.zeros(FRAME, jnp.int32))  # wrong dtype
     assert server.step(force=True) == 1
-    assert h_bad.done() and h_ok.done()
-    assert h_bad.exception() is not None
-    with pytest.raises(Exception):
-        h_ok.result(0)  # same macro-batch: shares the failure
-    h2 = server.submit("sr", _frames(1)[0])  # the server itself survives
+    assert h_ok.exception() is None and h_ok.result(0).shape
+    assert server.stats["per_plan"]["sr"]["bad_frames"] == 2
+    assert server.stats["per_plan"]["sr"]["submitted"] == 1
+    server.close()
+
+
+def test_explicit_input_spec_rejects_first_bad_frame(sr):
+    """With input_spec given at add_plan, even the FIRST frame is validated
+    (nothing to latch), closing the malformed-first-request hole."""
+    from repro.serving import FrameSpecError
+
+    go, plan = sr
+    server = AsyncPlanServer(clock=lambda: 0.0)
+    server.add_plan(
+        "sr", plan, go.params, batch_size=4,
+        input_spec=[(FRAME, jnp.float32)],
+    )
+    with pytest.raises(FrameSpecError):
+        server.submit("sr", jnp.zeros((3, 4, 4)))
+    h = server.submit("sr", _frames(1)[0])
     server.step(force=True)
-    assert h2.exception() is None and h2.result(0).shape
+    assert h.result(0).shape
     server.close()
 
 

@@ -32,17 +32,36 @@ def _mutate_tuning_cache():
     cache.sweeps += 7
 
 
+def _mutate_guard_state():
+    """Mutator C: bump the guarded-executor demotion counters and leave a
+    FaultPlan installed (deliberately not uninstalled -- restore must
+    force-uninstall it so patched kernel entry points never leak)."""
+    from repro.core.graph import executor as _executor
+    from repro.robustness import FaultPlan, FaultRule, active_fault_plan
+
+    with _executor._GUARD_LOCK:
+        _executor._GUARD_FALLBACKS["linear/f32/exception"] = (
+            _executor._GUARD_FALLBACKS.get("linear/f32/exception", 0) + 3
+        )
+    FaultPlan([FaultRule("matmul", "raise")]).install()
+    assert active_fault_plan() is not None
+
+
 def _assert_pristine(baseline):
     assert snapshot_global_state() == baseline
 
 
-@pytest.mark.parametrize("order", ["ab", "ba"])
+@pytest.mark.parametrize("order", ["ab", "ba", "ac", "ca", "bc", "cb"])
 def test_mutators_are_isolated_in_both_orders(order):
-    """Run the two mutators in both orders, each wrapped in the fixture's
+    """Run the mutator pairs in both orders, each wrapped in the fixture's
     snapshot/restore; the state observed before and after every mutator must
     equal the pristine baseline, independent of order."""
     baseline = snapshot_global_state()
-    mutators = {"a": _mutate_fallback_counters, "b": _mutate_tuning_cache}
+    mutators = {
+        "a": _mutate_fallback_counters,
+        "b": _mutate_tuning_cache,
+        "c": _mutate_guard_state,
+    }
     for key in order:
         _assert_pristine(baseline)  # previous mutator's damage fully undone
         snap = snapshot_global_state()
@@ -75,3 +94,23 @@ def test_fixture_restores_tuning_cache():
 
 def test_fixture_left_no_tuning_residue():
     assert "matmul|1x1x1|float32|dense|interpret" not in kops.tuning_cache().entries
+
+
+def test_fixture_restores_guard_state():
+    from repro.core.graph import guard_fallback_counts
+    from repro.robustness import active_fault_plan
+
+    _mutate_guard_state()
+    assert guard_fallback_counts().get("linear/f32/exception", 0) >= 3
+    assert active_fault_plan() is not None
+
+
+def test_fixture_left_no_guard_residue():
+    from repro.core.graph import guard_fallback_counts
+    from repro.kernels import ops as kops_mod
+    from repro.robustness import active_fault_plan
+
+    assert guard_fallback_counts().get("linear/f32/exception", 0) == 0
+    assert active_fault_plan() is None
+    # the entry point itself is pristine (no faulty_ wrapper leaked)
+    assert not getattr(kops_mod.matmul, "__name__", "").startswith("faulty_")
