@@ -130,6 +130,17 @@ FLOORS: dict = {
     },
     ("robustness", "recovery"): {"require_recovered": True},
     ("robustness_smoke", "recovery"): {"require_recovered": True},
+    # observability gates (full + committed smoke reference): telemetry must
+    # stay (nearly) free.  Overheads are vs the bare-loop baseline (see
+    # benchmarks/obs_bench.py): with tracing disabled the instrumented plan
+    # may cost <= 1% extra; with a tracing session armed, the full per-step
+    # span machinery may cost <= 5% end-to-end.
+    ("obs", "overhead:*"): {
+        "max_disabled_overhead": 1.01, "max_traced_overhead": 1.05,
+    },
+    ("obs_smoke", "overhead:*"): {
+        "max_disabled_overhead": 1.01, "max_traced_overhead": 1.05,
+    },
 }
 
 
@@ -182,6 +193,12 @@ def _cases_from(bench: str, rec: dict) -> dict:
         if rcv:
             put("recovery", recovered=rcv["recovered"],
                 breaker_trips=rcv["breaker_trips"])
+    elif bench.startswith("obs"):
+        for r in rec.get("overhead", ()):
+            put(f"overhead:{r['app']}",
+                disabled_overhead=r["disabled_overhead"],
+                traced_overhead=r["traced_overhead"],
+                steps=r["steps"])
     elif bench.startswith("serving"):
         for r in rec.get("parity", ()):
             put(f"parity:{r['app']}", max_err=r["max_err"])
@@ -220,7 +237,7 @@ def collect(results_dir: str = RESULTS_DIR) -> dict:
         if name == "trajectory":
             continue
         if name.endswith("_smoke") and name not in (
-            "serving_smoke", "robustness_smoke",
+            "serving_smoke", "robustness_smoke", "obs_smoke",
         ):
             continue  # smoke runs are CI plumbing, not perf data
         with open(path) as f:
@@ -300,6 +317,20 @@ def check(traj: dict | None = None, results_dir: str = RESULTS_DIR) -> int:
                     violations.append(f"{tag}: total demotion not bit-exact")
                 if floor.get("require_recovered") and fields.get("recovered") is False:
                     violations.append(f"{tag}: breakers did not recover")
+                d_ovh = fields.get("disabled_overhead")
+                if ("max_disabled_overhead" in floor and d_ovh is not None
+                        and d_ovh > floor["max_disabled_overhead"]):
+                    violations.append(
+                        f"{tag}: disabled-mode overhead {d_ovh:.4f}x > "
+                        f"{floor['max_disabled_overhead']}x"
+                    )
+                t_ovh = fields.get("traced_overhead")
+                if ("max_traced_overhead" in floor and t_ovh is not None
+                        and t_ovh > floor["max_traced_overhead"]):
+                    violations.append(
+                        f"{tag}: traced-mode overhead {t_ovh:.4f}x > "
+                        f"{floor['max_traced_overhead']}x"
+                    )
     if violations:
         raise AssertionError(
             "bench trajectory floor regressions:\n  " + "\n  ".join(violations)

@@ -39,6 +39,8 @@ import numpy as np
 
 from ...kernels import ops as kops
 from ...kernels import ref as kref
+from ...obs import metrics as _metrics
+from ...obs import trace as _otrace
 from ...robustness import faults as _faults
 from ...robustness.breaker import GuardConfig, NumericGuardError
 from .ir import Graph, Node
@@ -89,25 +91,29 @@ def handlers_for(backend: str) -> Dict[str, Callable]:
 # --------------------------------------------------------------------------- #
 # guarded-execution accounting (process-wide, mirrors conv_fallback_counts)    #
 # --------------------------------------------------------------------------- #
+#
+# Process-wide demotion counts live in the metrics registry as the
+# ``guard_demotions_total{op, scheme, reason}`` counter family (reason in
+# {exception, numeric, breaker_open}); the per-plan breakdown lives in
+# ``ExecutionPlan.guard_stats()``.  The accessors below are back-compat
+# *views* over the registry.
 
-_GUARD_LOCK = threading.Lock()
-#: "op/scheme/reason" -> demotions to the reference handler, process-wide
-#: (reason in {exception, numeric, breaker_open}); the per-plan breakdown
-#: lives in ``ExecutionPlan.guard_stats()``
-_GUARD_FALLBACKS: Dict[str, int] = {}
+_GUARD_METRIC = "guard_demotions_total"
 
 
 def guard_fallback_counts() -> Dict[str, int]:
     """Process-wide guarded-executor demotion counts, keyed
     ``"op/scheme/reason"`` -- the guarded-backend sibling of
-    :func:`repro.kernels.ops.conv_fallback_counts`."""
-    with _GUARD_LOCK:
-        return dict(_GUARD_FALLBACKS)
+    :func:`repro.kernels.ops.conv_fallback_counts`.  A view over the
+    ``guard_demotions_total`` registry family."""
+    counts = _metrics.registry().label_counts(
+        _GUARD_METRIC, "op", "scheme", "reason"
+    )
+    return {k: int(v) for k, v in counts.items()}
 
 
 def reset_guard_fallbacks() -> None:
-    with _GUARD_LOCK:
-        _GUARD_FALLBACKS.clear()
+    _metrics.registry().reset(_GUARD_METRIC)
 
 
 def _node_scheme(n: Node) -> str:
@@ -659,6 +665,8 @@ class ExecutionPlan:
             for name, v in env.items():
                 observer(name, v)
         guarded = self.backend == "guarded"
+        if _otrace.enabled():  # one branch per run when tracing is off
+            return self._run_steps_traced(env, params, observer, guarded)
         for step in self.steps:
             n = step.node
             xs = [env[i] for i in n.inputs]
@@ -674,8 +682,40 @@ class ExecutionPlan:
         outs = tuple(env[o] for o in self.graph.outputs)
         return outs[0] if len(outs) == 1 else outs
 
+    def _run_steps_traced(self, env, params, observer, guarded):
+        """The traced twin of the ``run_steps`` loop: one ``cat="plan"``
+        span around the run, one ``cat="step"`` span per step carrying op /
+        scheme / backend / output shape, demotions annotated in-span (the
+        ``demoted`` arg + a nested ``cat="guard"`` instant)."""
+        with _otrace.span(
+            "plan", cat="plan", backend=self.backend, steps=len(self.steps),
+            outputs=list(self.graph.outputs),
+        ):
+            for step in self.steps:
+                n = step.node
+                xs = [env[i] for i in n.inputs]
+                p = params.get(n.name, {})
+                with _otrace.span(
+                    n.name, cat="step", op=n.op, scheme=_node_scheme(n),
+                    backend=self.backend,
+                ) as sp:
+                    if guarded:
+                        y = self._exec_guarded(n, p, xs, sp)
+                    else:
+                        y = self._handlers[n.op](p, xs, n.attrs, self._rt)
+                    shape = jnp.shape(y)
+                    if all(isinstance(d, int) for d in shape):
+                        sp.set("out_shape", list(shape))
+                env[n.name] = y
+                if observer is not None:
+                    observer(n.name, y)
+                for f in step.frees:
+                    del env[f]
+        outs = tuple(env[o] for o in self.graph.outputs)
+        return outs[0] if len(outs) == 1 else outs
+
     # -- guarded execution ---------------------------------------------------- #
-    def _exec_guarded(self, n: Node, p, xs):
+    def _exec_guarded(self, n: Node, p, xs, sp=_otrace.NULL_SPAN):
         """One step under the guarded contract: try the primary (kernel)
         handler behind the step family's circuit breaker and fault-injection
         hook; on any exception or a numeric-guard trip, record the failure
@@ -694,7 +734,7 @@ class ExecutionPlan:
                 br = self._breakers[key] = cfg.make_breaker()
             allowed = br.allow()
         if not allowed:
-            self._count_guard(key, "breaker_open")
+            self._count_guard(key, "breaker_open", sp)
             return ref(p, xs, n.attrs, self._rt)
         fn = _faults.wrap_handler(n.op, primary)
         try:
@@ -705,7 +745,9 @@ class ExecutionPlan:
             with self._guard_lock:
                 br.record_failure()
             self._count_guard(
-                key, "numeric" if isinstance(e, NumericGuardError) else "exception"
+                key,
+                "numeric" if isinstance(e, NumericGuardError) else "exception",
+                sp,
             )
             return ref(p, xs, n.attrs, self._rt)
         with self._guard_lock:
@@ -713,7 +755,9 @@ class ExecutionPlan:
             self.guard_counters["primary_ok"] += 1
         return y
 
-    def _count_guard(self, key: Tuple[str, str], reason: str) -> None:
+    def _count_guard(
+        self, key: Tuple[str, str], reason: str, sp=_otrace.NULL_SPAN
+    ) -> None:
         gkey = f"{key[0]}/{key[1]}/{reason}"
         with self._guard_lock:
             c = self.guard_counters
@@ -723,8 +767,14 @@ class ExecutionPlan:
             elif reason == "numeric":
                 c["numeric_guard_trips"] += 1
             c["by_key"][gkey] = c["by_key"].get(gkey, 0) + 1
-        with _GUARD_LOCK:
-            _GUARD_FALLBACKS[gkey] = _GUARD_FALLBACKS.get(gkey, 0) + 1
+        _metrics.registry().counter(
+            _GUARD_METRIC, op=key[0], scheme=key[1], reason=reason
+        ).inc()
+        if _otrace.enabled():
+            sp.set("demoted", reason)  # annotate the enclosing step span
+            _otrace.instant(
+                f"demote:{key[0]}", cat="guard", scheme=key[1], reason=reason
+            )
 
     def guard_stats(self) -> Dict[str, Any]:
         """Snapshot of this plan's guarded-execution state: demotion

@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
+from ...obs import trace as _otrace
 from .ir import Graph
 
 __all__ = [
@@ -256,17 +257,21 @@ class PassManager:
                 inv(g, ctx)
             before = len(g.nodes)
             fp = _structure_fingerprint(g)
-            g2 = p.fn(g, ctx)
-            if self.validate_between:
-                graph_valid(g2, ctx)
-            for inv in p.post:
-                inv(g2, ctx)
-            ctx.stats[p.name] = PassStats(
-                p.name,
-                before,
-                len(g2.nodes),
-                changed=g2 is not g and _structure_fingerprint(g2) != fp,
-            )
+            with _otrace.span(p.name, cat="pass", nodes_before=before) as sp:
+                g2 = p.fn(g, ctx)
+                if self.validate_between:
+                    graph_valid(g2, ctx)
+                for inv in p.post:
+                    inv(g2, ctx)
+                stats = PassStats(
+                    p.name,
+                    before,
+                    len(g2.nodes),
+                    changed=g2 is not g and _structure_fingerprint(g2) != fp,
+                )
+                sp.set("nodes_after", stats.nodes_after)
+                sp.set("changed", stats.changed)
+            ctx.stats[p.name] = stats
             g = g2
         return g
 

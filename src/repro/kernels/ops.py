@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import metrics as _metrics
 from . import ref as _ref
 from .bsr_matmul import bsr_matmul as _bsr_matmul
 from .conv2d import conv2d_gemm as _conv2d_gemm
@@ -586,35 +587,42 @@ def qmatmul(
 #: VMEM, so the guard only arms on TPUs
 _CONV_VMEM_LIMIT = 12 * 2**20
 
-#: reason -> count of conv2d calls that lowered through lax.conv instead of
-#: the Pallas kernel (the documented fallback matrix: groups / dilation /
-#: degenerate output / VMEM overflow).  Counted at trace time under jit.
-_CONV_FALLBACKS: Dict[str, int] = {}
-
-#: scheme -> count of conv2d calls elected onto the 1x1 direct-GEMM fast
-#: path (im2col bypassed, lowered to dense/quant matmul).  Counted at trace
-#: time under jit, exactly like the fallback matrix -- an election is a
-#: lowering decision, not a fallback.
-_CONV_FASTPATHS: Dict[str, int] = {}
+#: conv2d lowering decisions live in the metrics registry, counted at trace
+#: time under jit:
+#:
+#: * ``conv_fallback_total{reason}`` -- calls lowered through lax.conv
+#:   instead of the Pallas kernel (the documented fallback matrix: groups /
+#:   dilation / degenerate output / VMEM overflow).
+#: * ``conv_fastpath_total{scheme}`` -- calls elected onto the 1x1
+#:   direct-GEMM fast path (im2col bypassed, lowered to dense/quant
+#:   matmul); an election is a lowering decision, not a fallback.
+#:
+#: The accessors below are back-compat *views* over those families.
+_CONV_FALLBACK_METRIC = "conv_fallback_total"
+_CONV_FASTPATH_METRIC = "conv_fastpath_total"
 
 
 def conv_fallback_counts() -> Dict[str, int]:
-    """Copy of the conv2d fallback counters (reason -> count) -- the
-    "no lax.conv except documented fallbacks" acceptance probe."""
-    return dict(_CONV_FALLBACKS)
+    """The conv2d fallback counters (reason -> count) -- the "no lax.conv
+    except documented fallbacks" acceptance probe.  A view over the
+    ``conv_fallback_total`` registry family."""
+    counts = _metrics.registry().label_counts(_CONV_FALLBACK_METRIC, "reason")
+    return {k: int(v) for k, v in counts.items()}
 
 
 def reset_conv_fallbacks() -> None:
-    _CONV_FALLBACKS.clear()
+    _metrics.registry().reset(_CONV_FALLBACK_METRIC)
 
 
 def conv_fastpath_counts() -> Dict[str, int]:
-    """Copy of the 1x1 direct-GEMM election counters (scheme -> count)."""
-    return dict(_CONV_FASTPATHS)
+    """The 1x1 direct-GEMM election counters (scheme -> count) -- a view
+    over the ``conv_fastpath_total`` registry family."""
+    counts = _metrics.registry().label_counts(_CONV_FASTPATH_METRIC, "scheme")
+    return {k: int(v) for k, v in counts.items()}
 
 
 def reset_conv_fastpaths() -> None:
-    _CONV_FASTPATHS.clear()
+    _metrics.registry().reset(_CONV_FASTPATH_METRIC)
 
 
 def conv_gemm1x1_elected(kh: int, kw: int, groups: int, padding, c: int) -> bool:
@@ -891,7 +899,7 @@ def conv2d(
         and block_h is None and block_o is None and block_c is None
         and conv_gemm1x1_elected(kh, kw_, groups, padding, c_live)
     ):
-        _CONV_FASTPATHS[scheme] = _CONV_FASTPATHS.get(scheme, 0) + 1
+        _metrics.registry().counter(_CONV_FASTPATH_METRIC, scheme=scheme).inc()
         return _conv2d_1x1_gemm(
             x, w, bias, stride=stride, kept=kept, w_scale=w_scale,
             x_scale=x_scale, activation=activation, epilogue=epilogue,
@@ -906,7 +914,7 @@ def conv2d(
         block_c=block_c,
     )
     if reason is not None:
-        _CONV_FALLBACKS[reason] = _CONV_FALLBACKS.get(reason, 0) + 1
+        _metrics.registry().counter(_CONV_FALLBACK_METRIC, reason=reason).inc()
         return _conv2d_fallback(
             x, w, bias, stride=stride, padding=padding, kept=kept,
             w_scale=w_scale, x_scale=x_scale, groups=groups, dilation=dilation,

@@ -17,6 +17,9 @@ Examples (CPU):
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import threading
 import time
 
 import jax
@@ -26,6 +29,60 @@ import numpy as np
 from ..configs import ARCH_IDS, get_config, smoke_config
 from ..models import get_model
 from ..serving.engine import Engine, Request, RequestScheduler
+
+
+class _MetricsDump:
+    """``--metrics-dump`` session: arms tracing for the duration, snapshots
+    the metrics registry every ``interval`` seconds on a daemon thread, and
+    on exit writes the snapshot series (plus a final one) to ``path`` and
+    the session's Chrome trace next to it (``<path>.trace.json``)."""
+
+    def __init__(self, path: str, interval: float):
+        self.path = path
+        self.interval = interval
+        self._snaps: list = []
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    def _loop(self) -> None:
+        from ..obs import metrics
+
+        while not self._stop.wait(self.interval):
+            self._snaps.append(
+                {"t": time.time(), "metrics": metrics.registry().snapshot()}
+            )
+
+    def __enter__(self) -> "_MetricsDump":
+        from ..obs import trace
+
+        trace.start_tracing()
+        self._thread = threading.Thread(
+            target=self._loop, name="metrics-dump", daemon=True
+        )
+        self._thread.start()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        from ..obs import metrics, trace
+
+        self._stop.set()
+        self._thread.join()
+        self._snaps.append(
+            {"t": time.time(), "metrics": metrics.registry().snapshot()}
+        )
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        with open(self.path, "w") as f:
+            json.dump(
+                {"interval_s": self.interval, "snapshots": self._snaps}, f,
+                indent=1, sort_keys=True,
+            )
+        buf = trace.stop_tracing()
+        trace_path = buf.save(self.path + ".trace.json")
+        print(f"metrics: {len(self._snaps)} snapshots -> "
+              f"{os.path.abspath(self.path)}")
+        print(f"trace: {len(buf.events)} events -> {trace_path} "
+              f"(load in Perfetto / chrome://tracing)")
 
 
 def _serve_graph_app(args) -> None:
@@ -226,6 +283,7 @@ def _serve_async(args) -> None:
                 continue
             print(f"async: {app}: p50={np.percentile(lats, 50) * 1e3:.2f}ms "
                   f"p95={np.percentile(lats, 95) * 1e3:.2f}ms "
+                  f"p99={np.percentile(lats, 99) * 1e3:.2f}ms "
                   f"over {lats.size} requests")
         # liveness/degradation snapshot: what an external monitor scrapes
         health = server.health()
@@ -236,6 +294,7 @@ def _serve_async(args) -> None:
         for app, p in health["plans"].items():
             s = p["stats"]
             line = (f"health: {app}: queue_depth={p['queue_depth']} "
+                    f"queue_peak={p['queue_peak']} "
                     f"bad_frames={s['bad_frames']} "
                     f"watchdog_timeouts={s['watchdog_timeouts']} "
                     f"rejected={s['rejected']} shed={s['shed']}")
@@ -300,8 +359,18 @@ def main() -> None:
                          "vs the fp32 reference plan")
     ap.add_argument("--calib-batches", type=int, default=2,
                     help="sample batches for activation calibration")
+    ap.add_argument("--metrics-dump", default=None,
+                    help="write periodic metrics-registry snapshots to this "
+                         "JSON path and the session's Chrome trace to "
+                         "<path>.trace.json (tracing is armed for the run)")
+    ap.add_argument("--metrics-interval", type=float, default=0.5,
+                    help="seconds between --metrics-dump registry snapshots")
     args = ap.parse_args()
 
+    if args.metrics_dump and (args.async_serve or args.graph_app):
+        with _MetricsDump(args.metrics_dump, args.metrics_interval):
+            _serve_async(args) if args.async_serve else _serve_graph_app(args)
+        return
     if args.async_serve:
         _serve_async(args)
         return

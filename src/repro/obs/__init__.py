@@ -1,0 +1,47 @@
+"""Unified observability: metrics registry, structured tracing, profiler.
+
+Three stdlib-light pillars (see ARCHITECTURE.md section 8):
+
+* :mod:`repro.obs.metrics` -- process-wide named counters / gauges /
+  bounded-reservoir histograms with labels, JSON + Prometheus exporters.
+* :mod:`repro.obs.trace` -- nestable spans with an injectable clock,
+  Chrome-trace/Perfetto JSON output, near-zero cost when disabled.
+* :mod:`repro.obs.profile` -- ``profile_plan``: run a compiled plan under
+  tracing and reduce to a per-step wall-time / bytes / attribution table.
+"""
+
+from . import metrics, trace
+from .metrics import MetricsRegistry, registry
+from .profile import PlanProfile, StepProfile, profile_plan
+from .trace import (
+    TraceBuffer,
+    async_begin,
+    async_end,
+    async_instant,
+    current_buffer,
+    instant,
+    span,
+    start_tracing,
+    stop_tracing,
+    tracing,
+)
+
+__all__ = [
+    "metrics",
+    "trace",
+    "MetricsRegistry",
+    "registry",
+    "PlanProfile",
+    "StepProfile",
+    "profile_plan",
+    "TraceBuffer",
+    "span",
+    "instant",
+    "async_begin",
+    "async_instant",
+    "async_end",
+    "start_tracing",
+    "stop_tracing",
+    "tracing",
+    "current_buffer",
+]

@@ -1,0 +1,237 @@
+"""Plan profiler: run an ExecutionPlan under tracing and reduce to a
+per-step cost table.
+
+:func:`profile_plan` is the paper's "where does the millisecond go"
+instrument: it executes a compiled plan eagerly inside a private tracing
+session (the caller's tracing state is restored afterwards), pairs the
+per-step spans the executor emits, and joins them with the plan's
+abstract-eval memory estimate into one table per step:
+
+* wall milliseconds (median over ``runs`` traced executions) and share of
+  the total;
+* estimated bytes moved -- the step's input + parameter + output bytes
+  from :meth:`ExecutionPlan.memory_estimate` (HBM traffic if nothing
+  fuses; an upper bound when epilogues run in-tile);
+* kernel-vs-reference attribution -- whether the step dispatched a
+  Pallas-backed handler, the shared jnp implementation, or (for guarded
+  plans) was demoted to the reference oracle mid-run.
+
+Surfaces: ``python -m repro.launch.profile`` (text table + Chrome trace
+out) and the ``repro.obs`` test/bench suite.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import trace as _trace
+
+__all__ = ["StepProfile", "PlanProfile", "profile_plan"]
+
+
+@dataclasses.dataclass
+class StepProfile:
+    name: str
+    op: str
+    ms: float
+    pct: float
+    bytes_moved: int
+    attribution: str  # "kernel" | "quant" | "reference" | "shared" | "demoted"
+    out_shape: Tuple[int, ...]
+    demotions: int = 0
+
+
+@dataclasses.dataclass
+class PlanProfile:
+    backend: str
+    steps: List[StepProfile]
+    total_ms: float
+    runs: int
+    memory: Dict[str, Any]
+    trace: Optional[Any] = None  # TraceBuffer of the last traced run
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "backend": self.backend,
+            "total_ms": self.total_ms,
+            "runs": self.runs,
+            "peak_activation_bytes": self.memory["peak_activation_bytes"],
+            "param_bytes": self.memory["param_bytes"],
+            "steps": [dataclasses.asdict(s) for s in self.steps],
+        }
+
+    def save_json(self, path: str) -> str:
+        import os
+
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+        return os.path.abspath(path)
+
+    def render_text(self, top: Optional[int] = None) -> str:
+        """Aligned per-step table, hottest first; ``top`` truncates."""
+        rows = sorted(self.steps, key=lambda s: -s.ms)
+        if top is not None:
+            rows = rows[:top]
+        name_w = max([len("step")] + [len(s.name) for s in rows])
+        op_w = max([len("op")] + [len(s.op) for s in rows])
+        lines = [
+            f"plan profile: backend={self.backend} steps={len(self.steps)} "
+            f"total={self.total_ms:.3f}ms over {self.runs} run(s)",
+            f"{'step':{name_w}s}  {'op':{op_w}s}  {'ms':>9s}  {'%':>6s}  "
+            f"{'est bytes':>10s}  {'via':<9s}  out",
+        ]
+        for s in rows:
+            via = s.attribution + (f"(x{s.demotions})" if s.demotions else "")
+            lines.append(
+                f"{s.name:{name_w}s}  {s.op:{op_w}s}  {s.ms:9.3f}  "
+                f"{s.pct:5.1f}%  {_human_bytes(s.bytes_moved):>10s}  "
+                f"{via:<9s}  {list(s.out_shape)}"
+            )
+        return "\n".join(lines)
+
+
+def _human_bytes(n: int) -> str:
+    for unit in ("B", "KB", "MB", "GB"):
+        if abs(n) < 1024 or unit == "GB":
+            return f"{n:.1f}{unit}" if unit != "B" else f"{n}B"
+        n /= 1024
+    return f"{n}GB"
+
+
+def _struct_of(x):
+    if isinstance(x, jax.ShapeDtypeStruct):
+        return x
+    return jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x))
+
+
+def _nbytes(struct) -> int:
+    size = 1
+    for d in struct.shape:
+        size *= int(d)
+    return size * jnp.dtype(struct.dtype).itemsize
+
+
+def _attribution(plan) -> Dict[str, str]:
+    """op -> how this plan's backend dispatches it: a backend-specific
+    handler ("kernel"/"quant"/"reference") or the implementation shared
+    with the reference table ("shared")."""
+    from ..core.graph.executor import handlers_for
+
+    ref = handlers_for("reference")
+    if plan.backend == "guarded":
+        primary = handlers_for(plan.guard.primary)
+        label = plan.guard.primary
+    else:
+        primary = handlers_for(plan.backend)
+        label = plan.backend
+    out: Dict[str, str] = {}
+    for step in plan.steps:
+        op = step.node.op
+        if label == "reference":
+            out[op] = "reference"
+            continue
+        h = primary.get(op, ref.get(op))
+        out[op] = "shared" if h is ref.get(op) else label
+    return out
+
+
+def profile_plan(
+    plan,
+    params,
+    *args,
+    runs: int = 1,
+    warmup: int = 1,
+    clock=time.perf_counter,
+) -> PlanProfile:
+    """Execute ``plan(params, *args)`` eagerly under tracing and reduce the
+    per-step spans to a :class:`PlanProfile`.  ``warmup`` untraced runs
+    absorb jit/Pallas compilation; ``runs`` traced runs are reduced to a
+    per-step *median* so one GC pause cannot masquerade as a hot step.
+    The caller's tracing state is saved and restored around the session."""
+    if runs < 1 or warmup < 0:
+        raise ValueError(f"need runs >= 1, warmup >= 0; got {runs}/{warmup}")
+    for _ in range(warmup):
+        jax.block_until_ready(plan(params, *args))
+
+    n_steps = len(plan.steps)
+    prev = _trace.state()
+    try:
+        buf = _trace.start_tracing(clock)
+        for _ in range(runs):
+            jax.block_until_ready(plan(params, *args))
+    finally:
+        _trace.restore(prev)
+
+    step_spans = [s for s in buf.spans() if s["cat"] == "step"]
+    if len(step_spans) != runs * n_steps:
+        raise RuntimeError(
+            f"expected {runs}x{n_steps} step spans, got {len(step_spans)} -- "
+            "was the plan executed under jit, or tracing toggled mid-run?"
+        )
+    demote_ts = [
+        (ev["tid"], ev["ts"]) for ev in buf.instants("guard")
+        if ev["name"].startswith("demote:")
+    ]
+
+    # per-step median over the runs (spans arrive in execution order)
+    per_step_ms: List[List[float]] = [[] for _ in range(n_steps)]
+    demotions = [0] * n_steps
+    for r in range(runs):
+        for i in range(n_steps):
+            sp = step_spans[r * n_steps + i]
+            per_step_ms[i].append(sp["dur"] / 1e3)
+            demotions[i] += sum(
+                1 for tid, ts in demote_ts
+                if tid == sp["tid"] and sp["ts"] <= ts <= sp["ts"] + sp["dur"]
+            )
+
+    mem = plan.memory_estimate(*[_struct_of(a) for a in args])
+    out_bytes = {name: b for name, b, _live in mem["per_step"]}
+    # bytes moved = inputs + params + output of each step (name -> bytes of
+    # every value the step touches; graph inputs seed the map)
+    val_bytes: Dict[str, int] = {
+        name: _nbytes(_struct_of(a))
+        for name, a in zip(plan.graph.inputs, args)
+    }
+    attribution = _attribution(plan)
+    rows: List[StepProfile] = []
+    total_ms = 0.0
+    for i, step in enumerate(plan.steps):
+        n = step.node
+        samples = sorted(per_step_ms[i])
+        ms = samples[len(samples) // 2]
+        total_ms += ms
+        pbytes = sum(
+            _nbytes(_struct_of(v))
+            for v in jax.tree.leaves(params.get(n.name, {}))
+        )
+        in_bytes = sum(val_bytes.get(x, 0) for x in n.inputs)
+        val_bytes[n.name] = out_bytes.get(n.name, 0)
+        attr = attribution[n.op]
+        if demotions[i]:
+            attr = "demoted"
+        rows.append(StepProfile(
+            name=n.name, op=n.op, ms=ms, pct=0.0,
+            bytes_moved=in_bytes + pbytes + out_bytes.get(n.name, 0),
+            attribution=attr,
+            out_shape=tuple(
+                step_spans[i]["args"].get("out_shape", ())
+            ),
+            demotions=demotions[i],
+        ))
+    for r in rows:
+        r.pct = (100.0 * r.ms / total_ms) if total_ms else 0.0
+    return PlanProfile(
+        backend=plan.backend, steps=rows, total_ms=total_ms, runs=runs,
+        memory={k: mem[k] for k in ("peak_activation_bytes", "param_bytes",
+                                    "param_bytes_by_dtype",
+                                    "weight_bytes_saved")},
+        trace=buf,
+    )

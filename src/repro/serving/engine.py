@@ -37,6 +37,7 @@ import numpy as np
 from ..configs.base import ArchConfig
 from ..models import transformer as lm_mod
 from ..models.registry import Model
+from ..obs import metrics as _metrics
 
 Array = jax.Array
 
@@ -146,10 +147,14 @@ class PlanServer:
         via_vmap: bool = False,
         flush_after: Optional[float] = None,
         clock: Callable[[], float] = time.monotonic,
+        name: str = "default",
     ):
         self.plan = plan
         self.params = params
         self.batch_size = batch_size
+        #: label for this server's registry mirror (``plan=<name>`` on the
+        #: ``serving_v1_events_total`` family)
+        self.name = name
         self.batched = plan.batched(batch_size, via_vmap=via_vmap)
         self._pending: List[Tuple[Array, ...]] = []
         self.closed = False
@@ -201,6 +206,9 @@ class PlanServer:
             return None
         out = self.flush()
         self.stats["deadline_flushes"] += 1
+        _metrics.registry().counter(
+            "serving_v1_events_total", plan=self.name, event="deadline_flushes"
+        ).inc()
         return out
 
     def poll(self):
@@ -230,8 +238,13 @@ class PlanServer:
             jnp.stack([f[i] for f in frames]) for i in range(len(frames[0]))
         )
         out = self.batched(self.params, *inputs)
+        reg = _metrics.registry()
         for k, v in self.batched.last_stats.items():
             self.stats[k] = self.stats.get(k, 0) + v
+            if v:  # mirror: the v1 sibling of serving_events_total
+                reg.counter(
+                    "serving_v1_events_total", plan=self.name, event=k
+                ).inc(v)
         return out
 
     def close(self):

@@ -44,6 +44,17 @@ Within a plan, requests are picked by ``(-priority, arrival)`` -- a higher
 ``priority`` class jumps the queue but never preempts a running batch.
 Completion latency and per-request deadline misses are recorded per plan;
 :meth:`latency_stats` reduces them to p50/p95/p99.
+
+Observability (``repro.obs``): every per-plan counter bump is **mirrored**
+into the metrics registry (``serving_events_total{plan, event}``,
+``serving_latency_seconds{plan}``, ``serving_queue_depth_peak{plan}``) --
+the per-instance ``stats`` dicts stay authoritative so two servers in one
+process read their own numbers, while the registry aggregates across them
+for export.  Under tracing, each request is one Chrome-trace *async* span
+(``ph b/n/e``, id = rid) from admission to verdict, with a ``batched``
+milestone naming the macro-batch that served it; each macro-batch is a
+duration span carrying the rids it served -- so a trace links every
+completed request to exactly one batch.
 """
 
 from __future__ import annotations
@@ -57,6 +68,8 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import metrics as _metrics
+from ..obs import trace as _otrace
 from ..utils.retry import retry_call
 
 __all__ = [
@@ -167,6 +180,9 @@ class _PlanEntry:
     batched: Any  # BatchedPlan
     queue: List[RequestHandle] = dataclasses.field(default_factory=list)
     seq: int = 0  # FIFO tiebreak within a priority class
+    #: high-water mark of the admission queue (never resets; the sizing
+    #: signal ``health()`` exposes per plan)
+    queue_peak: int = 0
     #: per-input (shape, dtype) submit() validates against; given at
     #: add_plan or latched from the first accepted frame
     input_spec: Optional[Tuple[Tuple[Tuple[int, ...], Any], ...]] = None
@@ -233,6 +249,7 @@ class AsyncPlanServer:
         self._plans: Dict[str, _PlanEntry] = {}
         self._rr = 0  # round-robin start index over plan names
         self._rid = 0
+        self._batch_seq = 0  # trace-facing macro-batch ids
         self._lock = threading.RLock()
         self._work = threading.Event()  # submit -> wake the scheduler thread
         self._stop = threading.Event()
@@ -244,6 +261,16 @@ class AsyncPlanServer:
         #: server whose caller works purely through handles (never drains)
         #: plateaus instead of retaining every output array forever
         self._completed: Deque[RequestHandle] = deque(maxlen=RETAINED_COMPLETIONS)
+
+    @staticmethod
+    def _bump(entry: _PlanEntry, event: str, amount: int = 1) -> None:
+        """One stat increment, mirrored into the registry family
+        ``serving_events_total{plan, event}``."""
+        entry.stats[event] += amount
+        if amount:
+            _metrics.registry().counter(
+                "serving_events_total", plan=entry.name, event=event
+            ).inc(amount)
 
     # -- configuration ------------------------------------------------------- #
     def add_plan(
@@ -334,7 +361,7 @@ class AsyncPlanServer:
                     zip(frames, entry.input_spec)
                 ):
                     if tuple(f.shape) != shape or np.dtype(f.dtype) != dtype:
-                        entry.stats["bad_frames"] += 1
+                        self._bump(entry, "bad_frames")
                         raise FrameSpecError(
                             f"plan {plan_name!r} input {i}: frame is "
                             f"{tuple(f.shape)}/{np.dtype(f.dtype)}, spec is "
@@ -344,7 +371,7 @@ class AsyncPlanServer:
             shed: Optional[RequestHandle] = None
             if len(entry.queue) >= self.max_queue:
                 if self.overload == "reject":
-                    entry.stats["rejected"] += 1
+                    self._bump(entry, "rejected")
                     raise QueueFullError(
                         f"plan {plan_name!r} queue full "
                         f"({len(entry.queue)}/{self.max_queue}); request rejected"
@@ -356,7 +383,7 @@ class AsyncPlanServer:
                 # it away must never evict a higher-priority queued request.
                 victim = max(entry.queue, key=lambda h: (-h.priority, h._seq))
                 if (-priority, entry.seq) >= (-victim.priority, victim._seq):
-                    entry.stats["shed"] += 1
+                    self._bump(entry, "shed")
                     raise QueueFullError(
                         f"plan {plan_name!r} queue full "
                         f"({len(entry.queue)}/{self.max_queue}) of equal-or-"
@@ -364,7 +391,7 @@ class AsyncPlanServer:
                     )
                 entry.queue.remove(victim)
                 victim._inputs = None  # evicted: release its frame arrays
-                entry.stats["shed"] += 1
+                self._bump(entry, "shed")
                 shed = victim
             handle = RequestHandle(
                 rid=self._rid, plan=plan_name, priority=priority,
@@ -376,7 +403,17 @@ class AsyncPlanServer:
             handle._seq = entry.seq
             entry.seq += 1
             entry.queue.append(handle)
-            entry.stats["submitted"] += 1
+            self._bump(entry, "submitted")
+            if len(entry.queue) > entry.queue_peak:
+                entry.queue_peak = len(entry.queue)
+                _metrics.registry().gauge(
+                    "serving_queue_depth_peak", plan=plan_name
+                ).set_max(entry.queue_peak)
+            if _otrace.enabled():
+                _otrace.async_begin(
+                    "request", handle.rid, cat="serving", plan=plan_name,
+                    priority=priority,
+                )
         if shed is not None:
             shed._fail(
                 QueueFullError(
@@ -384,6 +421,9 @@ class AsyncPlanServer:
                 ),
                 now,
             )
+            if _otrace.enabled():
+                _otrace.async_end("request", shed.rid, cat="serving",
+                                  phase="shed")
         self._work.set()
         return handle
 
@@ -433,7 +473,10 @@ class AsyncPlanServer:
         entry.queue = [h for h in entry.queue if id(h) not in taken]
         return batch
 
-    def _execute(self, entry: _PlanEntry, batch: List[RequestHandle]) -> None:
+    def _execute(
+        self, entry: _PlanEntry, batch: List[RequestHandle],
+        reason: str = "full",
+    ) -> None:
         """Run one macro-batch through the plan's compiled chunk and resolve
         every handle.  Called with the admission lock *released* so submits
         keep landing while the device works.
@@ -442,7 +485,12 @@ class AsyncPlanServer:
         thread: if it has not produced a verdict within the deadline the
         batch's handles fail with :class:`WatchdogTimeout` and the thread is
         abandoned (the handles' first-verdict-wins guard makes a late finish
-        harmless) -- a hung kernel costs one batch, never the scheduler."""
+        harmless) -- a hung kernel costs one batch, never the scheduler.
+
+        Under tracing the whole call is one ``cat="serving"`` batch span
+        (carrying the served rids and release ``reason``); each member
+        request gets a ``batched`` milestone naming this batch and its
+        terminal ``e`` event at the verdict."""
         box: Dict[str, Any] = {}
 
         def compute() -> None:
@@ -457,47 +505,82 @@ class AsyncPlanServer:
             except Exception as e:  # resolve handles; callers see the error
                 box["err"] = e
 
-        timed_out = False
-        if self.watchdog is None:
-            compute()
-        else:
-            worker = threading.Thread(
-                target=compute, name=f"batch-{entry.name}", daemon=True
-            )
-            worker.start()
-            worker.join(self.watchdog)
-            timed_out = worker.is_alive()
-        now = self._clock()
         with self._lock:
-            out = box.get("out")
-            err = box.get("err")
-            if timed_out:
-                out = None
-                err = WatchdogTimeout(
-                    f"batch of {len(batch)} on plan {entry.name!r} exceeded "
-                    f"the {self.watchdog}s watchdog deadline"
-                )
-                entry.stats["watchdog_timeouts"] += 1
-            for i, h in enumerate(batch):
-                h._inputs = None  # executed: release the frame arrays
-                if err is not None:
-                    h._fail(err, now)
-                else:
-                    h._resolve(
-                        tuple(o[i] for o in out) if isinstance(out, tuple)
-                        else out[i],
-                        now,
+            bid = self._batch_seq
+            self._batch_seq += 1
+        with _otrace.span(
+            "batch", cat="serving", plan=entry.name, batch=bid, reason=reason,
+            rids=[h.rid for h in batch],
+        ) as bsp:
+            if _otrace.enabled():
+                for h in batch:
+                    _otrace.async_instant(
+                        "request", h.rid, cat="serving", phase="batched",
+                        batch=bid,
                     )
-                if h.deadline_missed:
-                    entry.stats["deadline_misses"] += 1
-                entry.stats["completed"] += 1
-                if h.latency is not None:
-                    entry.latencies.append(h.latency)
-                self._completed.append(h)
-            entry.stats["batches"] += 1
-            entry.stats["padded_frames"] += entry.batched.batch_size - len(batch)
-            self._inflight -= 1
-            self._idle.notify_all()
+            timed_out = False
+            if self.watchdog is None:
+                compute()
+            else:
+                worker = threading.Thread(
+                    target=compute, name=f"batch-{entry.name}", daemon=True
+                )
+                worker.start()
+                worker.join(self.watchdog)
+                timed_out = worker.is_alive()
+            now = self._clock()
+            with self._lock:
+                out = box.get("out")
+                err = box.get("err")
+                if timed_out:
+                    out = None
+                    err = WatchdogTimeout(
+                        f"batch of {len(batch)} on plan {entry.name!r} "
+                        f"exceeded the {self.watchdog}s watchdog deadline"
+                    )
+                    self._bump(entry, "watchdog_timeouts")
+                    bsp.set("timed_out", True)
+                    _otrace.instant(
+                        "watchdog_timeout", cat="serving", plan=entry.name,
+                        batch=bid,
+                    )
+                traced = _otrace.enabled()
+                for i, h in enumerate(batch):
+                    h._inputs = None  # executed: release the frame arrays
+                    if err is not None:
+                        h._fail(err, now)
+                    else:
+                        h._resolve(
+                            tuple(o[i] for o in out) if isinstance(out, tuple)
+                            else out[i],
+                            now,
+                        )
+                    if h.deadline_missed:
+                        self._bump(entry, "deadline_misses")
+                        _otrace.instant(
+                            "deadline_miss", cat="serving", plan=entry.name,
+                            rid=h.rid, batch=bid,
+                        )
+                    self._bump(entry, "completed")
+                    if h.latency is not None:
+                        entry.latencies.append(h.latency)
+                        _metrics.registry().histogram(
+                            "serving_latency_seconds", plan=entry.name
+                        ).observe(h.latency)
+                    self._completed.append(h)
+                    if traced:
+                        _otrace.async_end(
+                            "request", h.rid, cat="serving",
+                            phase="failed" if err is not None else "completed",
+                            batch=bid, deadline_missed=h.deadline_missed,
+                        )
+                self._bump(entry, "batches")
+                self._bump(
+                    entry, "padded_frames",
+                    entry.batched.batch_size - len(batch),
+                )
+                self._inflight -= 1
+                self._idle.notify_all()
 
     def step(self, *, force: bool = False) -> int:
         """One synchronous scheduler tick: visit every plan queue in fair
@@ -526,9 +609,9 @@ class AsyncPlanServer:
                     continue
                 batch = self._take_batch(entry, t)
                 if reason in ("flush_after", "deadline"):
-                    entry.stats["deadline_flushes"] += 1
+                    self._bump(entry, "deadline_flushes")
                 self._inflight += 1
-            self._execute(entry, batch)
+            self._execute(entry, batch, reason)
             executed += 1
         return executed
 
@@ -642,6 +725,7 @@ class AsyncPlanServer:
             for n, e in self._plans.items():
                 d: Dict[str, Any] = {
                     "queue_depth": len(e.queue),
+                    "queue_peak": e.queue_peak,
                     "stats": dict(e.stats),
                 }
                 guard_stats = getattr(e.plan, "guard_stats", None)

@@ -4,8 +4,10 @@ device (the dry-run sets its own 512-device flag in a separate process)."""
 import jax
 import pytest
 
-from repro.core.graph import executor as _executor
+from repro.core.graph import executor as _executor  # noqa: F401 (re-export)
 from repro.kernels import ops as kops
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _otrace
 from repro.robustness import faults as _faults
 
 
@@ -22,42 +24,40 @@ def pytest_configure(config):
 # global-state isolation                                                       #
 # --------------------------------------------------------------------------- #
 #
-# Two pieces of process-level mutable state leak between tests if left alone:
-# the conv2d fallback counters (ops._CONV_FALLBACKS) and the block-size
-# TuningCache singleton (entries, enabled flag, sweep counter, save path).
-# The autouse fixture below snapshots both around EVERY test so no test can
-# observe another's mutations -- the order-independence regression lives in
-# tests/test_state_isolation.py, which drives these helpers directly.
+# Process-level mutable state leaks between tests if left alone: the
+# metrics registry (conv fallback/fastpath counters, guard demotions,
+# serving mirrors all live there now), the tracing switch + buffer, and the
+# block-size TuningCache singleton (entries, enabled flag, sweep counter,
+# save path).  The autouse fixture below snapshots all of it around EVERY
+# test so no test can observe another's mutations -- the order-independence
+# regression lives in tests/test_state_isolation.py, which drives these
+# helpers directly.
 
 
 def snapshot_global_state():
-    """Capture the process-level kernel state a test could mutate."""
+    """Capture the process-level kernel/obs state a test could mutate."""
     cache = kops.tuning_cache()
     return {
-        "conv_fallbacks": kops.conv_fallback_counts(),  # already a copy
-        "conv_fastpaths": kops.conv_fastpath_counts(),  # already a copy
+        "metrics": _metrics.registry().dump_state(),  # deep copy
+        "trace": _otrace.state(),
         "tune_entries": dict(cache.entries),
         "tune_enabled": cache.enabled,
         "tune_sweeps": cache.sweeps,
         "tune_path": cache.path,
         "tune_ops_filter": cache.ops_filter,
         "tune_stats": {op: dict(s) for op, s in cache.stats.items()},
-        "guard_fallbacks": _executor.guard_fallback_counts(),  # already a copy
     }
 
 
 def restore_global_state(snap) -> None:
-    """Reset the process-level kernel state to ``snap`` (exact contents, not
-    a merge: entries/counters added since the snapshot are discarded).
+    """Reset the process-level kernel/obs state to ``snap`` (exact contents,
+    not a merge: entries/counters/metric families added since the snapshot
+    are discarded, and the tracing switch goes back to its prior setting).
     Any FaultPlan a test left installed is force-uninstalled first, so a
     failing chaos test can never leak patched kernel entry points."""
     _faults.uninstall_all()
-    _executor.reset_guard_fallbacks()
-    _executor._GUARD_FALLBACKS.update(snap.get("guard_fallbacks", {}))
-    kops.reset_conv_fallbacks()
-    kops._CONV_FALLBACKS.update(snap["conv_fallbacks"])
-    kops.reset_conv_fastpaths()
-    kops._CONV_FASTPATHS.update(snap["conv_fastpaths"])
+    _metrics.registry().load_state(snap["metrics"])
+    _otrace.restore(snap["trace"])
     cache = kops.tuning_cache()
     cache.entries = dict(snap["tune_entries"])
     cache.enabled = snap["tune_enabled"]

@@ -622,3 +622,32 @@ def test_chaos_gate_all_apps_zero_loss_and_bitexact_fallback():
         total = server.stats
         assert total["completed"] == total["submitted"]  # zero request loss
         assert total["bad_frames"] == 0 and total["watchdog_timeouts"] == 0
+
+
+def test_demotions_surface_in_registry_and_trace():
+    """Chaos observability contract (make chaos-smoke): a guarded run under
+    fault injection reports every demotion BOTH ways -- as registry counters
+    (guard_demotions_total, the guard_fallback_counts view) and as trace
+    annotations (a ``demoted`` arg on the step span plus a cat="guard"
+    instant), and the two accounts agree event-for-event."""
+    from repro.obs import metrics, trace
+
+    g, plan = _tiny()
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 8))
+    with FaultPlan([FaultRule("linear", "raise", rate=1.0)], seed=0):
+        with trace.tracing() as buf:
+            plan(g.params, x)
+    # registry side
+    assert guard_fallback_counts()["linear/f32/exception"] == 1
+    series = metrics.registry().counter(
+        "guard_demotions_total", op="linear", scheme="f32", reason="exception"
+    )
+    assert series.value == 1
+    # trace side: the step span is annotated and a guard instant fired
+    (step,) = [s for s in buf.spans() if s["cat"] == "step"]
+    assert step["args"]["demoted"] == "exception"
+    (inst,) = buf.instants("guard")
+    assert inst["name"] == "demote:linear"
+    assert inst["args"] == {"scheme": "f32", "reason": "exception"}
+    # the instant fired inside the step's time window
+    assert step["ts"] <= inst["ts"] <= step["ts"] + step["dur"]

@@ -1,9 +1,10 @@
 """Global-state isolation: no test may observe another's mutations of the
-process-level kernel state (conv fallback counters, the TuningCache
-singleton).  The autouse fixture in conftest.py enforces this; the tests
-here prove ORDER INDEPENDENCE by running two state-mutating "tests" in both
-orders through the same snapshot/restore machinery and asserting each sees
-pristine state regardless of which ran first."""
+process-level kernel/obs state (the metrics registry -- which now hosts
+the conv fallback and guard demotion counters -- the tracing switch, and
+the TuningCache singleton).  The autouse fixture in conftest.py enforces
+this; the tests here prove ORDER INDEPENDENCE by running two state-mutating
+"tests" in both orders through the same snapshot/restore machinery and
+asserting each sees pristine state regardless of which ran first."""
 
 import jax
 import jax.numpy as jnp
@@ -33,25 +34,41 @@ def _mutate_tuning_cache():
 
 
 def _mutate_guard_state():
-    """Mutator C: bump the guarded-executor demotion counters and leave a
-    FaultPlan installed (deliberately not uninstalled -- restore must
-    force-uninstall it so patched kernel entry points never leak)."""
-    from repro.core.graph import executor as _executor
+    """Mutator C: bump the guarded-executor demotion counters (now a
+    registry family) and leave a FaultPlan installed (deliberately not
+    uninstalled -- restore must force-uninstall it so patched kernel entry
+    points never leak)."""
+    from repro.obs import metrics
     from repro.robustness import FaultPlan, FaultRule, active_fault_plan
 
-    with _executor._GUARD_LOCK:
-        _executor._GUARD_FALLBACKS["linear/f32/exception"] = (
-            _executor._GUARD_FALLBACKS.get("linear/f32/exception", 0) + 3
-        )
+    metrics.registry().counter(
+        "guard_demotions_total", op="linear", scheme="f32", reason="exception"
+    ).inc(3)
     FaultPlan([FaultRule("matmul", "raise")]).install()
     assert active_fault_plan() is not None
+
+
+def _mutate_obs_state():
+    """Mutator D: dirty the metrics registry with fresh families AND flip
+    the process tracing switch on (buffer + enabled flag) -- restore must
+    drop the families and disarm tracing."""
+    from repro.obs import metrics, trace
+
+    metrics.registry().counter("isolation_probe_total", case="d").inc(2)
+    metrics.registry().histogram("isolation_probe_ms", case="d").observe(1.5)
+    trace.start_tracing()
+    trace.instant("probe", cat="test")
+    assert trace.enabled()
 
 
 def _assert_pristine(baseline):
     assert snapshot_global_state() == baseline
 
 
-@pytest.mark.parametrize("order", ["ab", "ba", "ac", "ca", "bc", "cb"])
+@pytest.mark.parametrize(
+    "order",
+    ["ab", "ba", "ac", "ca", "bc", "cb", "ad", "da", "bd", "db", "cd", "dc"],
+)
 def test_mutators_are_isolated_in_both_orders(order):
     """Run the mutator pairs in both orders, each wrapped in the fixture's
     snapshot/restore; the state observed before and after every mutator must
@@ -61,6 +78,7 @@ def test_mutators_are_isolated_in_both_orders(order):
         "a": _mutate_fallback_counters,
         "b": _mutate_tuning_cache,
         "c": _mutate_guard_state,
+        "d": _mutate_obs_state,
     }
     for key in order:
         _assert_pristine(baseline)  # previous mutator's damage fully undone
@@ -103,6 +121,22 @@ def test_fixture_restores_guard_state():
     _mutate_guard_state()
     assert guard_fallback_counts().get("linear/f32/exception", 0) >= 3
     assert active_fault_plan() is not None
+
+
+def test_fixture_restores_obs_state():
+    from repro.obs import metrics, trace
+
+    _mutate_obs_state()
+    assert "isolation_probe_total" in metrics.registry().names()
+    assert trace.enabled()
+
+
+def test_fixture_left_no_obs_residue():
+    from repro.obs import metrics, trace
+
+    assert "isolation_probe_total" not in metrics.registry().names()
+    assert not trace.enabled()
+    assert trace.current_buffer() is None
 
 
 def test_fixture_left_no_guard_residue():
