@@ -18,6 +18,12 @@ What is recorded (``results/BENCH_serving.json``, ``_smoke`` variant in CI):
 4. **fairness** -- 10:1 skewed traffic over two plans: the minority plan's
    requests must complete in the first scheduler rotations, not behind the
    majority's backlog.
+5. **multi_tenant** -- sustained overload at 2x capacity with a 10:1
+   hot/light tenant skew on the injected clock: per-tenant p50/p95/p99,
+   throttle/shed counts and ladder-transition counts.  Gated: the in-quota
+   light tenant loses zero requests and stays within its deadline SLO
+   while the hot tenant's excess is absorbed by its quota + degradation
+   ladder -- the armed watchdog must never fire.
 
 ``--smoke`` shrinks shapes and traffic so CI exercises the full path
 without a TPU (wired into ``make bench-smoke``).
@@ -86,6 +92,7 @@ def bench_serving(smoke: bool = False, out_path: str | None = None) -> dict:
         "throughput": {},
         "backpressure": {},
         "fairness": {},
+        "multi_tenant": {},
     }
     plans = _build_plans(smoke, backend)
     rng = np.random.default_rng(0)
@@ -245,6 +252,116 @@ def bench_serving(smoke: bool = False, out_path: str | None = None) -> dict:
     assert ticks_to_light <= 2, ticks_to_light  # round-robin, not FIFO-global
     print(f"serving_fairness,ticks_until_light_done={ticks_to_light},"
           f"heavy_done={heavy_done}/{len(heavy_handles)}")
+
+    # 5. multi-tenant overload: 2x sustained capacity with a 10:1 hot/light
+    # skew, driven tick-by-tick on the injected clock (deterministic).  The
+    # in-quota light tenant must ride out the storm -- zero lost requests,
+    # deadline misses within its SLO -- while the hot tenant's excess is
+    # absorbed by its token bucket and the degradation ladder (throttle ->
+    # shrink_flush -> demote -> shed).  The watchdog is armed and must never
+    # fire: overload is a policy decision here, not a hang.
+    from repro.serving import LadderConfig, QuotaExceededError, TenantSLO
+
+    app = apps[0]
+    plan, params = plans[app]
+    now = [0.0]
+    dt = 0.01  # one scheduler tick = one batch of service capacity
+    ticks = 60 if smoke else 240
+    deadline_s = 10 * dt
+    server = AsyncPlanServer(
+        clock=lambda: now[0], overload="shed", max_queue=512,
+        deadline_margin=2 * dt, watchdog=30.0,
+    )
+    server.add_plan(app, plan, params, batch_size)
+    server.register_variant(app, "cheap", plan, params)
+    server.add_tenant(
+        "hot", weight=1.0, rate=6.0 / dt, burst=2.0 * batch_size,
+        slo=TenantSLO(p99_latency=5 * dt, min_samples=4),
+        ladder=LadderConfig(interval=5 * dt, breach_evals=1,
+                            recover_evals=4, shed_below_priority=1),
+    )
+    server.add_tenant("light", weight=1.0)
+    handles = {"hot": [], "light": []}
+    turned_away = {"hot": 0, "light": 0}
+    throttled_at_submit = 0
+    arrival = 0
+    for _ in range(ticks):
+        for _ in range(2 * batch_size):  # 2x capacity offered per tick
+            tenant = "light" if arrival % 11 == 0 else "hot"  # 10:1 skew
+            arrival += 1
+            try:
+                handles[tenant].append(server.submit(
+                    app, _frame(rng, app),
+                    priority=1 if tenant == "light" else 0,
+                    deadline=deadline_s, tenant=tenant,
+                ))
+            except QuotaExceededError:
+                turned_away[tenant] += 1
+                throttled_at_submit += 1
+            except QueueFullError:  # ladder shed or queue shed
+                turned_away[tenant] += 1
+        now[0] += dt
+        server.step()
+    while server.pending():  # drain the residual backlog on the same clock
+        now[0] += dt
+        server.step(force=True)
+    per_tenant = server.stats["per_tenant"]
+    plan_stats = server.stats["per_plan"][app]
+    tenant_health = server.health()["tenants"]
+    server.close()
+
+    def tenant_row(name):
+        hs = handles[name]
+        ok = [h for h in hs if h.exception() is None]
+        misses = sum(h.deadline_missed for h in ok)
+        ts = per_tenant[name]
+        return {
+            "offered": len(hs) + turned_away[name],
+            "admitted": len(hs),
+            "lost": len(hs) - len(ok),  # admitted but never completed
+            "turned_away": turned_away[name],
+            "throttled": ts["throttled"],
+            "ladder_shed": ts["ladder_shed"],
+            "demoted_admissions": ts["demoted_admissions"],
+            "ladder_up": ts["ladder_up"],
+            "ladder_down": ts["ladder_down"],
+            "ladder_level": tenant_health[name]["level_name"],
+            "deadline_misses": misses,
+            "deadline_miss_rate": misses / max(len(ok), 1),
+            "latency_s": _latency_pcts([h.latency for h in ok]),
+        }
+
+    hot, light = tenant_row("hot"), tenant_row("light")
+    record["multi_tenant"] = {
+        "ticks": ticks, "capacity_per_tick": batch_size,
+        "offered_per_tick": 2 * batch_size, "skew": "10:1",
+        "deadline_s": deadline_s, "hot": hot, "light": light,
+        "queue_shed": plan_stats["shed"],
+        "watchdog_timeouts": plan_stats["watchdog_timeouts"],
+    }
+    # the overload gate: in-SLO tenant unharmed, ladder (not watchdog)
+    # absorbed the excess, and every transition is registry-visible
+    assert light["lost"] == 0 and light["turned_away"] == 0, light
+    assert light["deadline_miss_rate"] <= 0.1, light
+    assert hot["ladder_up"] >= 1, hot  # the ladder actually engaged
+    assert hot["ladder_shed"] + hot["throttled"] >= 1, hot
+    assert plan_stats["watchdog_timeouts"] == 0
+    from repro.obs import metrics as _metrics
+
+    transitions = _metrics.registry().label_counts(
+        "serving_ladder_transitions_total", "tenant", "direction"
+    )
+    assert sum(transitions.values()) >= hot["ladder_up"], transitions
+    print(
+        f"serving_multi_tenant,hot,p99={hot['latency_s']['p99'] * 1e3:.1f}ms,"
+        f"throttled={hot['throttled']},ladder_shed={hot['ladder_shed']},"
+        f"ladder_up={hot['ladder_up']},level={hot['ladder_level']}"
+    )
+    print(
+        f"serving_multi_tenant,light,p99={light['latency_s']['p99'] * 1e3:.1f}ms,"
+        f"miss_rate={light['deadline_miss_rate']:.3f},lost={light['lost']},"
+        f"watchdog_timeouts={plan_stats['watchdog_timeouts']}"
+    )
 
     # smoke numbers are CI plumbing, not perf data: never clobber the
     # cross-PR trajectory artifact with them

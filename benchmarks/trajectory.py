@@ -108,6 +108,19 @@ FLOORS: dict = {
     ("quant", "app:*"): {"max_err": 5e-2},
     ("serving", "parity:*"): {"max_err": 1e-4},
     ("serving_smoke", "parity:*"): {"max_err": 1e-4},
+    # multi-tenant overload gates (full + committed smoke reference): at 2x
+    # capacity with a 10:1 hot/light skew, the in-quota light tenant loses
+    # nothing and stays within its deadline SLO, the hot tenant's excess is
+    # absorbed by quota + ladder transitions (require_ladder), and the armed
+    # watchdog never fires (the overload response is policy, not a hang).
+    ("serving", "multi_tenant"): {
+        "zero_lost": True, "max_light_miss_rate": 0.1,
+        "require_ladder": True, "zero_watchdog": True,
+    },
+    ("serving_smoke", "multi_tenant"): {
+        "zero_lost": True, "max_light_miss_rate": 0.1,
+        "require_ladder": True, "zero_watchdog": True,
+    },
     # robustness gates (full + committed smoke reference): degraded-mode
     # overhead is guarded-under-total-failure vs the eager reference plan --
     # both are Python-dispatch bound, so the ratio is machine-stable (~1.0x
@@ -207,6 +220,16 @@ def _cases_from(bench: str, rec: dict) -> dict:
             put("throughput", req_per_s=thr["req_per_s"],
                 deadline_miss_rate=thr["deadline_miss_rate"],
                 speedup_vs_serial=thr.get("speedup_vs_serial"))
+        mt = rec.get("multi_tenant")
+        if mt:
+            put("multi_tenant",
+                lost=mt["light"]["lost"] + mt["light"]["turned_away"],
+                light_miss_rate=mt["light"]["deadline_miss_rate"],
+                ladder_transitions=(mt["hot"]["ladder_up"]
+                                    + mt["hot"]["ladder_down"]),
+                hot_absorbed=(mt["hot"]["ladder_shed"]
+                              + mt["hot"]["throttled"]),
+                watchdog_timeouts=mt["watchdog_timeouts"])
     else:  # unknown bench: record parity-bearing rows generically
         for section in rec.values():
             if isinstance(section, list):
@@ -317,6 +340,25 @@ def check(traj: dict | None = None, results_dir: str = RESULTS_DIR) -> int:
                     violations.append(f"{tag}: total demotion not bit-exact")
                 if floor.get("require_recovered") and fields.get("recovered") is False:
                     violations.append(f"{tag}: breakers did not recover")
+                lmr = fields.get("light_miss_rate")
+                if ("max_light_miss_rate" in floor and lmr is not None
+                        and lmr > floor["max_light_miss_rate"]):
+                    violations.append(
+                        f"{tag}: in-SLO tenant miss rate {lmr:.3f} > "
+                        f"{floor['max_light_miss_rate']}"
+                    )
+                if (floor.get("require_ladder")
+                        and not fields.get("ladder_transitions")):
+                    violations.append(
+                        f"{tag}: no ladder transitions -- what absorbed the "
+                        f"overload?"
+                    )
+                if floor.get("zero_watchdog") and fields.get("watchdog_timeouts"):
+                    violations.append(
+                        f"{tag}: {fields['watchdog_timeouts']} watchdog "
+                        f"timeouts (the ladder, not the watchdog, must "
+                        f"absorb overload)"
+                    )
                 d_ovh = fields.get("disabled_overhead")
                 if ("max_disabled_overhead" in floor and d_ovh is not None
                         and d_ovh > floor["max_disabled_overhead"]):

@@ -297,27 +297,12 @@ class TuningCache:
                 if e.source != "default"
             },
         }
-        # crash-safe: write a temp file in the target directory, fsync, then
-        # atomically rename over the destination -- a reader (or a concurrent
-        # saver) can never observe a truncated/interleaved JSON, and an
-        # interrupted save leaves the previous file intact
-        import tempfile
+        # crash-safe (utils.fileio): temp file in the target directory,
+        # fsync, atomic rename -- a reader can never observe a truncated
+        # JSON and an interrupted save leaves the previous file intact
+        from ..utils.fileio import atomic_write_json
 
-        d = os.path.dirname(os.path.abspath(path))
-        fd, tmp = tempfile.mkstemp(prefix=".tune-", suffix=".json.tmp", dir=d)
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(payload, f, indent=2, sort_keys=True)
-                f.flush()
-                os.fsync(f.fileno())
-            os.replace(tmp, path)
-        except BaseException:
-            try:
-                os.unlink(tmp)
-            except OSError:
-                pass
-            raise
-        return path
+        return atomic_write_json(path, payload, prefix=".tune-")
 
     def load(self, path: str) -> "TuningCache":
         with open(path) as f:

@@ -17,7 +17,6 @@ Examples (CPU):
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import threading
 import time
@@ -29,6 +28,7 @@ import numpy as np
 from ..configs import ARCH_IDS, get_config, smoke_config
 from ..models import get_model
 from ..serving.engine import Engine, Request, RequestScheduler
+from ..utils.fileio import atomic_write_json
 
 
 class _MetricsDump:
@@ -72,11 +72,13 @@ class _MetricsDump:
         )
         d = os.path.dirname(os.path.abspath(self.path))
         os.makedirs(d, exist_ok=True)
-        with open(self.path, "w") as f:
-            json.dump(
-                {"interval_s": self.interval, "snapshots": self._snaps}, f,
-                indent=1, sort_keys=True,
-            )
+        # crash-safe (utils.fileio): a killed server never leaves a
+        # truncated snapshot JSON -- same recipe as TuningCache.save
+        atomic_write_json(
+            self.path,
+            {"interval_s": self.interval, "snapshots": self._snaps},
+            indent=1, prefix=".metrics-",
+        )
         buf = trace.stop_tracing()
         trace_path = buf.save(self.path + ".trace.json")
         print(f"metrics: {len(self._snaps)} snapshots -> "
@@ -192,15 +194,36 @@ def _serve_graph_app(args) -> None:
           f"({shape[0]}x{shape[2]}x{shape[3]}, sparsity {args.sparsity})")
 
 
+def _parse_tenants(spec: str):
+    """Parse ``--tenants`` specs: comma-separated
+    ``name[:weight[:rate[:burst]]]`` (weight = fair share of batch slots,
+    rate/burst = token-bucket quota in requests/s)."""
+    out = []
+    for part in spec.split(","):
+        bits = [b.strip() for b in part.strip().split(":")]
+        if not bits or not bits[0]:
+            raise SystemExit(f"--tenants: empty tenant name in {spec!r}")
+        out.append((
+            bits[0],
+            float(bits[1]) if len(bits) > 1 else 1.0,
+            float(bits[2]) if len(bits) > 2 else None,
+            float(bits[3]) if len(bits) > 3 else None,
+        ))
+    return out
+
+
 def _serve_async(args) -> None:
     """One AsyncPlanServer process hosting every demo app (or just
     ``--graph-app``): compile each app's plan, start the tick-driven
     scheduler thread, drive mixed traffic with per-request deadlines, and
     report throughput, p50/p95 latency, deadline-miss and padding stats --
-    with a per-app parity probe vs direct plan execution."""
+    with a per-app parity probe vs direct plan execution.  With
+    ``--tenants`` the traffic is spread round-robin over the registered
+    tenants (weighted fair share + quotas) and the report breaks latency,
+    throttling, and ladder state out per tenant."""
     from ..core.graph import PassContext, PassManager, compile_plan
     from ..models.cnn import APPS, app_masks
-    from ..serving import AsyncPlanServer
+    from ..serving import AsyncPlanServer, submit_with_retry
 
     if args.quantize:
         raise SystemExit(
@@ -221,6 +244,12 @@ def _serve_async(args) -> None:
         flush_after=args.flush_after, max_queue=args.max_queue,
         overload=args.overload, watchdog=args.watchdog,
     )
+    tenant_specs = _parse_tenants(args.tenants) if args.tenants else []
+    tnames = [t[0] for t in tenant_specs]
+    for name, weight, rate, burst in tenant_specs:
+        server.add_tenant(name, weight=weight, rate=rate, burst=burst)
+        quota = f"{rate}/s" if rate is not None else "unlimited"
+        print(f"async: tenant {name}: weight={weight} quota={quota}")
     plans, shapes = {}, {}
     for app in apps:
         g = APPS[app](jax.random.PRNGKey(args.seed), base=args.base)
@@ -252,8 +281,12 @@ def _serve_async(args) -> None:
         for i in range(n):
             app = apps[i % len(apps)]
             x = jnp.asarray(rng.standard_normal(shapes[app]), jnp.float32)
-            h = server.submit(
-                app, x, priority=i % 2, deadline=args.deadline,
+            tenant = tnames[i % len(tnames)] if tnames else None
+            # with quotas in play, ride out QuotaExceededError via the
+            # shared jittered backoff instead of failing the demo
+            h = submit_with_retry(
+                server, app, x, priority=i % 2, deadline=args.deadline,
+                tenant=tenant,
             )
             handles.append(h)
             probes.setdefault(app, (x, h))  # first frame per app: parity probe
@@ -285,6 +318,24 @@ def _serve_async(args) -> None:
                   f"p95={np.percentile(lats, 95) * 1e3:.2f}ms "
                   f"p99={np.percentile(lats, 99) * 1e3:.2f}ms "
                   f"over {lats.size} requests")
+        if tnames:
+            per_tenant = s["per_tenant"]
+            for name in tnames:
+                lats = np.asarray(
+                    [h.latency for h in handles if h.tenant == name]
+                )
+                st = per_tenant[name]
+                if lats.size:
+                    pct = (f"p50={np.percentile(lats, 50) * 1e3:.2f}ms "
+                           f"p95={np.percentile(lats, 95) * 1e3:.2f}ms "
+                           f"p99={np.percentile(lats, 99) * 1e3:.2f}ms "
+                           f"over {lats.size} requests, ")
+                else:
+                    pct = "no traffic, "
+                print(f"async: tenant {name}: {pct}"
+                      f"throttled={st['throttled']} "
+                      f"ladder_shed={st['ladder_shed']} "
+                      f"deadline_misses={st['deadline_misses']}")
         # liveness/degradation snapshot: what an external monitor scrapes
         health = server.health()
         print(f"health: running={health['running']} "
@@ -307,6 +358,10 @@ def _serve_async(args) -> None:
                          f"fallbacks={gc['fallbacks']} "
                          f"breakers=[{brs or 'none yet'}]")
             print(line)
+        for name in tnames:
+            th = health["tenants"][name]
+            print(f"health: tenant {name}: level={th['level_name']} "
+                  f"weight={th['weight']} tokens={th['tokens']}")
 
 
 def main() -> None:
@@ -345,6 +400,14 @@ def main() -> None:
                     help="async: bounded admission queue per plan")
     ap.add_argument("--overload", choices=["reject", "shed"], default="reject",
                     help="async: backpressure policy when a queue is full")
+    ap.add_argument("--tenants", nargs="?", default=None,
+                    const="gold:3:200,free:1:50",
+                    help="async: serve traffic as multiple tenants -- comma-"
+                         "separated name[:weight[:rate[:burst]]] specs "
+                         "(weight = fair share of batch slots, rate/burst = "
+                         "token-bucket quota in req/s); bare --tenants uses "
+                         "a demo 3:1 gold/free split with quotas; the report "
+                         "adds per-tenant latency/throttle/ladder lines")
     ap.add_argument("--guarded", action="store_true",
                     help="async: serve guarded plans (per-step kernel ->"
                          " reference demotion with circuit breakers and"

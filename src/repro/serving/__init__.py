@@ -1,23 +1,44 @@
 from .engine import Engine, GenerationResult, PlanServer, Request, RequestScheduler
+from .rollout import PlanVersion, SwapError
 from .scheduler import (
     AsyncPlanServer,
     FrameSpecError,
+    LadderShedError,
     QueueFullError,
+    QuotaExceededError,
     RequestHandle,
     WatchdogTimeout,
     submit_with_retry,
 )
+from .tenancy import (
+    LADDER_LEVELS,
+    DeficitRoundRobin,
+    LadderConfig,
+    Tenant,
+    TenantSLO,
+    TokenBucket,
+)
 
 __all__ = [
     "AsyncPlanServer",
+    "DeficitRoundRobin",
     "Engine",
     "FrameSpecError",
     "GenerationResult",
+    "LADDER_LEVELS",
+    "LadderConfig",
+    "LadderShedError",
     "PlanServer",
+    "PlanVersion",
     "QueueFullError",
+    "QuotaExceededError",
     "Request",
     "RequestHandle",
     "RequestScheduler",
+    "SwapError",
+    "Tenant",
+    "TenantSLO",
+    "TokenBucket",
     "WatchdogTimeout",
     "submit_with_retry",
 ]

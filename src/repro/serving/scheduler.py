@@ -55,6 +55,24 @@ for export.  Under tracing, each request is one Chrome-trace *async* span
 milestone naming the macro-batch that served it; each macro-batch is a
 duration span carrying the rids it served -- so a trace links every
 completed request to exactly one batch.
+
+Multi-tenancy (PR 9, ``serving/tenancy.py`` + ``serving/rollout.py``): the
+server is also fleet-shaped across *customers*.  ``submit(tenant=...)``
+routes through that tenant's token-bucket quota
+(:class:`QuotaExceededError` when exhausted -- transient, retried by
+:func:`submit_with_retry`); batch membership is chosen by **weighted
+deficit round-robin across tenant queues** so one hot tenant cannot starve
+the others; every plan is a stack of :class:`~repro.serving.rollout.PlanVersion`
+runnables so :meth:`AsyncPlanServer.swap_plan` hot-swaps a re-pruned /
+re-quantized plan with zero request loss (admitted requests finish on their
+admitted version, old versions retire when drained, a failed probe rolls
+back); and each tenant's SLO drives the graceful-degradation **ladder**
+(shrink flush_after -> demote to the registered cheaper variant -> shed
+lowest-priority admissions, with hysteresis -- see ``tenancy.py``).  All of
+it lands in ``health()``, the metrics registry
+(``serving_tenant_events_total``, ``serving_ladder_level``,
+``serving_ladder_transitions_total``, ``serving_swap_total``) and the
+trace.
 """
 
 from __future__ import annotations
@@ -71,12 +89,24 @@ import numpy as np
 from ..obs import metrics as _metrics
 from ..obs import trace as _otrace
 from ..utils.retry import retry_call
+from .rollout import PlanVersion, SwapError, probe_version, version_health
+from .tenancy import (
+    LADDER_LEVELS,
+    DeficitRoundRobin,
+    LadderConfig,
+    Tenant,
+    TenantSLO,
+    TokenBucket,
+)
 
 __all__ = [
     "AsyncPlanServer",
     "FrameSpecError",
+    "LadderShedError",
     "QueueFullError",
+    "QuotaExceededError",
     "RequestHandle",
+    "SwapError",
     "WatchdogTimeout",
     "submit_with_retry",
 ]
@@ -85,6 +115,19 @@ __all__ = [
 class QueueFullError(RuntimeError):
     """Raised by ``submit`` under the reject policy; stored on the shed
     handle under the shed policy."""
+
+
+class QuotaExceededError(QueueFullError):
+    """Raised by ``submit`` when the tenant's token bucket is exhausted.
+    A ``QueueFullError`` subclass on purpose: quota throttling is
+    transient (the bucket refills), so :func:`submit_with_retry` rides it
+    out exactly like queue backpressure."""
+
+
+class LadderShedError(QueueFullError):
+    """Raised by ``submit`` when the tenant sits on the ladder's shed rung
+    and the request's priority class is below the shed threshold -- the
+    explicit overload response of last resort, counted per tenant."""
 
 
 class FrameSpecError(ValueError):
@@ -109,6 +152,8 @@ class RequestHandle:
     rid: int
     plan: str
     priority: int = 0
+    #: admitting tenant (fair-share / quota / SLO accounting key)
+    tenant: str = "default"
     #: absolute deadline (engine clock); None = best effort
     deadline_at: Optional[float] = None
     submitted_at: float = 0.0
@@ -120,6 +165,9 @@ class RequestHandle:
         self._value: Any = None
         self._error: Optional[BaseException] = None
         self._inputs: Optional[Tuple[Any, ...]] = None  # cleared at dispatch
+        #: PlanVersion this request was admitted to; it executes there no
+        #: matter what swap_plan installs afterwards
+        self._runner: Optional[PlanVersion] = None
 
     # -- caller side --------------------------------------------------------- #
     def done(self) -> bool:
@@ -175,9 +223,8 @@ LATENCY_RESERVOIR = 4096
 @dataclasses.dataclass(eq=False)
 class _PlanEntry:
     name: str
-    plan: Any
-    params: Any
-    batched: Any  # BatchedPlan
+    #: the active PlanVersion new admissions route to (swap_plan replaces)
+    primary: PlanVersion
     queue: List[RequestHandle] = dataclasses.field(default_factory=list)
     seq: int = 0  # FIFO tiebreak within a priority class
     #: high-water mark of the admission queue (never resets; the sizing
@@ -186,6 +233,16 @@ class _PlanEntry:
     #: per-input (shape, dtype) submit() validates against; given at
     #: add_plan or latched from the first accepted frame
     input_spec: Optional[Tuple[Tuple[Tuple[int, ...], Any], ...]] = None
+    #: registered degradation variants (the ladder's demotion targets)
+    variants: Dict[str, PlanVersion] = dataclasses.field(default_factory=dict)
+    #: the variant name rung-2 demotions route to (last registered with
+    #: ladder_target=True)
+    ladder_variant: Optional[str] = None
+    #: swapped-out versions still owed verdicts; retired when drained
+    draining: List[PlanVersion] = dataclasses.field(default_factory=list)
+    version_seq: int = 0
+    #: weighted fair-share selector over this plan's tenant sub-queues
+    drr: DeficitRoundRobin = dataclasses.field(default_factory=DeficitRoundRobin)
     latencies: Deque[float] = dataclasses.field(
         default_factory=lambda: deque(maxlen=LATENCY_RESERVOIR)
     )
@@ -194,8 +251,24 @@ class _PlanEntry:
             "submitted": 0, "completed": 0, "batches": 0, "padded_frames": 0,
             "rejected": 0, "shed": 0, "deadline_flushes": 0,
             "deadline_misses": 0, "bad_frames": 0, "watchdog_timeouts": 0,
+            "swaps": 0, "swap_rollbacks": 0, "versions_retired": 0,
+            "demoted_admissions": 0,
         }
     )
+
+    # back-compat views: pre-tenancy code (and tests) address the plan's
+    # single runnable directly; that runnable is now the active version
+    @property
+    def plan(self):
+        return self.primary.plan
+
+    @property
+    def params(self):
+        return self.primary.params
+
+    @property
+    def batched(self):
+        return self.primary.batched
 
 
 class AsyncPlanServer:
@@ -247,6 +320,9 @@ class AsyncPlanServer:
         self._tick_errors = 0  # scheduler-tick exceptions survived by _loop
         self._clock = clock
         self._plans: Dict[str, _PlanEntry] = {}
+        #: tenants by name; "default" always exists (unit weight, no quota,
+        #: no SLO) so single-tenant callers never see the machinery
+        self._tenants: Dict[str, Tenant] = {"default": Tenant("default")}
         self._rr = 0  # round-robin start index over plan names
         self._rid = 0
         self._batch_seq = 0  # trace-facing macro-batch ids
@@ -270,6 +346,16 @@ class AsyncPlanServer:
         if amount:
             _metrics.registry().counter(
                 "serving_events_total", plan=entry.name, event=event
+            ).inc(amount)
+
+    @staticmethod
+    def _bump_tenant(t: Tenant, event: str, amount: int = 1) -> None:
+        """Per-tenant sibling of :meth:`_bump`, mirrored into
+        ``serving_tenant_events_total{tenant, event}``."""
+        t.stats[event] += amount
+        if amount:
+            _metrics.registry().counter(
+                "serving_tenant_events_total", tenant=t.name, event=event
             ).inc(amount)
 
     # -- configuration ------------------------------------------------------- #
@@ -306,14 +392,185 @@ class AsyncPlanServer:
                         f"{len(plan.graph.inputs)} inputs"
                     )
             self._plans[name] = _PlanEntry(
-                name=name, plan=plan, params=params,
-                batched=plan.batched(batch_size, via_vmap=via_vmap),
+                name=name,
+                primary=PlanVersion(
+                    plan=plan, params=params,
+                    batched=plan.batched(batch_size, via_vmap=via_vmap),
+                    version=0,
+                ),
                 input_spec=spec,
             )
+
+    def add_tenant(
+        self,
+        name: str,
+        *,
+        weight: float = 1.0,
+        rate: Optional[float] = None,
+        burst: Optional[float] = None,
+        slo: Optional[TenantSLO] = None,
+        ladder: Optional[LadderConfig] = None,
+    ) -> None:
+        """Register a tenant: ``weight`` sets its fair share of batch slots
+        (deficit round-robin), ``rate``/``burst`` its token-bucket admission
+        quota (tokens/s; None = unlimited), ``slo`` + ``ladder`` its
+        degradation policy.  ``submit(tenant=...)`` requires the name to be
+        registered (typos must not silently fork accounting); re-registering
+        "default" re-configures the built-in tenant."""
+        with self._lock:
+            if self.closed:
+                raise RuntimeError("AsyncPlanServer is closed")
+            if name in self._tenants and name != "default":
+                raise ValueError(f"tenant {name!r} already registered")
+            self._tenants[name] = Tenant(
+                name=name, weight=weight, bucket=TokenBucket(rate, burst),
+                slo=slo, ladder=ladder or LadderConfig(),
+            )
+            _metrics.registry().gauge(
+                "serving_ladder_level", tenant=name
+            ).set(0)
+
+    def register_variant(
+        self,
+        plan_name: str,
+        variant: str,
+        plan,
+        params,
+        *,
+        batch_size: Optional[int] = None,
+        via_vmap: bool = False,
+        ladder_target: bool = True,
+    ) -> None:
+        """Register a cheaper runnable of ``plan_name`` (re-quantized,
+        guarded-reference, smaller) under the label ``variant``.  With
+        ``ladder_target=True`` (default) it becomes the rung-2 demotion
+        target: a tenant escalated to ``demote_plan`` has its *new*
+        admissions routed here until it recovers."""
+        with self._lock:
+            if self.closed:
+                raise RuntimeError("AsyncPlanServer is closed")
+            entry = self._plans.get(plan_name)
+            if entry is None:
+                raise KeyError(f"unknown plan {plan_name!r}")
+            if variant in entry.variants or variant == "primary":
+                raise ValueError(
+                    f"variant {variant!r} already registered for {plan_name!r}"
+                )
+            entry.variants[variant] = PlanVersion(
+                plan=plan, params=params,
+                batched=plan.batched(
+                    batch_size or entry.primary.batch_size, via_vmap=via_vmap
+                ),
+                version=0, variant=variant,
+            )
+            if ladder_target:
+                entry.ladder_variant = variant
+
+    def swap_plan(
+        self,
+        name: str,
+        plan,
+        params,
+        *,
+        batch_size: Optional[int] = None,
+        via_vmap: bool = False,
+        probe_frames: Optional[Sequence[Any]] = None,
+        parity_tol: Optional[float] = None,
+    ) -> int:
+        """Atomically install a new version of plan ``name`` with **zero
+        request loss**: requests admitted before the swap finish on the
+        version that admitted them, new admissions route to the new
+        version, and the old version retires once its outstanding count
+        drains to zero (counted + traced).  The incoming version is probed
+        first -- one batch must execute with finite outputs (and, when
+        ``parity_tol`` is given, stay within it of the live version on the
+        same frames); a failed probe raises :class:`SwapError` and **rolls
+        back** (the live version never stops serving).  Returns the new
+        version id."""
+        with self._lock:
+            if self.closed:
+                raise RuntimeError("AsyncPlanServer is closed")
+            entry = self._plans.get(name)
+            if entry is None:
+                raise KeyError(f"unknown plan {name!r}")
+            old = entry.primary
+            entry.version_seq += 1
+            incoming = PlanVersion(
+                plan=plan, params=params,
+                batched=plan.batched(
+                    batch_size or old.batch_size, via_vmap=via_vmap
+                ),
+                version=entry.version_seq,
+            )
+            spec = entry.input_spec
+        # probe outside the lock: it executes a real batch (possibly a jit
+        # compile) and admission must keep flowing to the live version
+        try:
+            probe_version(
+                incoming, spec, probe_frames,
+                reference=old, parity_tol=parity_tol,
+            )
+        except SwapError:
+            with self._lock:
+                self._bump(entry, "swap_rollbacks")
+                _metrics.registry().counter(
+                    "serving_swap_total", plan=name, event="rolled_back"
+                ).inc()
+            _otrace.instant(
+                "plan_swap", cat="serving", plan=name,
+                version=incoming.version, event="rolled_back",
+            )
+            raise
+        with self._lock:
+            if entry.primary is not old:
+                # a concurrent swap won while we probed: treat ours as a
+                # rollback rather than silently clobbering the winner
+                self._bump(entry, "swap_rollbacks")
+                _metrics.registry().counter(
+                    "serving_swap_total", plan=name, event="rolled_back"
+                ).inc()
+                raise SwapError(
+                    f"plan {name!r} was swapped concurrently; version "
+                    f"{incoming.version} not installed"
+                )
+            entry.primary = incoming
+            self._bump(entry, "swaps")
+            _metrics.registry().counter(
+                "serving_swap_total", plan=name, event="installed"
+            ).inc()
+            entry.draining.append(old)
+            self._maybe_retire(entry)
+        _otrace.instant(
+            "plan_swap", cat="serving", plan=name,
+            version=incoming.version, event="installed",
+        )
+        self._work.set()
+        return incoming.version
+
+    def _maybe_retire(self, entry: _PlanEntry) -> None:
+        """Retire drained old versions (call with the lock held)."""
+        still: List[PlanVersion] = []
+        for v in entry.draining:
+            if v.outstanding <= 0:
+                self._bump(entry, "versions_retired")
+                _metrics.registry().counter(
+                    "serving_swap_total", plan=entry.name, event="retired"
+                ).inc()
+                _otrace.instant(
+                    "plan_swap", cat="serving", plan=entry.name,
+                    version=v.version, event="retired",
+                )
+            else:
+                still.append(v)
+        entry.draining = still
 
     @property
     def plans(self) -> Tuple[str, ...]:
         return tuple(self._plans)
+
+    @property
+    def tenants(self) -> Tuple[str, ...]:
+        return tuple(self._tenants)
 
     # -- admission ----------------------------------------------------------- #
     def submit(
@@ -322,6 +579,7 @@ class AsyncPlanServer:
         *frame_inputs,
         priority: int = 0,
         deadline: Optional[float] = None,
+        tenant: Optional[str] = None,
     ) -> RequestHandle:
         """Queue one frame for ``plan_name`` (one array per graph input, no
         batch dim) and return its :class:`RequestHandle` immediately.
@@ -334,7 +592,14 @@ class AsyncPlanServer:
         evicted queued handle fails with :class:`QueueFullError`, while an
         incoming request that is itself the victim raises here (at equal
         priority the newcomer is always the victim; only a strictly
-        higher-priority submit evicts queued work)."""
+        higher-priority submit evicts queued work).
+
+        ``tenant`` names a registered tenant (None = the built-in
+        "default"): its token bucket gates admission
+        (:class:`QuotaExceededError`), its ladder rung may shed a
+        low-priority request outright (:class:`LadderShedError`) or route
+        it to the plan's registered cheaper variant, and its weight sets
+        the fair share of batch slots the request competes under."""
         with self._lock:
             if self.closed:
                 raise RuntimeError("AsyncPlanServer is closed; no further requests")
@@ -342,6 +607,13 @@ class AsyncPlanServer:
             if entry is None:
                 raise KeyError(
                     f"unknown plan {plan_name!r}; registered: {sorted(self._plans)}"
+                )
+            tname = tenant if tenant is not None else "default"
+            t = self._tenants.get(tname)
+            if t is None:
+                raise KeyError(
+                    f"unknown tenant {tname!r}; registered: "
+                    f"{sorted(self._tenants)}"
                 )
             n_in = len(entry.plan.graph.inputs)
             if len(frame_inputs) != n_in:
@@ -368,6 +640,35 @@ class AsyncPlanServer:
                             f"{shape}/{dtype}"
                         )
             now = self._clock()
+            # ladder rung 3: the tenant's lowest priority classes are turned
+            # away before they can consume a token or a queue slot
+            if (
+                t.level >= LADDER_LEVELS.index("shed")
+                and priority < t.ladder.shed_below_priority
+            ):
+                self._bump_tenant(t, "ladder_shed")
+                raise LadderShedError(
+                    f"tenant {t.name!r} is on the {t.level_name!r} rung; "
+                    f"priority {priority} admissions "
+                    f"(< {t.ladder.shed_below_priority}) are shed"
+                )
+            if not t.bucket.take(now):
+                self._bump_tenant(t, "throttled")
+                raise QuotaExceededError(
+                    f"tenant {t.name!r} quota exhausted "
+                    f"({t.bucket.rate}/s, burst {t.bucket.burst})"
+                )
+            # pin the runnable at admission: primary, or -- when the
+            # tenant sits on the demote_plan rung and a ladder variant is
+            # registered -- the cheaper variant
+            runner = entry.primary
+            if (
+                t.level >= LADDER_LEVELS.index("demote_plan")
+                and entry.ladder_variant is not None
+            ):
+                runner = entry.variants[entry.ladder_variant]
+                self._bump(entry, "demoted_admissions")
+                self._bump_tenant(t, "demoted_admissions")
             shed: Optional[RequestHandle] = None
             if len(entry.queue) >= self.max_queue:
                 if self.overload == "reject":
@@ -391,10 +692,14 @@ class AsyncPlanServer:
                     )
                 entry.queue.remove(victim)
                 victim._inputs = None  # evicted: release its frame arrays
+                if victim._runner is not None:
+                    victim._runner.outstanding -= 1
+                    self._maybe_retire(entry)
                 self._bump(entry, "shed")
                 shed = victim
             handle = RequestHandle(
                 rid=self._rid, plan=plan_name, priority=priority,
+                tenant=t.name,
                 deadline_at=None if deadline is None else now + deadline,
                 submitted_at=now,
             )
@@ -402,8 +707,12 @@ class AsyncPlanServer:
             handle._inputs = frames
             handle._seq = entry.seq
             entry.seq += 1
+            handle._runner = runner
+            runner.admitted += 1
+            runner.outstanding += 1
             entry.queue.append(handle)
             self._bump(entry, "submitted")
+            self._bump_tenant(t, "submitted")
             if len(entry.queue) > entry.queue_peak:
                 entry.queue_peak = len(entry.queue)
                 _metrics.registry().gauge(
@@ -412,7 +721,7 @@ class AsyncPlanServer:
             if _otrace.enabled():
                 _otrace.async_begin(
                     "request", handle.rid, cat="serving", plan=plan_name,
-                    priority=priority,
+                    priority=priority, tenant=t.name,
                 )
         if shed is not None:
             shed._fail(
@@ -435,17 +744,32 @@ class AsyncPlanServer:
 
     # -- scheduling ---------------------------------------------------------- #
     def _ready(self, entry: _PlanEntry, now: float, force: bool) -> Optional[str]:
-        """Why this queue should release a batch now (None = keep filling)."""
+        """Why this queue should release a batch now (None = keep filling).
+        Fill is judged per runnable (a batch serves exactly one PlanVersion,
+        so queued requests pinned to different versions/variants cannot fill
+        one batch together); a tenant on the ``shrink_flush`` rung has its
+        requests' flush_after scaled down by the ladder's shrink factor."""
         if not entry.queue:
             return None
-        if len(entry.queue) >= entry.batched.batch_size:
-            return "full"
+        fill: Dict[int, int] = {}
+        for h in entry.queue:
+            r = h._runner
+            n = fill.get(id(r), 0) + 1
+            if n >= r.batch_size:
+                return "full"
+            fill[id(r)] = n
         if force:
             return "force"
         if self.flush_after is not None:
-            oldest = min(h.submitted_at for h in entry.queue)
-            if now - oldest >= self.flush_after:
-                return "flush_after"
+            for h in entry.queue:
+                t = self._tenants.get(h.tenant)
+                fa = self.flush_after
+                if t is not None and t.level >= LADDER_LEVELS.index(
+                    "shrink_flush"
+                ):
+                    fa *= t.ladder.shrink_factor
+                if now - h.submitted_at >= fa:
+                    return "flush_after"
         margin = self.deadline_margin
         if any(
             h.deadline_at is not None and h.deadline_at - now <= margin
@@ -454,28 +778,62 @@ class AsyncPlanServer:
             return "deadline"
         return None
 
-    def _take_batch(self, entry: _PlanEntry, now: float) -> List[RequestHandle]:
-        """Pop up to batch_size requests by (due-deadline, -priority,
-        arrival).  Deadline urgency outranks priority class for batch
-        MEMBERSHIP (not just release timing): under sustained full-batch
-        pressure from a higher priority class, a due request must join the
-        released batch rather than starve while its deadline keeps
-        triggering releases that exclude it."""
+    def _take_batch(
+        self, entry: _PlanEntry, now: float
+    ) -> Tuple[List[RequestHandle], PlanVersion]:
+        """Pop up to one runnable's batch_size requests and return
+        ``(batch, runner)``.  The target runner is whichever PlanVersion the
+        overall most-urgent request (due-deadline, then -priority, then
+        arrival) is pinned to -- a batch serves exactly one runnable, so the
+        rest of the queue (other versions/variants) waits for its own turn.
+
+        Membership within the target runner: *due* requests join first --
+        deadline urgency outranks priority class for batch MEMBERSHIP (not
+        just release timing): under sustained full-batch pressure from a
+        higher priority class, a due request must join the released batch
+        rather than starve while its deadline keeps triggering releases that
+        exclude it.  Remaining slots are filled by weighted deficit
+        round-robin across tenant sub-queues (each sub-queue in
+        ``(-priority, arrival)`` order), so a hot tenant's backlog cannot
+        monopolize the batch.  With only the default tenant this reduces
+        exactly to the historical ``(due, -priority, arrival)`` order."""
         margin = self.deadline_margin
 
         def key(h: RequestHandle):
             due = h.deadline_at is not None and h.deadline_at - now <= margin
             return (not due, -h.priority, h._seq)
 
-        order = sorted(entry.queue, key=key)
-        batch = order[: entry.batched.batch_size]
+        runner = min(entry.queue, key=key)._runner
+        pool = [h for h in entry.queue if h._runner is runner]
+        size = runner.batch_size
+        batch = sorted(
+            (
+                h for h in pool
+                if h.deadline_at is not None and h.deadline_at - now <= margin
+            ),
+            key=lambda h: (-h.priority, h._seq),
+        )[:size]
         taken = set(id(h) for h in batch)
+        slots = size - len(batch)
+        if slots > 0:
+            by_tenant: Dict[str, List[RequestHandle]] = {}
+            for h in pool:
+                if id(h) not in taken:
+                    by_tenant.setdefault(h.tenant, []).append(h)
+            for q in by_tenant.values():
+                q.sort(key=lambda h: (-h.priority, h._seq))
+            weights = {
+                n: self._tenants[n].weight
+                for n in by_tenant if n in self._tenants
+            }
+            batch.extend(entry.drr.select(by_tenant, weights, slots))
+            taken = set(id(h) for h in batch)
         entry.queue = [h for h in entry.queue if id(h) not in taken]
-        return batch
+        return batch, runner
 
     def _execute(
-        self, entry: _PlanEntry, batch: List[RequestHandle],
-        reason: str = "full",
+        self, entry: _PlanEntry, runner: PlanVersion,
+        batch: List[RequestHandle], reason: str = "full",
     ) -> None:
         """Run one macro-batch through the plan's compiled chunk and resolve
         every handle.  Called with the admission lock *released* so submits
@@ -501,7 +859,7 @@ class AsyncPlanServer:
                     jnp.stack([h._inputs[i] for h in batch])
                     for i in range(len(batch[0]._inputs))
                 )
-                box["out"] = entry.batched.run_chunk(entry.params, *inputs)
+                box["out"] = runner.batched.run_chunk(runner.params, *inputs)
             except Exception as e:  # resolve handles; callers see the error
                 box["err"] = e
 
@@ -510,7 +868,7 @@ class AsyncPlanServer:
             self._batch_seq += 1
         with _otrace.span(
             "batch", cat="serving", plan=entry.name, batch=bid, reason=reason,
-            rids=[h.rid for h in batch],
+            version=runner.label(), rids=[h.rid for h in batch],
         ) as bsp:
             if _otrace.enabled():
                 for h in batch:
@@ -555,18 +913,29 @@ class AsyncPlanServer:
                             else out[i],
                             now,
                         )
+                    t = self._tenants.get(h.tenant)
                     if h.deadline_missed:
                         self._bump(entry, "deadline_misses")
+                        if t is not None:
+                            self._bump_tenant(t, "deadline_misses")
                         _otrace.instant(
                             "deadline_miss", cat="serving", plan=entry.name,
                             rid=h.rid, batch=bid,
                         )
                     self._bump(entry, "completed")
+                    if t is not None:
+                        self._bump_tenant(t, "completed")
                     if h.latency is not None:
                         entry.latencies.append(h.latency)
                         _metrics.registry().histogram(
                             "serving_latency_seconds", plan=entry.name
                         ).observe(h.latency)
+                        if t is not None:
+                            t.observe(h.latency, h.deadline_missed)
+                            _metrics.registry().histogram(
+                                "serving_tenant_latency_seconds",
+                                tenant=t.name,
+                            ).observe(h.latency)
                     self._completed.append(h)
                     if traced:
                         _otrace.async_end(
@@ -577,8 +946,10 @@ class AsyncPlanServer:
                 self._bump(entry, "batches")
                 self._bump(
                     entry, "padded_frames",
-                    entry.batched.batch_size - len(batch),
+                    runner.batch_size - len(batch),
                 )
+                runner.outstanding -= len(batch)
+                self._maybe_retire(entry)
                 self._inflight -= 1
                 self._idle.notify_all()
 
@@ -595,6 +966,7 @@ class AsyncPlanServer:
         loop."""
         executed = 0
         with self._lock:
+            self._evaluate_slos(self._clock())
             names = list(self._plans)
             if not names:
                 return 0
@@ -607,13 +979,47 @@ class AsyncPlanServer:
                 reason = self._ready(entry, t, force)
                 if reason is None:
                     continue
-                batch = self._take_batch(entry, t)
+                batch, runner = self._take_batch(entry, t)
                 if reason in ("flush_after", "deadline"):
                     self._bump(entry, "deadline_flushes")
                 self._inflight += 1
-            self._execute(entry, batch, reason)
+            self._execute(entry, runner, batch, reason)
             executed += 1
         return executed
+
+    def _evaluate_slos(self, now: float) -> None:
+        """Walk every tenant's SLO ladder (call with the lock held).  Each
+        tenant is judged at most once per ``ladder.interval`` of engine
+        clock; a transition moves the ``serving_ladder_level`` gauge, counts
+        into ``serving_ladder_transitions_total{tenant, direction,
+        to_level}`` and emits a trace instant -- the overload response is an
+        explicit, observable policy, never a silent mode flip."""
+        for t in self._tenants.values():
+            if t.slo is None:
+                continue
+            if t.next_eval is None:
+                t.next_eval = now + t.ladder.interval
+                continue
+            if now < t.next_eval:
+                continue
+            t.next_eval = now + t.ladder.interval
+            moved = t.evaluate()
+            if moved is None:
+                continue
+            frm, to = moved
+            direction = "up" if to > frm else "down"
+            _metrics.registry().gauge(
+                "serving_ladder_level", tenant=t.name
+            ).set(to)
+            _metrics.registry().counter(
+                "serving_ladder_transitions_total",
+                tenant=t.name, direction=direction,
+                to_level=LADDER_LEVELS[to],
+            ).inc()
+            _otrace.instant(
+                f"ladder_{direction}", cat="serving", tenant=t.name,
+                from_level=LADDER_LEVELS[frm], to_level=LADDER_LEVELS[to],
+            )
 
     # -- background thread --------------------------------------------------- #
     def start(self) -> "AsyncPlanServer":
@@ -703,14 +1109,21 @@ class AsyncPlanServer:
     # -- stats ---------------------------------------------------------------- #
     @property
     def stats(self) -> Dict[str, Any]:
-        """Aggregate counters plus a ``per_plan`` breakdown (copies)."""
+        """Aggregate counters plus ``per_plan`` / ``per_tenant`` breakdowns
+        (copies).  The aggregate sums the per-plan counters only -- tenant
+        counters are a second axis over the same requests, not additional
+        traffic."""
         with self._lock:
             per_plan = {n: dict(e.stats) for n, e in self._plans.items()}
+            per_tenant = {
+                n: dict(t.stats) for n, t in self._tenants.items()
+            }
         total: Dict[str, int] = {}
         for s in per_plan.values():
             for k, v in s.items():
                 total[k] = total.get(k, 0) + v
         total["per_plan"] = per_plan
+        total["per_tenant"] = per_tenant
         return total
 
     def health(self) -> Dict[str, Any]:
@@ -726,14 +1139,33 @@ class AsyncPlanServer:
                 d: Dict[str, Any] = {
                     "queue_depth": len(e.queue),
                     "queue_peak": e.queue_peak,
+                    "version": e.primary.version,
                     "stats": dict(e.stats),
                 }
+                if e.draining:
+                    d["draining"] = [
+                        {"version": v.version, "outstanding": v.outstanding}
+                        for v in e.draining
+                    ]
+                if e.variants:
+                    d["variants"] = version_health(e.variants)
+                    d["ladder_variant"] = e.ladder_variant
                 guard_stats = getattr(e.plan, "guard_stats", None)
                 if callable(guard_stats):
                     gs = guard_stats()
                     if gs:
                         d["guard"] = gs
                 plans[n] = d
+            tenants = {
+                n: {
+                    "level": t.level,
+                    "level_name": t.level_name,
+                    "weight": t.weight,
+                    "tokens": t.bucket.tokens,
+                    "stats": dict(t.stats),
+                }
+                for n, t in self._tenants.items()
+            }
             return {
                 "closed": self.closed,
                 "running": self.running,
@@ -742,6 +1174,7 @@ class AsyncPlanServer:
                 "watchdog": self.watchdog,
                 "pending": sum(p["queue_depth"] for p in plans.values()),
                 "plans": plans,
+                "tenants": tenants,
             }
 
     def latency_stats(
@@ -774,6 +1207,7 @@ def submit_with_retry(
     *frame_inputs,
     priority: int = 0,
     deadline: Optional[float] = None,
+    tenant: Optional[str] = None,
     retries: int = 5,
     backoff: float = 0.005,
     backoff_factor: float = 2.0,
@@ -785,11 +1219,14 @@ def submit_with_retry(
     admission queue.  Backpressure bursts (queue momentarily full while the
     scheduler drains) retry with decorrelated delays instead of failing or
     stampeding; a queue that stays full through every retry still raises,
-    so overload remains visible.  Only ``QueueFullError`` retries --
+    so overload remains visible.  Only ``QueueFullError`` retries -- which
+    includes its transient subclasses :class:`QuotaExceededError` (bucket
+    refills) and :class:`LadderShedError` (tenant may recover) --
     ``FrameSpecError`` and closed-server errors are permanent."""
     return retry_call(
         lambda: server.submit(
-            plan_name, *frame_inputs, priority=priority, deadline=deadline
+            plan_name, *frame_inputs, priority=priority, deadline=deadline,
+            tenant=tenant,
         ),
         retries=retries, backoff=backoff, backoff_factor=backoff_factor,
         jitter=jitter, retry_on=(QueueFullError,), sleep=sleep,

@@ -1,3 +1,4 @@
+from .fileio import atomic_write_json, atomic_write_text
 from .flops import model_flops, param_counts
 from .hlo import collective_bytes, op_histogram
 from .retry import retry_call

@@ -41,6 +41,7 @@ from repro.robustness import (
 from repro.serving import (
     AsyncPlanServer,
     QueueFullError,
+    SwapError,
     WatchdogTimeout,
     submit_with_retry,
 )
@@ -622,6 +623,93 @@ def test_chaos_gate_all_apps_zero_loss_and_bitexact_fallback():
         total = server.stats
         assert total["completed"] == total["submitted"]  # zero request loss
         assert total["bad_frames"] == 0 and total["watchdog_timeouts"] == 0
+
+
+@pytest.mark.slow
+def test_chaos_gate_hot_swap_all_apps_zero_loss():
+    """Acceptance gate (PR 9): swap all three demo-app plans mid-traffic
+    under the seeded 5% chaos rate -- 100% of admitted requests complete at
+    parity with the reference plan *of the version that served them*, every
+    old version drains and retires, and the rollback path is exercised (a
+    poisoned incoming version must never install)."""
+
+    def scale(params, factor):
+        return jax.tree_util.tree_map(
+            lambda a: a * factor
+            if jnp.issubdtype(jnp.asarray(a).dtype, jnp.floating) else a,
+            params,
+        )
+
+    size = 12
+    server = AsyncPlanServer(flush_after=0.005, clock=time.monotonic)
+    plans, refs, shapes, frames, vparams = {}, {}, {}, {}, {}
+    rng = np.random.default_rng(0)
+    for app in APPS:
+        g = APPS[app](jax.random.PRNGKey(0), base=8)
+        cfg = GuardConfig(breaker_threshold=100)
+        plans[app] = compile_plan(g, backend="guarded", guard=cfg)
+        refs[app] = compile_plan(g, backend="reference")
+        c_in = 1 if app == "coloring" else 3
+        shapes[app] = (c_in, size, size)
+        vparams[app] = {0: g.params, 1: scale(g.params, 0.5)}
+        frames[app] = [
+            jnp.asarray(rng.standard_normal(shapes[app]), jnp.float32)
+            for _ in range(6)
+        ]
+        server.add_plan(
+            app, plans[app], g.params, batch_size=2,
+            input_spec=[(shapes[app], jnp.float32)],
+        )
+    with server:
+        server.start()
+        for app in APPS:  # warm each app's path outside the chaos window
+            server.submit(app, frames[app][0]).result(60)
+
+        def submit_all(lo, hi):
+            return [
+                (app, f, submit_with_retry(server, app, f, backoff=0.001))
+                for app in APPS
+                for f in frames[app][lo:hi]
+            ]
+
+        with FaultPlan([FaultRule("*", "raise", rate=0.05)], seed=7) as fp:
+            handles = submit_all(0, 3)  # admitted on v0
+            for app in APPS:  # swap every plan while that traffic is live
+                assert server.swap_plan(
+                    app, plans[app], vparams[app][1],
+                    probe_frames=[frames[app][0]],
+                ) == 1
+            # rollback path: a poisoned version must fail its probe and
+            # leave the freshly installed v1 serving
+            with pytest.raises(SwapError, match="non-finite"):
+                server.swap_plan(
+                    "coloring", plans["coloring"],
+                    scale(vparams["coloring"][0], np.nan),
+                    probe_frames=[frames["coloring"][0]],
+                )
+            handles += submit_all(3, 6)  # admitted on v1
+            versions = {id(h): h._runner.version for _, _, h in handles}
+            results = [(app, f, h, h.result(120)) for app, f, h in handles]
+        assert fp.injection_count() >= 1  # chaos actually happened
+        assert len(results) == 3 * 6  # 100% completion: zero request loss
+        for app, f, h, y in results:
+            want = refs[app](vparams[app][versions[id(h)]], f[None])
+            err = float(jnp.max(jnp.abs(jnp.asarray(y) - jnp.asarray(want)[0])))
+            assert err <= 1e-4, (app, versions[id(h)], err)
+        # both versions actually served traffic on every app
+        assert all(
+            {versions[id(h)] for a, _, h in handles if a == app} == {0, 1}
+            for app in APPS
+        )
+        health = server.health()
+        s = server.stats
+        for app in APPS:
+            assert health["plans"][app]["version"] == 1
+            assert "draining" not in health["plans"][app]  # v0 retired
+        assert s["swaps"] == 3 and s["versions_retired"] == 3
+        assert s["swap_rollbacks"] == 1
+        assert s["completed"] == s["submitted"]
+        assert server.health()["tick_errors"] == 0
 
 
 def test_demotions_surface_in_registry_and_trace():
