@@ -17,9 +17,10 @@ lint:  ## ruff bug-tier rules (config in pyproject.toml); CI runs this
 test:  ## tier-1 verify (no plugins needed; works in minimal containers)
 	python -m pytest -x -q
 
-test-cov:  ## CI variant: parallel via pytest-xdist, coverage-gated on serving/ + kernels/ + obs/
+test-cov:  ## CI variant: parallel via pytest-xdist, coverage-gated on serving/ + kernels/ + obs/ + core.graph/
 	python -m pytest -x -q -n auto \
 	    --cov=repro.serving --cov=repro.kernels --cov=repro.obs \
+	    --cov=repro.core.graph \
 	    --cov-report=term --cov-fail-under=$(COV_FLOOR)
 
 test-fast:  ## compiler + kernel subset (quick signal while iterating)
@@ -34,6 +35,7 @@ bench-smoke:  ## tiny-shape benchmark pass (CI-sized, no TPU; writes results/BEN
 	python -m benchmarks.serving_bench --smoke
 	python -m benchmarks.robustness_bench --smoke
 	python -m benchmarks.obs_bench --smoke
+	python -m benchmarks.decode_bench --smoke
 	python -m benchmarks.trajectory --check
 
 chaos-smoke:  ## seeded fault-injection pass: chaos test suite + robustness smoke bench

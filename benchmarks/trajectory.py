@@ -143,6 +143,20 @@ FLOORS: dict = {
     },
     ("robustness", "recovery"): {"require_recovered": True},
     ("robustness_smoke", "recovery"): {"require_recovered": True},
+    # autoregressive-decode gates (full + committed smoke reference): the
+    # decoder lowering must be invisible in the logits (parity), greedy
+    # decode through the paged KV pipeline must match the naive jnp loop
+    # token-for-token, epilogue fusion must actually shrink both phase
+    # plans, and continuous-batching serve must lose zero sequences and
+    # leak zero cache pages.
+    ("decode", "parity:*"): {"max_err": 1e-4},
+    ("decode_smoke", "parity:*"): {"max_err": 1e-4},
+    ("decode", "greedy"): {"require_match": True},
+    ("decode_smoke", "greedy"): {"require_match": True},
+    ("decode", "plan:*"): {"require_fusion": True},
+    ("decode_smoke", "plan:*"): {"require_fusion": True},
+    ("decode", "serve"): {"zero_lost": True, "zero_leak": True},
+    ("decode_smoke", "serve"): {"zero_lost": True, "zero_leak": True},
     # observability gates (full + committed smoke reference): telemetry must
     # stay (nearly) free.  Overheads are vs the bare-loop baseline (see
     # benchmarks/obs_bench.py): with tracing disabled the instrumented plan
@@ -212,6 +226,22 @@ def _cases_from(bench: str, rec: dict) -> dict:
                 disabled_overhead=r["disabled_overhead"],
                 traced_overhead=r["traced_overhead"],
                 steps=r["steps"])
+    elif bench.startswith("decode"):
+        for r in rec.get("parity", ()):
+            put(f"parity:{r['case']}", max_err=r["max_err"])
+        g = rec.get("greedy")
+        if g:
+            put("greedy", match=g["match"], tokens=g["tokens"],
+                backend=g["backend"])
+        for r in rec.get("plans", ()):
+            put(f"plan:{r['phase']}", plan_steps=r["steps_fused"],
+                steps_unfused=r["steps_unfused"])
+        srv = rec.get("serve")
+        if srv:
+            put("serve", lost=srv["lost"],
+                leaked_pages=srv["leaked_pages"],
+                tok_per_s=srv["tok_per_s"],
+                decode_tokens=srv["decode_tokens"])
     elif bench.startswith("serving"):
         for r in rec.get("parity", ()):
             put(f"parity:{r['app']}", max_err=r["max_err"])
@@ -260,7 +290,7 @@ def collect(results_dir: str = RESULTS_DIR) -> dict:
         if name == "trajectory":
             continue
         if name.endswith("_smoke") and name not in (
-            "serving_smoke", "robustness_smoke", "obs_smoke",
+            "serving_smoke", "robustness_smoke", "obs_smoke", "decode_smoke",
         ):
             continue  # smoke runs are CI plumbing, not perf data
         with open(path) as f:
@@ -334,6 +364,20 @@ def check(traj: dict | None = None, results_dir: str = RESULTS_DIR) -> int:
                     )
                 if floor.get("zero_lost") and fields.get("lost"):
                     violations.append(f"{tag}: {fields['lost']} lost requests")
+                if floor.get("require_match") and fields.get("match") is False:
+                    violations.append(
+                        f"{tag}: greedy decode diverged from the jnp loop"
+                    )
+                if floor.get("require_fusion"):
+                    su = fields.get("steps_unfused")
+                    if steps is not None and su is not None and steps >= su:
+                        violations.append(
+                            f"{tag}: no plan-step reduction ({steps} >= {su})"
+                        )
+                if floor.get("zero_leak") and fields.get("leaked_pages"):
+                    violations.append(
+                        f"{tag}: {fields['leaked_pages']} KV pages leaked"
+                    )
                 if floor.get("require_survival") and fields.get("survived") is False:
                     violations.append(f"{tag}: scheduler thread died")
                 if floor.get("require_bitexact") and fields.get("bitexact") is False:

@@ -198,6 +198,13 @@ def _steps_local(steps, xs, p):
             out.append(
                 ("norm" if kind == "norm_layer" else kind, len(norms) - 1, eps)
             )
+        elif kind == "norm_rms":  # decoder RMSNorm: scale-only, no bias param
+            pkey, eps = step[1], step[2]
+            norms.append((p[f"{pkey}_scale"], None))
+            out.append((kind, len(norms) - 1, eps))
+        elif kind == "rope":  # position ids stream in as a side operand
+            sides.append(xs[step[1]])
+            out.append((kind, len(sides) - 1, step[2], step[3]))
         else:
             raise NotImplementedError(f"step {kind}")
     return out, sides, norms
@@ -572,6 +579,146 @@ def _broadcast_spatial(p, xs, a, rt):
         xs[0][:, :, None, None],
         (xs[0].shape[0], xs[0].shape[1], xs[1].shape[2], xs[1].shape[3]),
     )
+
+
+# --------------------------------------------------------------------------- #
+# handlers: decoder-block ops (the transformer lowering)                       #
+# --------------------------------------------------------------------------- #
+#
+# Node contracts (see models/transformer_graph.py, the builder):
+#
+#   embed      in (tokens [B, S] i32),              params {table [V, D]}
+#   rmsnorm    in (x [..., D]),                     params {scale [D]}, attrs eps
+#   rope       in (x [..., S, H*dh], pos [..., S]), attrs heads, theta
+#   attention  phase="prefill": in (q, k, v [B, S, H|G * dh], lengths [B])
+#              phase="decode":  in (q [B, 1, H*dh], k_new, v_new [B, 1, G*dh],
+#                                   k_ctx, v_ctx [B, L, S, G, dh], lengths [B])
+#              attrs n_heads, n_kv_heads (+ layer for decode)
+#   ffn        in (x [..., D]),  params {w_gate, w_up [D, F]}, attrs activation
+#   unembed    in (x [..., D]),  params {w [D, V_pad]}, attrs vocab
+#
+# ``lengths`` is the live token count per row: prefill masks each row to its
+# own prompt (the batch is padded to a common S), decode masks the gathered
+# page span and places the new token at slot == length (so the valid prefix
+# stays contiguous -- exactly ``gqa_decode_step``'s slot = pos semantics).
+
+
+def _attn_heads(q, k, v, a):
+    """[B, S, H*dh] projections -> [B, H, S, dh] with KV groups repeated to
+    the query head count (GQA: head gi*rep+ri reads group gi, matching the
+    ``q.reshape(b, s, g, rep, dh)`` grouping in models/attention.py)."""
+    h, g = a["n_heads"], a["n_kv_heads"]
+    b, s, hd = q.shape
+    dh = hd // h
+    qh = q.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    kh = k.reshape(b, k.shape[1], g, dh).transpose(0, 2, 1, 3)
+    vh = v.reshape(b, v.shape[1], g, dh).transpose(0, 2, 1, 3)
+    if g != h:
+        kh = jnp.repeat(kh, h // g, axis=1)
+        vh = jnp.repeat(vh, h // g, axis=1)
+    return qh, kh, vh, (b, s, hd)
+
+
+def _attn_decode_merge(xs, a):
+    """Merge the step's fresh k/v into the gathered cache span at
+    slot == length, then head-split.  Returns (qh, kh, vh, shape, lengths+1)."""
+    q, k_new, v_new, k_ctx, v_ctx, lengths = xs
+    g = a["n_kv_heads"]
+    dh = k_new.shape[-1] // g
+    kc = k_ctx[:, a["layer"]]  # [B, S, G, dh]
+    vc = v_ctx[:, a["layer"]]
+    b, s_ctx = kc.shape[0], kc.shape[1]
+    slot = (
+        jnp.arange(s_ctx, dtype=jnp.int32)[None, :, None, None]
+        == lengths[:, None, None, None]
+    )
+    k = jnp.where(slot, k_new.reshape(b, 1, g, dh), kc).reshape(b, s_ctx, -1)
+    v = jnp.where(slot, v_new.reshape(b, 1, g, dh), vc).reshape(b, s_ctx, -1)
+    qh, kh, vh, shape = _attn_heads(q, k, v, a)
+    return qh, kh, vh, shape, lengths + 1
+
+
+@register_op("attention", backends=("kernel",))
+def _attention_kernel(p, xs, a, rt):
+    """Flash-attention Pallas path.  Decode pads its single query row up to
+    one (8-row) block; the valid-prefix mask keeps padded KV slots inert."""
+    if a.get("phase") == "decode":
+        qh, kh, vh, (b, s, hd), lens = _attn_decode_merge(xs, a)
+        out = kops.attention(
+            qh, kh, vh, lens, causal=False, block_q=8,
+            interpret=rt.interpret,
+        )
+    else:
+        q, k, v, lengths = xs
+        qh, kh, vh, (b, s, hd) = _attn_heads(q, k, v, a)
+        out = kops.attention(
+            qh, kh, vh, lengths, causal=True, interpret=rt.interpret
+        )
+    return out.transpose(0, 2, 1, 3).reshape(b, s, hd)
+
+
+@register_op("attention", backends=("reference",))
+def _attention_ref(p, xs, a, rt):
+    """jnp oracle (naive masked softmax at f32) -- also the abstract-eval
+    body memory_estimate uses."""
+    if a.get("phase") == "decode":
+        qh, kh, vh, (b, s, hd), lens = _attn_decode_merge(xs, a)
+        out = kref.flash_attention_ref(qh, kh, vh, lens, causal=False)
+    else:
+        q, k, v, lengths = xs
+        qh, kh, vh, (b, s, hd) = _attn_heads(q, k, v, a)
+        out = kref.flash_attention_ref(qh, kh, vh, lengths, causal=True)
+    return out.transpose(0, 2, 1, 3).reshape(b, s, hd)
+
+
+@register_op("embed")
+def _embed(p, xs, a, rt):
+    return jnp.take(p["table"], xs[0], axis=0)
+
+
+@register_op("rmsnorm")
+def _rmsnorm(p, xs, a, rt):
+    # identical math to models/layers.rmsnorm: f32 compute, cast back
+    # *before* the scale multiply
+    x = xs[0]
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + a.get("eps", 1e-6))).astype(x.dtype) * p[
+        "scale"
+    ]
+
+
+@register_op("rope")
+def _rope(p, xs, a, rt):
+    return kref.rope_ref(xs[0], xs[1], a["heads"], a.get("theta", 10000.0))
+
+
+@register_op("ffn", backends=("kernel",))
+def _ffn_kernel(p, xs, a, rt):
+    return kops.ffn_gateup(
+        xs[0], p["w_gate"], p["w_up"],
+        activation=a.get("activation", "silu"), interpret=rt.interpret,
+    )
+
+
+@register_op("ffn", backends=("reference",))
+def _ffn_ref(p, xs, a, rt):
+    return kref.ffn_gateup_ref(
+        xs[0], p["w_gate"], p["w_up"], activation=a.get("activation", "silu")
+    )
+
+
+@register_op("unembed")
+def _unembed(p, xs, a, rt):
+    # model-dtype matmul, pad-vocab classes masked: bit-identical to
+    # transformer._unembed with w materialized as embed.table.T at build time
+    logits = xs[0] @ p["w"]
+    v, vp = a["vocab"], p["w"].shape[1]
+    if v != vp:
+        logits = jnp.where(
+            jnp.arange(vp) < v, logits, jnp.asarray(-1e30, logits.dtype)
+        )
+    return logits
 
 
 # --------------------------------------------------------------------------- #

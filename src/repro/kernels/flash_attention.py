@@ -29,7 +29,8 @@ NEG_INF = -1e30
 
 
 def flash_attention_kernel(
-    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, causal, bq, bk
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale, causal, bq, bk, len_ref=None,
 ):
     kv_idx = pl.program_id(2)
 
@@ -44,10 +45,14 @@ def flash_attention_kernel(
     k = k_ref[0].astype(jnp.float32)  # [bk, d]
     v = v_ref[0].astype(jnp.float32)  # [bk, d]
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [bq, bk]
+    cols = kv_idx * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
     if causal:
         rows = q_idx * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-        cols = kv_idx * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
         s = jnp.where(cols <= rows, s, NEG_INF)
+    if len_ref is not None:
+        # valid-prefix mask: only KV slots < length attend (paged decode where
+        # Skv is padded out to a page multiple past the live cache entries)
+        s = jnp.where(cols < len_ref[0, 0], s, NEG_INF)
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
     alpha = jnp.exp(m_prev - m_new)
@@ -63,6 +68,16 @@ def flash_attention_kernel(
         o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _flash_attention_kernel_len(
+    q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale, causal, bq, bk,
+):
+    flash_attention_kernel(
+        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+        scale=scale, causal=causal, bq=bq, bk=bk, len_ref=len_ref,
+    )
+
+
 @functools.partial(
     jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret", "scale")
 )
@@ -70,6 +85,7 @@ def flash_attention(
     q: jax.Array,  # [B, H, Sq, d]
     k: jax.Array,  # [B, H, Skv, d]
     v: jax.Array,  # [B, H, Skv, d]
+    kv_lengths: Optional[jax.Array] = None,  # [B] int32 valid KV prefix per row
     *,
     causal: bool = True,
     scale: Optional[float] = None,
@@ -86,26 +102,51 @@ def flash_attention(
     kf = k.reshape(bh, skv, d)
     vf = v.reshape(bh, skv, d)
     grid = (bh, sq // block_q, skv // block_k)
-    out = pl.pallas_call(
-        functools.partial(
-            flash_attention_kernel, scale=scale, causal=causal, bq=block_q, bk=block_k
-        ),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_q, d), lambda g, i, j: (g, i, 0)),
-            pl.BlockSpec((1, block_k, d), lambda g, i, j: (g, j, 0)),
-            pl.BlockSpec((1, block_k, d), lambda g, i, j: (g, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, block_q, d), lambda g, i, j: (g, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((block_q, 1), jnp.float32),
-            pltpu.VMEM((block_q, 1), jnp.float32),
-            pltpu.VMEM((block_q, d), jnp.float32),
-        ],
-        compiler_params=_tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
-        ),
-        interpret=interpret,
-    )(qf, kf, vf)
+    q_spec = pl.BlockSpec((1, block_q, d), lambda g, i, j: (g, i, 0))
+    kv_spec = pl.BlockSpec((1, block_k, d), lambda g, i, j: (g, j, 0))
+    scratch = [
+        pltpu.VMEM((block_q, 1), jnp.float32),
+        pltpu.VMEM((block_q, 1), jnp.float32),
+        pltpu.VMEM((block_q, d), jnp.float32),
+    ]
+    params = _tpu_compiler_params(
+        dimension_semantics=("parallel", "parallel", "arbitrary")
+    )
+    if kv_lengths is None:
+        out = pl.pallas_call(
+            functools.partial(
+                flash_attention_kernel,
+                scale=scale, causal=causal, bq=block_q, bk=block_k,
+            ),
+            grid=grid,
+            in_specs=[q_spec, kv_spec, kv_spec],
+            out_specs=q_spec,
+            out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+            scratch_shapes=scratch,
+            compiler_params=params,
+            interpret=interpret,
+        )(qf, kf, vf)
+    else:
+        # lengths ride as a [bh, 1] int32 scalar block in SMEM (2D: TPU
+        # scalars must be at least rank 2 -- see pallas guide)
+        lens = jnp.repeat(
+            jnp.asarray(kv_lengths, jnp.int32).reshape(b), h
+        ).reshape(bh, 1)
+        out = pl.pallas_call(
+            functools.partial(
+                _flash_attention_kernel_len,
+                scale=scale, causal=causal, bq=block_q, bk=block_k,
+            ),
+            grid=grid,
+            in_specs=[
+                q_spec, kv_spec, kv_spec,
+                pl.BlockSpec((1, 1), lambda g, i, j: (g, 0),
+                             memory_space=pltpu.SMEM),
+            ],
+            out_specs=q_spec,
+            out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+            scratch_shapes=scratch,
+            compiler_params=params,
+            interpret=interpret,
+        )(qf, kf, vf, lens)
     return out.reshape(b, h, sq, d)

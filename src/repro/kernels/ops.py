@@ -1227,23 +1227,31 @@ def ffn_gateup(
 
 
 def attention(
-    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    kv_lengths: Optional[jax.Array] = None,
+    *, causal: bool = True,
     scale=None, block_q: int = 128, block_k: int = 128,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Flash attention over [B, H, S, d] (pads S to block multiples)."""
+    """Flash attention over [B, H, S, d] (pads S to block multiples).
+
+    ``kv_lengths [B]`` masks each row to its valid KV prefix (slots >= length
+    never attract probability mass) -- the paged-KV path, where Skv is the
+    gathered page span, not the live length.
+    """
     interpret = interpret_default() if interpret is None else interpret
     sq, skv = q.shape[2], k.shape[2]
     qp = _pad_axis(q, block_q, 2)
     kp = _pad_axis(k, block_k, 2)
     vp = _pad_axis(v, block_k, 2)
     # padded KV columns must not attract probability mass: causal masking
-    # handles the tail whenever sq == skv; for cross/kv-padded cases pad K
-    # with -inf-producing zeros is insufficient -> require causal here.
-    assert causal or (sq % block_q == 0 and skv % block_k == 0), (
-        "non-causal attention requires block-aligned shapes")
+    # handles the tail whenever sq == skv; kv_lengths masks explicitly; for
+    # the remaining cross/kv-padded cases require block-aligned shapes.
+    assert causal or kv_lengths is not None or (
+        sq % block_q == 0 and skv % block_k == 0
+    ), "non-causal attention requires block-aligned shapes or kv_lengths"
     out = _flash_attention(
-        qp, kp, vp, causal=causal, scale=scale,
+        qp, kp, vp, kv_lengths, causal=causal, scale=scale,
         block_q=block_q, block_k=block_k, interpret=interpret,
     )
     return out[:, :, :sq]

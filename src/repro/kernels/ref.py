@@ -23,6 +23,7 @@ __all__ = [
     "flash_attention_ref",
     "fused_elementwise_ref",
     "apply_steps_ref",
+    "rope_ref",
 ]
 
 _ACT = {
@@ -40,7 +41,11 @@ def apply_steps_ref(y, steps, sides=(), norm_params=()):
     epilogue/fused-node jnp paths delegate here).  ``("add"|"mul", slot)``
     indexes ``sides``; ``("norm", slot, eps)`` (layer norm over the last
     dim) and ``("norm_instance", slot, eps)`` (per-(N, C) over NCHW spatial
-    dims) index ``norm_params`` -- a sequence of (scale, bias) pairs."""
+    dims) index ``norm_params`` -- a sequence of (scale, bias) pairs.
+    ``("norm_rms", slot, eps)`` is the decoder RMSNorm (scale-only, f32
+    compute cast back before the scale -- exactly ``layers.rmsnorm``);
+    ``("rope", slot, heads, theta)`` rotates a flattened [..., S, H*dh]
+    tensor by the position ids in ``sides[slot]``."""
     for step in steps:
         kind = step[0]
         if kind == "activation":
@@ -49,6 +54,13 @@ def apply_steps_ref(y, steps, sides=(), norm_params=()):
             y = y + sides[step[1]]
         elif kind == "mul":
             y = y * sides[step[1]]
+        elif kind == "norm_rms":
+            scale, _ = norm_params[step[1]]
+            yf = y.astype(jnp.float32)
+            var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+            y = (yf * jax.lax.rsqrt(var + step[2])).astype(y.dtype) * scale
+        elif kind == "rope":
+            y = rope_ref(y, sides[step[1]], step[2], step[3])
         elif kind in ("norm", "norm_instance"):
             scale, bias = norm_params[step[1]]
             if kind == "norm":
@@ -225,17 +237,42 @@ def ffn_gateup_ref(
     return (g * u).astype(x.dtype)
 
 
+def rope_ref(
+    x: jax.Array, positions: jax.Array, heads: int, theta: float = 10000.0
+) -> jax.Array:
+    """Split-half RoPE oracle over a flattened head axis.
+
+    ``x``: [..., S, heads*dh]; ``positions``: [..., S] int32.  Matches
+    ``models.layers.apply_rope`` (f32 compute, cast back) without importing
+    the model stack into the kernel layer.
+    """
+    *lead, s, hd = x.shape
+    dh = hd // heads
+    xh = x.reshape(*lead, s, heads, dh).astype(jnp.float32)
+    freqs = 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(xh, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype).reshape(*lead, s, hd)
+
+
 def flash_attention_ref(
-    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    kv_lengths: Optional[jax.Array] = None,  # [B] int32 valid KV prefix
+    *, causal: bool = True,
     scale=None,
 ) -> jax.Array:
     """Naive softmax attention oracle.  q/k/v: [B, H, S, d]."""
     d = q.shape[-1]
     scale = scale if scale is not None else 1.0 / (d ** 0.5)
     s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    sq, skv = s.shape[-2:]
     if causal:
-        sq, skv = s.shape[-2:]
         mask = jnp.arange(skv)[None, :] <= jnp.arange(sq)[:, None]
         s = jnp.where(mask, s, -1e30)
+    if kv_lengths is not None:
+        valid = jnp.arange(skv)[None, :] < kv_lengths[:, None]  # [B, Skv]
+        s = jnp.where(valid[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,4 +1,5 @@
 from .engine import Engine, GenerationResult, PlanServer, Request, RequestScheduler
+from .kvcache import CacheFullError, PagedKVCache
 from .rollout import PlanVersion, SwapError
 from .scheduler import (
     AsyncPlanServer,
@@ -7,6 +8,7 @@ from .scheduler import (
     QueueFullError,
     QuotaExceededError,
     RequestHandle,
+    SequenceHandle,
     WatchdogTimeout,
     submit_with_retry,
 )
@@ -21,6 +23,7 @@ from .tenancy import (
 
 __all__ = [
     "AsyncPlanServer",
+    "CacheFullError",
     "DeficitRoundRobin",
     "Engine",
     "FrameSpecError",
@@ -28,6 +31,7 @@ __all__ = [
     "LADDER_LEVELS",
     "LadderConfig",
     "LadderShedError",
+    "PagedKVCache",
     "PlanServer",
     "PlanVersion",
     "QueueFullError",
@@ -35,6 +39,7 @@ __all__ = [
     "Request",
     "RequestHandle",
     "RequestScheduler",
+    "SequenceHandle",
     "SwapError",
     "Tenant",
     "TenantSLO",

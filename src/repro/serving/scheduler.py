@@ -73,6 +73,17 @@ it lands in ``health()``, the metrics registry
 (``serving_tenant_events_total``, ``serving_ladder_level``,
 ``serving_ladder_transitions_total``, ``serving_swap_total``) and the
 trace.
+
+Autoregressive serving (PR 10, ``serving/kvcache.py`` +
+``models/transformer_graph.py``): :meth:`AsyncPlanServer.add_llm`
+registers a prefill/decode plan pair sharing a :class:`PagedKVCache`,
+and :meth:`AsyncPlanServer.submit_llm` admits prompts into **token-level
+continuous batching** -- every tick co-schedules one prefill batch (new
+prompts) and one decode step (all active sequences), so a short prompt
+starts decoding the tick it arrives instead of waiting for a long
+neighbour to finish generating.  :class:`SequenceHandle` streams tokens
+per tick; tenancy quotas/ladders, guarded execution and tracing compose
+unchanged.
 """
 
 from __future__ import annotations
@@ -89,6 +100,7 @@ import numpy as np
 from ..obs import metrics as _metrics
 from ..obs import trace as _otrace
 from ..utils.retry import retry_call
+from .kvcache import CacheFullError, PagedKVCache
 from .rollout import PlanVersion, SwapError, probe_version, version_health
 from .tenancy import (
     LADDER_LEVELS,
@@ -106,6 +118,7 @@ __all__ = [
     "QueueFullError",
     "QuotaExceededError",
     "RequestHandle",
+    "SequenceHandle",
     "SwapError",
     "WatchdogTimeout",
     "submit_with_retry",
@@ -214,6 +227,35 @@ class RequestHandle:
         self._event.set()
 
 
+@dataclasses.dataclass(eq=False)
+class SequenceHandle(RequestHandle):
+    """Per-sequence future for autoregressive requests (``submit_llm``).
+
+    Where a :class:`RequestHandle` resolves after one macro-batch, a
+    sequence lives across many scheduler ticks: one prefill batch caches
+    its prompt and emits the first token, then every tick it sits in the
+    decode batch emits one more -- until EOS or ``max_new_tokens``.
+    ``result()`` returns the generated token ids as an int32 array;
+    :meth:`tokens_so_far` streams them while the sequence is live."""
+
+    #: prompt token ids (set at submit; immutable)
+    prompt: Tuple[int, ...] = ()
+    max_new_tokens: int = 16
+    #: stop token (None = run to max_new_tokens)
+    eos_id: Optional[int] = None
+
+    def __post_init__(self):
+        super().__post_init__()
+        self._generated: List[int] = []
+        self._seq_id: Optional[int] = None  # KV-cache sequence id once admitted
+        self._phase = "waiting"  # waiting -> decode -> (resolved)
+
+    def tokens_so_far(self) -> Tuple[int, ...]:
+        """Snapshot of the tokens generated so far (streaming view; grows
+        by one per decode tick, plus the first token at prefill)."""
+        return tuple(self._generated)
+
+
 #: bounded completion-side buffers: a server nobody drains must plateau,
 #: not ramp -- the admission queue bounds the inflow, these bound the wake
 RETAINED_COMPLETIONS = 4096
@@ -271,6 +313,39 @@ class _PlanEntry:
         return self.primary.batched
 
 
+@dataclasses.dataclass(eq=False)
+class _LLMEntry:
+    """One registered autoregressive model: a prefill plan, a decode plan,
+    and the paged KV-cache they share.  Sequences wait in ``waiting`` in
+    strict ``(-priority, arrival)`` order (no skip-ahead: a big prompt at
+    the head must not starve behind smaller latecomers), move to ``active``
+    when the batch has a slot AND the cache has pages for the prompt, and
+    leave on EOS / ``max_new_tokens`` / failure -- always releasing their
+    pages."""
+
+    name: str
+    prefill: Any  # ExecutionPlan, phase="prefill" graph
+    decode: Any  # ExecutionPlan, phase="decode" graph
+    cache: PagedKVCache
+    max_batch: int = 4
+    eos_id: Optional[int] = None
+    waiting: List[SequenceHandle] = dataclasses.field(default_factory=list)
+    active: List[SequenceHandle] = dataclasses.field(default_factory=list)
+    seq: int = 0  # arrival order AND KV-cache sequence ids
+    queue_peak: int = 0
+    busy: bool = False  # one tick works an entry at a time
+    latencies: Deque[float] = dataclasses.field(
+        default_factory=lambda: deque(maxlen=LATENCY_RESERVOIR)
+    )
+    stats: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {
+            "submitted": 0, "completed": 0, "failed": 0, "rejected": 0,
+            "prefill_batches": 0, "decode_batches": 0, "decode_tokens": 0,
+            "cache_full": 0, "deadline_misses": 0,
+        }
+    )
+
+
 class AsyncPlanServer:
     """Async continuous-batching server over one or more compiled plans.
 
@@ -320,6 +395,7 @@ class AsyncPlanServer:
         self._tick_errors = 0  # scheduler-tick exceptions survived by _loop
         self._clock = clock
         self._plans: Dict[str, _PlanEntry] = {}
+        self._llms: Dict[str, _LLMEntry] = {}
         #: tenants by name; "default" always exists (unit weight, no quota,
         #: no SLO) so single-tenant callers never see the machinery
         self._tenants: Dict[str, Tenant] = {"default": Tenant("default")}
@@ -399,6 +475,46 @@ class AsyncPlanServer:
                     version=0,
                 ),
                 input_spec=spec,
+            )
+
+    def add_llm(
+        self,
+        name: str,
+        *,
+        prefill,
+        decode,
+        cache: PagedKVCache,
+        max_batch: int = 4,
+        eos_id: Optional[int] = None,
+    ) -> None:
+        """Register an autoregressive model: ``prefill``/``decode`` are the
+        two compiled decoder plans (``build_decoder_graph`` phases, any
+        backend) and ``cache`` the :class:`PagedKVCache` that holds its
+        sequences' KV.  ``submit_llm`` then streams tokens through
+        token-level continuous batching: each scheduler tick co-schedules
+        one prefill batch (newly admitted prompts) and one decode step
+        (every active sequence) on this model, so new prompts join the
+        decode batch the tick after they arrive -- no generation-length
+        head-of-line blocking.  ``max_batch`` bounds concurrently active
+        sequences; ``eos_id`` is the default stop token."""
+        with self._lock:
+            if self.closed:
+                raise RuntimeError("AsyncPlanServer is closed")
+            if name in self._llms or name in self._plans:
+                raise ValueError(f"{name!r} already registered")
+            if max_batch < 1:
+                raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+            n_pre = len(prefill.graph.inputs)
+            n_dec = len(decode.graph.inputs)
+            if n_pre != 3 or n_dec != 5:
+                raise ValueError(
+                    f"expected prefill(tokens, positions, lengths) and "
+                    f"decode(tokens, positions, k_ctx, v_ctx, lengths) "
+                    f"graphs; got {n_pre}/{n_dec} inputs"
+                )
+            self._llms[name] = _LLMEntry(
+                name=name, prefill=prefill, decode=decode, cache=cache,
+                max_batch=max_batch, eos_id=eos_id,
             )
 
     def add_tenant(
@@ -569,6 +685,10 @@ class AsyncPlanServer:
         return tuple(self._plans)
 
     @property
+    def llms(self) -> Tuple[str, ...]:
+        return tuple(self._llms)
+
+    @property
     def tenants(self) -> Tuple[str, ...]:
         return tuple(self._tenants)
 
@@ -736,11 +856,117 @@ class AsyncPlanServer:
         self._work.set()
         return handle
 
+    def submit_llm(
+        self,
+        name: str,
+        prompt_tokens,
+        *,
+        max_new_tokens: int = 16,
+        eos_id: Optional[int] = None,
+        priority: int = 0,
+        deadline: Optional[float] = None,
+        tenant: Optional[str] = None,
+    ) -> SequenceHandle:
+        """Queue one prompt for autoregressive generation on LLM ``name``
+        and return its :class:`SequenceHandle` immediately.  The sequence
+        is admitted to the running decode batch as soon as a slot and cache
+        pages free up; ``handle.tokens_so_far()`` streams tokens per tick
+        and ``handle.result()`` returns the full generation (int32 array,
+        EOS included when hit).  Tenancy composes exactly as for
+        :meth:`submit`: the tenant's token bucket gates admission, its
+        ladder shed rung turns away low-priority prompts, and overload is
+        reject-only (a queued sequence is a future cache reservation;
+        eviction semantics would be release-and-retry, so backpressure is
+        surfaced to the client instead)."""
+        prompt = tuple(
+            int(x) for x in np.asarray(prompt_tokens).reshape(-1).tolist()
+        )
+        if not prompt:
+            raise ValueError("prompt_tokens must be non-empty")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
+        with self._lock:
+            if self.closed:
+                raise RuntimeError("AsyncPlanServer is closed; no further requests")
+            entry = self._llms.get(name)
+            if entry is None:
+                raise KeyError(
+                    f"unknown llm {name!r}; registered: {sorted(self._llms)}"
+                )
+            tname = tenant if tenant is not None else "default"
+            t = self._tenants.get(tname)
+            if t is None:
+                raise KeyError(
+                    f"unknown tenant {tname!r}; registered: "
+                    f"{sorted(self._tenants)}"
+                )
+            cache = entry.cache
+            if cache.pages_for(len(prompt) + 1) > cache.num_pages:
+                raise ValueError(
+                    f"prompt of {len(prompt)} tokens can never fit the "
+                    f"{cache.num_pages}x{cache.page_size}-token cache"
+                )
+            now = self._clock()
+            if (
+                t.level >= LADDER_LEVELS.index("shed")
+                and priority < t.ladder.shed_below_priority
+            ):
+                self._bump_tenant(t, "ladder_shed")
+                raise LadderShedError(
+                    f"tenant {t.name!r} is on the {t.level_name!r} rung; "
+                    f"priority {priority} admissions "
+                    f"(< {t.ladder.shed_below_priority}) are shed"
+                )
+            if not t.bucket.take(now):
+                self._bump_tenant(t, "throttled")
+                raise QuotaExceededError(
+                    f"tenant {t.name!r} quota exhausted "
+                    f"({t.bucket.rate}/s, burst {t.bucket.burst})"
+                )
+            depth = len(entry.waiting) + len(entry.active)
+            if depth >= self.max_queue:
+                self._bump(entry, "rejected")
+                raise QueueFullError(
+                    f"llm {name!r} queue full ({depth}/{self.max_queue}); "
+                    f"sequence rejected"
+                )
+            handle = SequenceHandle(
+                rid=self._rid, plan=name, priority=priority, tenant=t.name,
+                deadline_at=None if deadline is None else now + deadline,
+                submitted_at=now,
+                prompt=prompt, max_new_tokens=max_new_tokens,
+                eos_id=eos_id if eos_id is not None else entry.eos_id,
+            )
+            self._rid += 1
+            handle._seq = entry.seq
+            entry.seq += 1
+            entry.waiting.append(handle)
+            entry.waiting.sort(key=lambda h: (-h.priority, h._seq))
+            self._bump(entry, "submitted")
+            self._bump_tenant(t, "submitted")
+            if depth + 1 > entry.queue_peak:
+                entry.queue_peak = depth + 1
+                _metrics.registry().gauge(
+                    "serving_queue_depth_peak", plan=name
+                ).set_max(entry.queue_peak)
+            if _otrace.enabled():
+                _otrace.async_begin(
+                    "request", handle.rid, cat="serving", plan=name,
+                    priority=priority, tenant=t.name, kind="sequence",
+                )
+        self._work.set()
+        return handle
+
     def pending(self, plan_name: Optional[str] = None) -> int:
         with self._lock:
             if plan_name is not None:
+                if plan_name in self._llms:
+                    e = self._llms[plan_name]
+                    return len(e.waiting) + len(e.active)
                 return len(self._plans[plan_name].queue)
-            return sum(len(e.queue) for e in self._plans.values())
+            return sum(len(e.queue) for e in self._plans.values()) + sum(
+                len(e.waiting) + len(e.active) for e in self._llms.values()
+            )
 
     # -- scheduling ---------------------------------------------------------- #
     def _ready(self, entry: _PlanEntry, now: float, force: bool) -> Optional[str]:
@@ -968,10 +1194,11 @@ class AsyncPlanServer:
         with self._lock:
             self._evaluate_slos(self._clock())
             names = list(self._plans)
-            if not names:
-                return 0
-            rotation = names[self._rr % len(names):] + names[: self._rr % len(names)]
-            self._rr += 1
+            if names:
+                rotation = names[self._rr % len(names):] + names[: self._rr % len(names)]
+                self._rr += 1
+            else:
+                rotation = []
         for name in rotation:
             with self._lock:
                 entry = self._plans[name]
@@ -985,6 +1212,8 @@ class AsyncPlanServer:
                 self._inflight += 1
             self._execute(entry, runner, batch, reason)
             executed += 1
+        for name in list(self._llms):
+            executed += self._llm_tick(name)
         return executed
 
     def _evaluate_slos(self, now: float) -> None:
@@ -1019,6 +1248,219 @@ class AsyncPlanServer:
             _otrace.instant(
                 f"ladder_{direction}", cat="serving", tenant=t.name,
                 from_level=LADDER_LEVELS[frm], to_level=LADDER_LEVELS[to],
+            )
+
+    # -- autoregressive (LLM) scheduling -------------------------------------- #
+    def _llm_tick(self, name: str) -> int:
+        """One continuous-batching tick for LLM ``name``: admit waiting
+        prompts while the batch has slots and the cache has pages, run ONE
+        prefill batch over the newly admitted, and ONE decode step over
+        every already-active sequence.  Returns the number of batches run
+        (so the scheduler thread keeps ticking while sequences are live
+        instead of sleeping on the work event).  Compute runs with the
+        admission lock released, exactly like :meth:`_execute`."""
+        with self._lock:
+            entry = self._llms.get(name)
+            if entry is None or entry.busy:
+                return 0
+            admitted: List[SequenceHandle] = []
+            while entry.waiting and len(entry.active) < entry.max_batch:
+                h = entry.waiting[0]
+                need = entry.cache.pages_for(len(h.prompt) + 1)
+                if need > entry.cache.free_pages:
+                    break  # strict order: no skip-ahead past a big prompt
+                entry.waiting.pop(0)
+                h._seq_id = h._seq
+                entry.cache.allocate(h._seq_id)
+                # reserve the prompt's pages now so the prefill append
+                # cannot race another admission for them
+                entry.cache.ensure_capacity(h._seq_id, len(h.prompt))
+                entry.active.append(h)
+                admitted.append(h)
+            decoding = [h for h in entry.active if h._phase == "decode"]
+            if not admitted and not decoding:
+                return 0
+            entry.busy = True
+            self._inflight += 1
+        executed = 0
+        try:
+            if admitted:
+                self._llm_prefill(entry, admitted)
+                executed += 1
+            if decoding:
+                self._llm_decode(entry, decoding)
+                executed += 1
+        finally:
+            with self._lock:
+                entry.busy = False
+                self._inflight -= 1
+                self._idle.notify_all()
+        return executed
+
+    def _llm_prefill(self, entry: _LLMEntry, batch: List[SequenceHandle]) -> None:
+        """Run the prefill plan over the newly admitted prompts (padded to
+        the longest, masked by per-row lengths), cache each sequence's
+        per-layer KV, and emit each first greedy token."""
+        cache = entry.cache
+        lens = np.array([len(h.prompt) for h in batch], np.int32)
+        s = int(lens.max())
+        tokens = np.zeros((len(batch), s), np.int32)
+        for j, h in enumerate(batch):
+            tokens[j, : len(h.prompt)] = h.prompt
+        positions = np.broadcast_to(
+            np.arange(s, dtype=np.int32), tokens.shape
+        )
+        with self._lock:
+            bid = self._batch_seq
+            self._batch_seq += 1
+        with _otrace.span(
+            "llm_prefill", cat="serving", plan=entry.name, batch=bid,
+            rids=[h.rid for h in batch], tokens=int(lens.sum()),
+        ):
+            try:
+                outs = entry.prefill(
+                    entry.prefill.graph.params, jnp.asarray(tokens),
+                    jnp.asarray(positions), jnp.asarray(lens),
+                )
+                logits = np.asarray(outs[0])
+                kvs = [np.asarray(o) for o in outs[1:]]
+            except Exception as e:
+                now = self._clock()
+                with self._lock:
+                    for h in batch:
+                        self._llm_fail(entry, h, e, now)
+                return
+        now = self._clock()
+        g, dh = cache.n_kv_heads, cache.head_dim
+        with self._lock:
+            self._bump(entry, "prefill_batches")
+            for j, h in enumerate(batch):
+                n = int(lens[j])
+                k_new = np.stack(
+                    [kv[j, :n].reshape(n, g, dh) for kv in kvs[0::2]], axis=1
+                )
+                v_new = np.stack(
+                    [kv[j, :n].reshape(n, g, dh) for kv in kvs[1::2]], axis=1
+                )
+                cache.append(h._seq_id, k_new, v_new)
+                self._llm_emit(entry, h, int(np.argmax(logits[j, n - 1])), now)
+
+    def _llm_decode(self, entry: _LLMEntry, batch: List[SequenceHandle]) -> None:
+        """One decode step for every active sequence: gather the batch's
+        paged KV spans, run the decode plan on each sequence's last emitted
+        token, append the fresh KV, emit the next greedy token."""
+        cache = entry.cache
+        ok: List[SequenceHandle] = []
+        now = self._clock()
+        with self._lock:
+            for h in batch:
+                if h.done():  # finished in this tick's prefill pass
+                    continue
+                try:
+                    cache.ensure_capacity(h._seq_id, cache.length(h._seq_id) + 1)
+                    ok.append(h)
+                except CacheFullError as e:
+                    self._bump(entry, "cache_full")
+                    self._llm_fail(entry, h, e, now)
+        if not ok:
+            return
+        sids = [h._seq_id for h in ok]
+        lengths = np.array([cache.length(sid) for sid in sids], np.int32)
+        k_ctx, v_ctx, lens = cache.gather(
+            sids, min_tokens=int(lengths.max()) + 1
+        )
+        tokens = np.array([[h._generated[-1]] for h in ok], np.int32)
+        positions = lengths[:, None]
+        with self._lock:
+            bid = self._batch_seq
+            self._batch_seq += 1
+        with _otrace.span(
+            "llm_decode", cat="serving", plan=entry.name, batch=bid,
+            rids=[h.rid for h in ok],
+        ):
+            try:
+                outs = entry.decode(
+                    entry.decode.graph.params, jnp.asarray(tokens),
+                    jnp.asarray(positions), jnp.asarray(k_ctx),
+                    jnp.asarray(v_ctx), jnp.asarray(lens),
+                )
+                logits = np.asarray(outs[0])
+                kvs = [np.asarray(o) for o in outs[1:]]
+            except Exception as e:
+                now = self._clock()
+                with self._lock:
+                    for h in ok:
+                        self._llm_fail(entry, h, e, now)
+                return
+        now = self._clock()
+        g, dh = cache.n_kv_heads, cache.head_dim
+        with self._lock:
+            self._bump(entry, "decode_batches")
+            self._bump(entry, "decode_tokens", len(ok))
+            for j, h in enumerate(ok):
+                k_new = np.stack(
+                    [kv[j].reshape(1, g, dh) for kv in kvs[0::2]], axis=1
+                )
+                v_new = np.stack(
+                    [kv[j].reshape(1, g, dh) for kv in kvs[1::2]], axis=1
+                )
+                cache.append(h._seq_id, k_new, v_new)
+                self._llm_emit(entry, h, int(np.argmax(logits[j, -1])), now)
+
+    def _llm_emit(self, entry: _LLMEntry, h: SequenceHandle, tok: int,
+                  now: float) -> None:
+        """Record one generated token and retire the sequence on EOS or
+        length (call with the lock held)."""
+        h._generated.append(tok)
+        h._phase = "decode"
+        if (h.eos_id is not None and tok == h.eos_id) or len(
+            h._generated
+        ) >= h.max_new_tokens:
+            entry.active.remove(h)
+            entry.cache.release(h._seq_id)
+            h._resolve(np.asarray(h._generated, np.int32), now)
+            self._bump(entry, "completed")
+            t = self._tenants.get(h.tenant)
+            if t is not None:
+                self._bump_tenant(t, "completed")
+            if h.deadline_missed:
+                self._bump(entry, "deadline_misses")
+                if t is not None:
+                    self._bump_tenant(t, "deadline_misses")
+            if h.latency is not None:
+                entry.latencies.append(h.latency)
+                _metrics.registry().histogram(
+                    "serving_latency_seconds", plan=entry.name
+                ).observe(h.latency)
+                if t is not None:
+                    t.observe(h.latency, h.deadline_missed)
+            self._completed.append(h)
+            if _otrace.enabled():
+                _otrace.async_end(
+                    "request", h.rid, cat="serving", phase="completed",
+                    tokens=len(h._generated),
+                )
+
+    def _llm_fail(self, entry: _LLMEntry, h: SequenceHandle,
+                  err: BaseException, now: float) -> None:
+        """Fail one sequence and release its pages (call with the lock
+        held).  Scheduler-side faults cost the affected sequences, never
+        the engine -- the guarded backend absorbs kernel faults before
+        they ever reach here."""
+        if h in entry.active:
+            entry.active.remove(h)
+        if h._seq_id is not None and h._seq_id in entry.cache.sequences():
+            entry.cache.release(h._seq_id)
+        h._fail(err, now)
+        self._bump(entry, "completed")
+        self._bump(entry, "failed")
+        t = self._tenants.get(h.tenant)
+        if t is not None:
+            self._bump_tenant(t, "completed")
+        self._completed.append(h)
+        if _otrace.enabled():
+            _otrace.async_end(
+                "request", h.rid, cat="serving", phase="failed",
             )
 
     # -- background thread --------------------------------------------------- #
@@ -1087,9 +1529,15 @@ class AsyncPlanServer:
             thread.join()
             self._thread = None
         drained = 0
+        llm_drained = set()
         while True:  # synchronous force-drain of whatever is still queued
             with self._lock:
                 queued = sum(len(e.queue) for e in self._plans.values())
+                for e in self._llms.values():
+                    for h in list(e.waiting) + list(e.active):
+                        if id(h) not in llm_drained:
+                            llm_drained.add(id(h))
+                            queued += 1
             if queued == 0:
                 break
             drained += queued
@@ -1118,12 +1566,15 @@ class AsyncPlanServer:
             per_tenant = {
                 n: dict(t.stats) for n, t in self._tenants.items()
             }
+            per_llm = {n: dict(e.stats) for n, e in self._llms.items()}
         total: Dict[str, int] = {}
         for s in per_plan.values():
             for k, v in s.items():
                 total[k] = total.get(k, 0) + v
         total["per_plan"] = per_plan
         total["per_tenant"] = per_tenant
+        if per_llm:
+            total["per_llm"] = per_llm
         return total
 
     def health(self) -> Dict[str, Any]:
@@ -1156,6 +1607,24 @@ class AsyncPlanServer:
                     if gs:
                         d["guard"] = gs
                 plans[n] = d
+            llms: Dict[str, Any] = {}
+            for n, e in self._llms.items():
+                ld: Dict[str, Any] = {
+                    "waiting": len(e.waiting),
+                    "active": len(e.active),
+                    "queue_peak": e.queue_peak,
+                    "cache": e.cache.occupancy(),
+                    "stats": dict(e.stats),
+                }
+                for p in (e.prefill, e.decode):
+                    guard_stats = getattr(p, "guard_stats", None)
+                    if callable(guard_stats):
+                        gs = guard_stats()
+                        if gs:
+                            ld.setdefault("guard", {})[
+                                "prefill" if p is e.prefill else "decode"
+                            ] = gs
+                llms[n] = ld
             tenants = {
                 n: {
                     "level": t.level,
@@ -1166,16 +1635,20 @@ class AsyncPlanServer:
                 }
                 for n, t in self._tenants.items()
             }
-            return {
+            out = {
                 "closed": self.closed,
                 "running": self.running,
                 "inflight": self._inflight,
                 "tick_errors": self._tick_errors,
                 "watchdog": self.watchdog,
-                "pending": sum(p["queue_depth"] for p in plans.values()),
+                "pending": sum(p["queue_depth"] for p in plans.values())
+                + sum(l["waiting"] + l["active"] for l in llms.values()),
                 "plans": plans,
                 "tenants": tenants,
             }
+            if llms:
+                out["llms"] = llms
+            return out
 
     def latency_stats(
         self, plan_name: Optional[str] = None
@@ -1184,10 +1657,15 @@ class AsyncPlanServer:
         requests of one plan (or all plans)."""
         with self._lock:
             if plan_name is not None:
-                lats: Sequence[float] = list(self._plans[plan_name].latencies)
+                src = (
+                    self._llms[plan_name] if plan_name in self._llms
+                    else self._plans[plan_name]
+                )
+                lats: Sequence[float] = list(src.latencies)
             else:
                 lats = [
-                    v for e in self._plans.values() for v in e.latencies
+                    v for e in list(self._plans.values())
+                    + list(self._llms.values()) for v in e.latencies
                 ]
         if not lats:
             return {"count": 0, "p50": 0.0, "p95": 0.0, "p99": 0.0, "mean": 0.0}

@@ -144,6 +144,90 @@ def test_conv2d_matches_reference(c, hw, o, ksize, stride, padding):
 
 
 # --------------------------------------------------------------------------- #
+# flash attention (causal prefill + kv_lengths paged-decode masking)           #
+# --------------------------------------------------------------------------- #
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.sampled_from([1, 4]),
+    s=st.sampled_from([5, 128, 130]),
+    scale=st.booleans(),
+)
+def test_flash_attention_causal_matches_reference(h, s, scale):
+    key = _key("flash_causal", h, s, scale)
+    b, dh = 2, 16
+    q = jax.random.normal(key, (b, h, s, dh)) * 0.5
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, h, s, dh)) * 0.5
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, h, s, dh))
+    sc = 0.3 if scale else None
+    got = kops.attention(q, k, v, causal=True, scale=sc, interpret=True)
+    want = kref.flash_attention_ref(q, k, v, causal=True, scale=sc)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.sampled_from([1, 4]),
+    sq=st.sampled_from([1, 7]),
+    skv=st.sampled_from([9, 128, 130]),
+    lens_kind=st.sampled_from(["one", "mid", "full"]),
+)
+def test_flash_attention_kv_lengths_matches_reference(h, sq, skv, lens_kind):
+    """The paged-KV masking path: Skv is a gathered page span, kv_lengths
+    marks each row's live prefix.  Slots past the length (zero-filled pages,
+    block padding) must never attract probability mass."""
+    key = _key("flash_lens", h, sq, skv, lens_kind)
+    b, dh = 2, 16
+    q = jax.random.normal(key, (b, h, sq, dh)) * 0.5
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, h, skv, dh)) * 0.5
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, h, skv, dh))
+    lens = {
+        "one": jnp.asarray([1, 1], jnp.int32),
+        "mid": jnp.asarray([skv // 2, skv - 1], jnp.int32),
+        "full": jnp.asarray([skv, 3], jnp.int32),
+    }[lens_kind]
+    got = kops.attention(q, k, v, lens, causal=False, interpret=True)
+    want = kref.flash_attention_ref(q, k, v, lens, causal=False)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+    )
+    # and the values past each row's length genuinely do not matter
+    k2 = k.at[0, :, int(lens[0]):, :].set(1e3)
+    v2 = v.at[0, :, int(lens[0]):, :].set(-1e3)
+    got2 = kops.attention(q, k2, v2, lens, causal=False, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got2)[0], np.asarray(got)[0], rtol=1e-5, atol=1e-5
+    )
+
+
+# --------------------------------------------------------------------------- #
+# fused_ffn (gate/up GEMM pair + glu activation, the decoder FFN fast path)    #
+# --------------------------------------------------------------------------- #
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([3, 128, 130]),
+    k=st.sampled_from([8, 33]),
+    f=st.sampled_from([16, 129]),
+    activation=st.sampled_from(["silu", "gelu", "relu"]),
+)
+def test_ffn_gateup_matches_reference(m, k, f, activation):
+    key = _key("ffn_gateup", m, k, f, activation)
+    x = jax.random.normal(key, (m, k)) * 0.5
+    wg = jax.random.normal(jax.random.fold_in(key, 1), (k, f)) * 0.1
+    wu = jax.random.normal(jax.random.fold_in(key, 2), (k, f)) * 0.1
+    got = kops.ffn_gateup(x, wg, wu, activation=activation, interpret=True)
+    want = kref.ffn_gateup_ref(x, wg, wu, activation=activation)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+    )
+
+
+# --------------------------------------------------------------------------- #
 # fused_elementwise (whole step programs, incl. layer-norm statistics)         #
 # --------------------------------------------------------------------------- #
 

@@ -1,0 +1,226 @@
+"""Property suite for the block-table paged KV-cache (`serving/kvcache.py`).
+
+Three families of invariants lock the cache in:
+
+1. **Pool conservation** -- random alloc/append/release programs never leak
+   or double-assign pages (``check_invariants`` after every op, freelist
+   fully restored once every sequence is released).
+2. **Gather fidelity** -- the block-table gather returns exactly the
+   appended tokens in order (even when sequences grew interleaved so their
+   pages are scattered through the pool), and attention over a gathered
+   span with ``kv_lengths`` masking is bit-identical to attention over a
+   contiguous per-sequence cache.
+3. **Failure atomicity** -- ``ensure_capacity`` past the pool is
+   all-or-nothing: the block table, freelist, and existing data survive a
+   ``CacheFullError`` unchanged.
+"""
+
+import zlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised in minimal containers
+    from _hypothesis_fallback import given, settings, st
+
+from repro.kernels import ref as kref
+from repro.serving import CacheFullError, PagedKVCache
+
+SETTINGS = dict(max_examples=16, deadline=None, derandomize=True)
+
+SPEC = dict(n_layers=2, n_kv_heads=2, head_dim=4)
+
+
+def _rng(*dims) -> np.random.Generator:
+    return np.random.default_rng(zlib.crc32(repr(dims).encode()) % (2**31))
+
+
+def _tokens(rng, t):
+    shape = (t, SPEC["n_layers"], SPEC["n_kv_heads"], SPEC["head_dim"])
+    return (
+        rng.standard_normal(shape).astype(np.float32),
+        rng.standard_normal(shape).astype(np.float32),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# 1. pool conservation under random programs                                   #
+# --------------------------------------------------------------------------- #
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 7),
+    num_pages=st.sampled_from([4, 9]),
+    page_size=st.sampled_from([1, 3]),
+)
+def test_random_program_never_leaks_pages(seed, num_pages, page_size):
+    rng = _rng("program", seed, num_pages, page_size)
+    cache = PagedKVCache(num_pages=num_pages, page_size=page_size, **SPEC)
+    mirror: dict[int, list] = {}  # sid -> [(k, v), ...] appended chunks
+    next_sid = 0
+    for _ in range(40):
+        op = rng.choice(["alloc", "append", "release", "gather"])
+        if op == "alloc":
+            cache.allocate(next_sid)
+            mirror[next_sid] = []
+            next_sid += 1
+        elif op == "append" and mirror:
+            sid = int(rng.choice(list(mirror)))
+            t = int(rng.integers(1, 2 * page_size + 2))
+            k, v = _tokens(rng, t)
+            before = cache.block_table(sid)
+            try:
+                cache.append(sid, k, v)
+                mirror[sid].append((k, v))
+            except CacheFullError:
+                # all-or-nothing: the table must be untouched
+                assert cache.block_table(sid) == before
+        elif op == "release" and mirror:
+            sid = int(rng.choice(list(mirror)))
+            freed = cache.release(sid)
+            assert freed == cache.pages_for(
+                sum(k.shape[0] for k, _ in mirror[sid])
+            )
+            del mirror[sid]
+        elif op == "gather" and mirror:
+            sids = list(mirror)
+            k_ctx, v_ctx, lens = cache.gather(sids)
+            for j, sid in enumerate(sids):
+                want_len = sum(k.shape[0] for k, _ in mirror[sid])
+                assert int(lens[j]) == want_len
+                if want_len:
+                    want_k = np.concatenate([k for k, _ in mirror[sid]])
+                    want_v = np.concatenate([v for _, v in mirror[sid]])
+                    # gather is [B, L, S, G, dh]; mirror is token-major
+                    np.testing.assert_array_equal(
+                        k_ctx[j, :, :want_len].swapaxes(0, 1), want_k
+                    )
+                    np.testing.assert_array_equal(
+                        v_ctx[j, :, :want_len].swapaxes(0, 1), want_v
+                    )
+        cache.check_invariants()
+    for sid in list(mirror):
+        cache.release(sid)
+    cache.check_invariants()
+    assert cache.free_pages == num_pages and not cache.sequences()
+
+
+# --------------------------------------------------------------------------- #
+# 2. gather == contiguous cache, through attention                             #
+# --------------------------------------------------------------------------- #
+
+
+def test_paged_gather_attention_matches_contiguous():
+    """Grow three sequences interleaved so their pages scatter through the
+    pool, then check masked attention over the gathered spans is bit-equal
+    to attention over each sequence's contiguous KV."""
+    rng = _rng("gather_attn")
+    cache = PagedKVCache(num_pages=12, page_size=3, **SPEC)
+    dense: dict[int, list] = {}
+    for sid in range(3):
+        cache.allocate(sid)
+        dense[sid] = []
+    for step in range(5):
+        for sid in range(3):
+            t = (sid + step) % 3 + 1
+            k, v = _tokens(rng, t)
+            cache.append(sid, k, v)
+            dense[sid].append((k, v))
+    cache.check_invariants()
+    # interleaved growth => at least one block table is non-contiguous
+    tables = [cache.block_table(s) for s in range(3)]
+    assert any(
+        any(b - a != 1 for a, b in zip(tb, tb[1:])) for tb in tables
+    ), tables
+
+    k_ctx, v_ctx, lens = cache.gather([0, 1, 2])
+    g, dh = SPEC["n_kv_heads"], SPEC["head_dim"]
+    q = _rng("gather_q").standard_normal((3, g, 1, dh)).astype(np.float32)
+    for layer in range(SPEC["n_layers"]):
+        # paged path: full zero-padded span, masked by kv_lengths
+        got = kref.flash_attention_ref(
+            jnp.asarray(q),
+            jnp.asarray(k_ctx[:, layer].swapaxes(1, 2)),
+            jnp.asarray(v_ctx[:, layer].swapaxes(1, 2)),
+            jnp.asarray(lens),
+            causal=False,
+        )
+        for sid in range(3):
+            k_d = np.concatenate([k for k, _ in dense[sid]])[:, layer]
+            v_d = np.concatenate([v for _, v in dense[sid]])[:, layer]
+            want = kref.flash_attention_ref(
+                jnp.asarray(q[sid : sid + 1]),
+                jnp.asarray(k_d.swapaxes(0, 1)[None]),
+                jnp.asarray(v_d.swapaxes(0, 1)[None]),
+                causal=False,
+            )
+            np.testing.assert_array_equal(
+                np.asarray(got[sid]), np.asarray(want[0])
+            )
+
+
+def test_page_reuse_after_release_is_clean():
+    """Pages handed back and re-acquired serve the new owner's tokens, and
+    the LIFO freelist hands the hottest pages out first."""
+    cache = PagedKVCache(num_pages=4, page_size=2, **SPEC)
+    rng = _rng("reuse")
+    cache.allocate(0)
+    k0, v0 = _tokens(rng, 4)
+    cache.append(0, k0, v0)
+    old_pages = cache.block_table(0)
+    assert cache.release(0) == 2
+    cache.allocate(1)
+    k1, v1 = _tokens(rng, 3)
+    cache.append(1, k1, v1)
+    assert set(cache.block_table(1)) <= set(old_pages)  # LIFO reuse
+    k_ctx, v_ctx, lens = cache.gather([1])
+    assert int(lens[0]) == 3
+    np.testing.assert_array_equal(k_ctx[0, :, :3].swapaxes(0, 1), k1)
+    np.testing.assert_array_equal(v_ctx[0, :, :3].swapaxes(0, 1), v1)
+    cache.check_invariants()
+
+
+# --------------------------------------------------------------------------- #
+# 3. failure atomicity + API edges                                             #
+# --------------------------------------------------------------------------- #
+
+
+def test_cache_full_is_all_or_nothing():
+    cache = PagedKVCache(num_pages=3, page_size=2, **SPEC)
+    rng = _rng("full")
+    cache.allocate(0)
+    k, v = _tokens(rng, 3)
+    cache.append(0, k, v)  # 2 pages, 1 free
+    table = cache.block_table(0)
+    with pytest.raises(CacheFullError):
+        cache.ensure_capacity(0, 7)  # needs 2 more, only 1 free
+    assert cache.block_table(0) == table and cache.free_pages == 1
+    k_ctx, _, lens = cache.gather([0])
+    assert int(lens[0]) == 3
+    np.testing.assert_array_equal(k_ctx[0, :, :3].swapaxes(0, 1), k)
+    cache.check_invariants()
+
+
+def test_api_edges():
+    cache = PagedKVCache(num_pages=2, page_size=2, **SPEC)
+    cache.allocate(0)
+    with pytest.raises(ValueError):
+        cache.allocate(0)  # double-allocate
+    with pytest.raises(ValueError):
+        cache.append(0, np.zeros((1, 9, 9, 9), np.float32),
+                     np.zeros((1, 9, 9, 9), np.float32))  # bad KV shape
+    with pytest.raises(KeyError):
+        cache.length(99)
+    assert cache.pages_for(0) == 0
+    assert cache.pages_for(1) == 1
+    assert cache.pages_for(2) == 1
+    assert cache.pages_for(3) == 2
+    # min_tokens raises the gather span to a page multiple
+    k_ctx, _, _ = cache.gather([0], min_tokens=3)
+    assert k_ctx.shape[2] == 4
+    occ = cache.occupancy()
+    assert occ["sequences"] == 1 and occ["used_pages"] == 0

@@ -220,6 +220,47 @@ def test_chunked_attention_equals_full():
     np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-3, atol=2e-4)
 
 
+def test_decoder_graph_builder_matches_forward():
+    """The plan-compiler lowering (`models/transformer_graph.py`) is pinned
+    to the model-level oracle: compiling the prefill graph on the reference
+    backend reproduces ``lm.forward`` exactly, the cache spec mirrors the
+    config, and unsupported families refuse loudly instead of mis-lowering."""
+    from repro.core.graph import compile_plan
+    from repro.models.transformer_graph import (
+        build_decoder_graph,
+        decoder_cache_spec,
+    )
+
+    cfg = smoke_config("qwen2.5-3b")
+    params = lm.init_lm(KEY, cfg)
+    g = build_decoder_graph(params, cfg, phase="prefill")
+    b, s = 2, 10
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s)).astype(jnp.int32)
+    outs = compile_plan(g, backend="reference")(
+        g.params, toks, pos, jnp.full((b,), s, jnp.int32)
+    )
+    want, _ = lm.forward(params, cfg, toks)
+    np.testing.assert_allclose(
+        np.asarray(outs[0][..., : cfg.vocab]), np.asarray(want),
+        rtol=1e-5, atol=1e-5,
+    )
+    # logits + per-layer (k, v) streams for the paged cache
+    assert len(outs) == 1 + 2 * cfg.n_layers
+    spec = decoder_cache_spec(cfg)
+    assert spec == {
+        "n_layers": cfg.n_layers,
+        "n_kv_heads": cfg.n_kv_heads,
+        "head_dim": cfg.head_dim,
+    }
+    # non-GQA families must refuse (never silently mis-lower)
+    for bad in ("deepseek-v2-lite-16b", "mamba2-1.3b", "qwen3-14b"):
+        bad_cfg = smoke_config(bad)
+        bad_model = get_model(bad_cfg)
+        with pytest.raises(NotImplementedError):
+            build_decoder_graph(bad_model.init(KEY), bad_cfg)
+
+
 def test_long_context_skip_rules():
     cells = {a: shape_cells(a) for a in ARCH_IDS}
     assert cells["mamba2-1.3b"]["long_500k"] == "run"
